@@ -1,0 +1,112 @@
+"""Shared harness for the paper-reproduction benchmarks.
+
+Synthetic stand-ins for MNIST / CIFAR (offline container): class-structured
+Gaussian-blob images of identical shapes.  Every benchmark returns rows of
+dicts and writes a CSV under benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import csv
+import dataclasses
+import os
+from typing import Dict, List
+
+from repro.configs import CNN_CONFIGS
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedDataset
+from repro.data.synth import class_images
+from repro.fl.server import run_federated
+from repro.models.registry import make_bundle
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def mnist_like(n_per_class=60, seed=0, noise=0.2):
+    """28x28x1, 10 classes — the paper's MNIST stand-in.
+
+    Class templates are pinned (template_seed=0) so any (seed, noise) split
+    samples the same class-conditional distribution — train/test match.
+    """
+    return class_images(n_per_class, n_classes=10, shape=(28, 28, 1),
+                        seed=seed, noise=noise, template_seed=0)
+
+
+def cifar_like(n_per_class=60, seed=0, noise=0.25):
+    """32x32x3, 10 classes — the paper's CIFAR-10 stand-in."""
+    return class_images(n_per_class, n_classes=10, shape=(32, 32, 3),
+                        seed=seed, noise=noise, template_seed=7)
+
+
+def permuted_union_test(xt, yt, parts):
+    """Test set for the user-specific (permuted) partition: the union of the
+    per-client permutations applied to the held-out images.  Evaluating the
+    global model on UN-permuted data would probe a distribution no client
+    generates (paper Fig. 5c measures accuracy on the federation's task)."""
+    import numpy as np
+    xs, ys = [], []
+    for p in parts:
+        perm = p["perm"]
+        xf = xt.reshape(len(xt), -1)[:, perm].reshape(xt.shape)
+        xs.append(xf)
+        ys.append(yt)
+    return {"x": np.concatenate(xs), "y": np.concatenate(ys)}
+
+
+def bench_cnn(kind: str, quick: bool):
+    """Paper CNN, width-reduced in quick mode to keep CPU time sane."""
+    cfg = CNN_CONFIGS[f"cnn_{kind}"]
+    if quick:
+        cfg = dataclasses.replace(
+            cfg, conv_channels=tuple(c // 4 for c in cfg.conv_channels),
+            fc_units=tuple(u // 8 for u in cfg.fc_units), dropout=0.0)
+    else:
+        cfg = dataclasses.replace(cfg, dropout=0.0)
+    return make_bundle(cfg)
+
+
+def run_fl(bundle, data: FederatedDataset, fl: FLConfig, rounds: int,
+           seed=0, eval_every=1):
+    return run_federated(bundle, fl, data, rounds=rounds, seed=seed,
+                         eval_every=eval_every)
+
+
+def rounds_to_acc(history: List[Dict], target: float) -> int:
+    for h in history:
+        if h.get("acc", -1) >= target:
+            return h["round"]
+    return -1
+
+
+def best_acc(history: List[Dict]) -> float:
+    return max(h.get("acc", 0.0) for h in history)
+
+
+def _all_cols(rows: List[Dict]) -> List[str]:
+    cols: List[str] = []
+    for r in rows:
+        for k in r:
+            if k not in cols:
+                cols.append(k)
+    return cols
+
+
+def write_csv(name: str, rows: List[Dict]) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, name)
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=_all_cols(rows), restval="")
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def print_table(title: str, rows: List[Dict]) -> None:
+    print(f"\n== {title} ==")
+    if not rows:
+        print("(no rows)")
+        return
+    cols = _all_cols(rows)
+    print(" | ".join(f"{c:>18s}" for c in cols))
+    for r in rows:
+        print(" | ".join(f"{str(r.get(c, '')):>18s}" for c in cols))

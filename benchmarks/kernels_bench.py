@@ -1,0 +1,145 @@
+"""Kernel microbenchmarks + the paper's "little extra computation" claim.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-clock numbers come from the jnp reference path; the Pallas path is
+checked for agreement at each benched shape.  On TPU the same harness
+times the compiled kernels (impl='pallas').
+
+Second table: per-local-step cost of fedavg vs fedmmd vs fedfusion on the
+paper's CNN — the paper argues the extra mechanisms add little compute
+relative to a communication round.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core.local import make_local_trainer
+from repro.kernels import ops
+from repro.models.registry import make_bundle
+
+from benchmarks.common import bench_cnn, print_table, write_csv
+
+WIDTHS = (1.0, 2.0, 4.0, 8.0, 16.0)
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def bench_mmd(quick):
+    shapes = [(64, 128), (128, 512)] if quick else [
+        (64, 128), (128, 512), (256, 1024), (512, 2048)]
+    rows = []
+    f = jax.jit(lambda a, b: ops.mk_mmd2(a, b, WIDTHS, impl="jnp"))
+    for n, d in shapes:
+        kx, ky = jax.random.split(jax.random.PRNGKey(n))
+        x = jax.random.normal(kx, (n, d))
+        y = jax.random.normal(ky, (n, d))
+        us = _time(f, x, y)
+        # interpret-mode agreement at this shape
+        err = abs(float(ops.mk_mmd2(x, y, WIDTHS, impl="pallas_interpret")
+                        - f(x, y)))
+        flops = 3 * (2 * n * n * d)  # three gram matrices
+        rows.append({"kernel": "mk_mmd2", "shape": f"{n}x{d}",
+                     "us_per_call": round(us, 1),
+                     "gflops_s": round(flops / us / 1e3, 2),
+                     "pallas_abs_err": f"{err:.2e}"})
+    return rows
+
+
+def bench_fusion(quick):
+    shapes = [(1024, 64), (4096, 256)] if quick else [
+        (1024, 64), (4096, 256), (16384, 512), (8192, 1024)]
+    rows = []
+    f = jax.jit(lambda a, b, w: ops.fused_fusion_conv(a, b, w, impl="jnp"))
+    for t, c in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(t), 3)
+        fg = jax.random.normal(ks[0], (t, c))
+        fl = jax.random.normal(ks[1], (t, c))
+        w = jax.random.normal(ks[2], (2 * c, c)) / np.sqrt(2 * c)
+        us = _time(f, fg, fl, w)
+        from repro.kernels.fusion_conv import fusion_conv
+        err = float(jnp.abs(fusion_conv(fg, fl, w, interpret=True)
+                            - f(fg, fl, w)).max())
+        flops = 2 * t * 2 * c * c
+        rows.append({"kernel": "fusion_conv", "shape": f"{t}x{c}",
+                     "us_per_call": round(us, 1),
+                     "gflops_s": round(flops / us / 1e3, 2),
+                     "pallas_abs_err": f"{err:.2e}"})
+    return rows
+
+
+def bench_decode(quick):
+    shapes = [(4, 2048, 8, 2, 64)] if quick else [
+        (4, 2048, 8, 2, 64), (8, 8192, 8, 1, 64), (16, 4096, 16, 4, 128)]
+    rows = []
+    f = jax.jit(lambda q, k, v: ops.gqa_flash_decode(q, k, v, impl="jnp"))
+    for B, L, H, KV, hd in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(L), 3)
+        q = jax.random.normal(ks[0], (B, 1, H, hd))
+        k = jax.random.normal(ks[1], (B, L, KV, hd))
+        v = jax.random.normal(ks[2], (B, L, KV, hd))
+        us = _time(f, q, k, v)
+        bytes_ = 2 * B * L * KV * hd * 4
+        rows.append({"kernel": "flash_decode",
+                     "shape": f"B{B}_L{L}_H{H}_KV{KV}",
+                     "us_per_call": round(us, 1),
+                     "gbytes_s": round(bytes_ / us / 1e3, 2),
+                     "pallas_abs_err": "tested_in_pytest"})
+    return rows
+
+
+def bench_two_stream_overhead(quick):
+    """Wall-clock per local step: the paper's compute-overhead claim."""
+    bundle = bench_cnn("mnist", quick=True)
+    rows = []
+    key = jax.random.PRNGKey(0)
+    batch = {"x": jax.random.normal(key, (8, 32, 28, 28, 1)),
+             "y": jax.random.randint(key, (8, 32), 0, 10)}
+    for algo, op in (("fedavg", "multi"), ("fedmmd", "multi"),
+                     ("fedl2", "multi"), ("fedfusion", "conv"),
+                     ("fedfusion", "multi")):
+        fl = FLConfig(algorithm=algo, fusion_op=op, local_steps=8, lr=0.05)
+        from repro.core.rounds import init_global_state
+        state = init_global_state(bundle, fl, jax.random.PRNGKey(0))
+        trainer = jax.jit(make_local_trainer(bundle, fl))
+        args = (state["model"], state.get("fusion"), batch, jnp.float32(0.05))
+        trainer(*args)  # compile
+        t0 = time.perf_counter()
+        reps = 3
+        for _ in range(reps):
+            out = trainer(*args)
+            jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / reps / 8 * 1e6
+        rows.append({"kernel": f"local_step[{algo}"
+                               + (f"+{op}]" if algo == "fedfusion" else "]"),
+                     "shape": "B32_mnist_cnn", "us_per_call": round(us, 1),
+                     "gflops_s": "", "pallas_abs_err": ""})
+    base = rows[0]["us_per_call"]
+    for r in rows:
+        r["overhead_vs_fedavg"] = f"{(r['us_per_call'] / base - 1) * 100:.0f}%"
+    return rows
+
+
+def run(quick: bool = True):
+    rows = (bench_mmd(quick) + bench_fusion(quick) + bench_decode(quick)
+            + bench_two_stream_overhead(quick))
+    write_csv("kernels_bench.csv", rows)
+    print_table("Kernel microbenchmarks (CPU jnp path; Pallas checked)", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

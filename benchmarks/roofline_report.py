@@ -1,0 +1,62 @@
+"""Collate dry-run artifacts into the §Roofline table (EXPERIMENTS.md).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by repro.launch.dryrun)
+and prints/writes the per-(arch x shape x mesh) three-term roofline table:
+compute / memory / collective seconds, dominant bottleneck, MODEL_FLOPS
+ratio, per-chip bytes.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import ART_DIR, print_table, write_csv
+
+DRY_DIR = os.path.join(ART_DIR, "dryrun")
+
+
+def load_records():
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRY_DIR, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = True):
+    del quick
+    rows = []
+    for r in load_records():
+        row = {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+               "variant": r.get("tag", "baseline"),
+               "status": r["status"]}
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            row.update({
+                "t_compute_ms": round(rl["t_compute"] * 1e3, 2),
+                "t_memory_ms": round(rl["t_memory"] * 1e3, 2),
+                "t_collective_ms": round(rl["t_collective"] * 1e3, 2),
+                "bottleneck": rl["bottleneck"],
+                "useful_ratio": round(rl["useful_ratio"], 3),
+                "mfu_bound": round(rl["mfu_bound"], 3),
+                "GB_per_chip": round(r["bytes_per_chip"] / 1e9, 2),
+                "fits_16GB": r["fits_16gb_hbm"],
+            })
+        elif r["status"] == "skip":
+            row["bottleneck"] = f"SKIP: {r['reason'][:40]}"
+        else:
+            row["bottleneck"] = f"ERROR: {r.get('error', '?')[:40]}"
+        rows.append(row)
+    if rows:
+        write_csv("roofline_report.csv", rows)
+    print_table("Roofline (from dry-run artifacts)", rows)
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skip")
+    err = len(rows) - ok - skip
+    print(f"\n{ok} compiled, {skip} skipped (documented), {err} errors")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

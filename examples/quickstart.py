@@ -1,0 +1,53 @@
+"""Quickstart: federated training with the paper's mechanisms in ~40 lines.
+
+Trains the paper's MNIST CNN (width-reduced for CPU) on a synthetic
+non-IID split with FedAvg, FedMMD and FedFusion, and prints the
+communication-round savings — the paper's headline metric.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+from repro.configs import CNN_CONFIGS
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedDataset
+from repro.data.partition import artificial_noniid_partition
+from repro.data.synth import class_images
+from repro.fl.server import run_federated
+from repro.models.registry import make_bundle
+
+ROUNDS, TARGET = 15, 0.5
+
+# 1. Model: the paper's CNN (§4.1.1), narrowed for CPU speed.
+cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"],
+                          conv_channels=(8, 16), fc_units=(64,), dropout=0.0)
+bundle = make_bundle(cfg)
+
+# 2. Data: synthetic MNIST-like images, artificial non-IID partition
+#    (each client holds ~2 classes — the paper's hardest split).
+x, y = class_images(40, n_classes=10, shape=(28, 28, 1), seed=0, noise=0.2,
+                    template_seed=0)
+xt, yt = class_images(10, n_classes=10, shape=(28, 28, 1), seed=1, noise=0.2,
+                      template_seed=0)
+clients = artificial_noniid_partition(x, y, 8, shards_per_client=2)
+data = FederatedDataset(clients, {"x": xt, "y": yt})
+
+# 3. Train each algorithm and compare rounds-to-target.
+results = {}
+for algo, op in [("fedavg", "multi"), ("fedmmd", "multi"),
+                 ("fedfusion", "conv")]:
+    fl = FLConfig(algorithm=algo, fusion_op=op, clients_per_round=4,
+                  local_steps=6, local_batch=16, lr=0.1, mmd_lambda=0.1)
+    res = run_federated(bundle, fl, data, rounds=ROUNDS, verbose=False)
+    hist = res.comm.history
+    to_target = next((h["round"] for h in hist if h.get("acc", 0) >= TARGET),
+                     -1)
+    results[algo] = (to_target, hist[-1]["acc"])
+    print(f"{algo:10s} rounds_to_{TARGET:.0%}: {to_target:3d}   "
+          f"final_acc: {hist[-1]['acc']:.3f}   "
+          f"MB_uploaded: {res.comm.bytes_up / 1e6:.1f}")
+
+base = results["fedavg"][0]
+for algo, (rt, _) in results.items():
+    if algo != "fedavg" and rt > 0 and base > 0:
+        print(f"{algo}: {100 * (1 - rt / base):.0f}% fewer rounds than FedAvg")

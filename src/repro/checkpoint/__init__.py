@@ -1,0 +1,2 @@
+from repro.checkpoint.io import (load_tree, restore_server_state,  # noqa: F401
+                                 save_server_state, save_tree)

@@ -1,0 +1,62 @@
+"""Checkpointing: pytree <-> .npz with path-encoded keys.
+
+Round-resumable server state = {global_state, round index, rng state}.
+No external deps (no orbax/msgpack): keys are '/'-joined pytree paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    return str(p)
+
+
+def save_tree(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_tree(path: str, like) -> Any:
+    """Restore into the structure of ``like`` (treedef donor)."""
+    data = np.load(path)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    paths = [
+        "/".join(_path_str(p) for p in path_)
+        for path_, _ in jax.tree_util.tree_flatten_with_path(like)[0]
+    ]
+    leaves = [data[k] for k in paths]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_server_state(dirpath: str, global_state, round_idx: int,
+                      extra: Dict | None = None) -> None:
+    os.makedirs(dirpath, exist_ok=True)
+    save_tree(os.path.join(dirpath, "state.npz"), global_state)
+    meta = {"round": round_idx, **(extra or {})}
+    with open(os.path.join(dirpath, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def restore_server_state(dirpath: str, like) -> Tuple[Any, int]:
+    state = load_tree(os.path.join(dirpath, "state.npz"), like)
+    with open(os.path.join(dirpath, "meta.json")) as f:
+        meta = json.load(f)
+    return state, meta["round"]

@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` resolves through :func:`get_config`."""
+from __future__ import annotations
+
+from repro.configs.base import (ArchConfig, CNNConfig, FLConfig, InputShape,
+                                INPUT_SHAPES)
+from repro.configs.arctic_480b import CONFIG as ARCTIC_480B
+from repro.configs.granite_moe_1b import CONFIG as GRANITE_MOE_1B
+from repro.configs.smollm_135m import CONFIG as SMOLLM_135M
+from repro.configs.qwen2_vl_7b import CONFIG as QWEN2_VL_7B
+from repro.configs.h2o_danube3_4b import CONFIG as H2O_DANUBE3_4B
+from repro.configs.recurrentgemma_9b import CONFIG as RECURRENTGEMMA_9B
+from repro.configs.gemma3_1b import CONFIG as GEMMA3_1B
+from repro.configs.whisper_large_v3 import CONFIG as WHISPER_LARGE_V3
+from repro.configs.mamba2_130m import CONFIG as MAMBA2_130M
+from repro.configs.stablelm_3b import CONFIG as STABLELM_3B
+from repro.configs.cnn_paper import CNN_MNIST, CNN_CIFAR
+
+ARCH_CONFIGS = {
+    c.name: c
+    for c in (
+        ARCTIC_480B,
+        GRANITE_MOE_1B,
+        SMOLLM_135M,
+        QWEN2_VL_7B,
+        H2O_DANUBE3_4B,
+        RECURRENTGEMMA_9B,
+        GEMMA3_1B,
+        WHISPER_LARGE_V3,
+        MAMBA2_130M,
+        STABLELM_3B,
+    )
+}
+
+CNN_CONFIGS = {c.name: c for c in (CNN_MNIST, CNN_CIFAR)}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCH_CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_CONFIGS)}")
+    return ARCH_CONFIGS[name]
+
+
+def get_cnn_config(name: str) -> CNNConfig:
+    return CNN_CONFIGS[name]
+
+
+__all__ = [
+    "ArchConfig", "CNNConfig", "FLConfig", "InputShape", "INPUT_SHAPES",
+    "ARCH_CONFIGS", "CNN_CONFIGS", "get_config", "get_cnn_config",
+]

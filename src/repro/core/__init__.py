@@ -1,0 +1,14 @@
+"""The paper's contribution as a composable JAX module.
+
+Public API:
+    make_round_fn(bundle, fl_config, mode)  -> jit-able federated round
+    init_global_state(bundle, fl_config, key)
+    fusion_init / fusion_apply / fusion_aggregate
+    mmd_loss
+"""
+from repro.core.fusion import (FUSION_OPS, fusion_aggregate, fusion_apply,
+                               fusion_init)  # noqa: F401
+from repro.core.local import make_local_loss, make_local_trainer  # noqa: F401
+from repro.core.losses import accuracy, cross_entropy  # noqa: F401
+from repro.core.mmd import mmd_loss  # noqa: F401
+from repro.core.rounds import init_global_state, make_round_fn  # noqa: F401

@@ -1,0 +1,27 @@
+"""Server-side aggregation (paper Alg. 1 / Alg. 2 line 7)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def normalize_weights(n_examples):
+    n = jnp.asarray(n_examples, jnp.float32)
+    return n / jnp.sum(n)
+
+
+def weighted_mean(stacked_tree, weights):
+    """stacked_tree: pytree with leading client axis; weights [n_clients]."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(weights.astype(x.dtype), x, axes=1),
+        stacked_tree)
+
+
+def running_update(acc_tree, tree, weight):
+    """acc += weight * tree   (client_sequential accumulation)."""
+    return jax.tree.map(lambda a, x: a + weight.astype(x.dtype) * x,
+                        acc_tree, tree)
+
+
+def zeros_like_tree(tree):
+    return jax.tree.map(jnp.zeros_like, tree)

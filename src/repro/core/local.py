@@ -1,0 +1,132 @@
+"""On-device (client-side) training — the paper's additional mechanisms.
+
+A client receives the global model, builds its *trainable* state
+(local model copy + fusion module for FedFusion), and runs
+``fl.local_steps`` SGD steps with the algorithm's two-stream objective:
+
+  fedavg    L = L_cls(theta_L)
+  fedmmd    L = L_cls(theta_L) + lam * MMD^2(theta_G(X), theta_L(X))
+  fedl2     L = L_cls(theta_L) + lam2 * ||Theta_L - Theta_G||^2
+  fedfusion L = L_cls(C_L(F(E_l(X), E_g(X))))   with E_g frozen
+
+The frozen global stream is closed over and NEVER updated during local
+training (paper Fig. 1: "the global model is fixed while the local model is
+trained through back propagation").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.fusion import fusion_apply
+from repro.core.losses import cross_entropy, l2_tree_distance
+from repro.core.mmd import mmd_loss
+from repro.models.registry import ModelBundle
+from repro.optim import make_optimizer
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def make_local_loss(bundle: ModelBundle, fl: FLConfig, *, impl="auto"):
+    def loss_fn(trainable, global_model, batch, cached_feats_g=None):
+        """``cached_feats_g``: precomputed frozen-stream features for this
+        batch (paper §3.3 — E_g's maps can be recorded once per round);
+        None recomputes them (the E=1 / uncached path)."""
+        labels = bundle.labels(batch)
+        local = trainable["model"]
+        if fl.algorithm == "fedfusion":
+            feats_l, aux = bundle.extract(local, batch)
+            if cached_feats_g is None:
+                cached_feats_g, _ = bundle.extract(
+                    jax.lax.stop_gradient(global_model), batch)
+            feats_g = jax.lax.stop_gradient(cached_feats_g)
+            fused = fusion_apply(fl.fusion_op, trainable["fusion"],
+                                 feats_g, feats_l, impl=impl)
+            logits = bundle.head(local, fused)
+            loss = cross_entropy(logits, labels) + AUX_WEIGHT * aux
+            return loss, {"cls": loss}
+        out = bundle.apply(local, batch)
+        cls = cross_entropy(out["logits"], labels) + AUX_WEIGHT * out["aux"]
+        if fl.algorithm == "fedavg":
+            return cls, {"cls": cls}
+        if fl.algorithm == "fedmmd":
+            if cached_feats_g is None:
+                cached_feats_g, _ = bundle.extract(
+                    jax.lax.stop_gradient(global_model), batch)
+            reg = mmd_loss(bundle.pool(out["features"]),
+                           jax.lax.stop_gradient(
+                               bundle.pool(cached_feats_g)),
+                           fl.mmd_widths, fl.mmd_lambda, impl=impl)
+            return cls + reg, {"cls": cls, "mmd": reg}
+        if fl.algorithm == "fedl2":
+            reg = fl.l2_lambda * l2_tree_distance(local, global_model)
+            return cls + reg, {"cls": cls, "l2": reg}
+        raise ValueError(fl.algorithm)
+
+    return loss_fn
+
+
+def make_local_trainer(bundle: ModelBundle, fl: FLConfig, *, impl="auto"):
+    """Returns local_train(global_model, global_fusion, batches, lr) ->
+    (trainable, mean_loss).
+
+    ``batches``: pytree whose leaves have leading dim ``fl.local_steps``
+    (one local SGD step per slice).
+    """
+    opt_init, opt_update = make_optimizer(fl.optimizer, fl.momentum)
+    loss_fn = make_local_loss(bundle, fl, impl=impl)
+
+    two_stream = fl.algorithm in ("fedfusion", "fedmmd")
+    cache = (fl.cache_global_features and two_stream
+             and fl.local_epochs > 1)
+
+    def local_train(global_model, global_fusion, batches, lr):
+        trainable: Dict[str, Any] = {"model": global_model}
+        if fl.algorithm == "fedfusion":
+            trainable["fusion"] = global_fusion
+        state = opt_init(trainable)
+
+        cached = None
+        if cache:
+            # paper §3.3: the frozen E_g features for the round's batches
+            # are computed ONCE and reused across the E local epochs —
+            # saves (E-1) global-stream forwards per client per round.
+            def extract_one(_, batch):
+                f, _aux = bundle.extract(
+                    jax.lax.stop_gradient(global_model), batch)
+                return None, jax.lax.stop_gradient(f)
+
+            _, cached = jax.lax.scan(extract_one, None, batches)
+
+        def step_cached(carry, xs):
+            batch, feats_g = xs
+            tr, st = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                tr, global_model, batch, feats_g)
+            tr, st = opt_update(tr, grads, st, lr)
+            return (tr, st), loss
+
+        def step_plain(carry, batch):
+            tr, st = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                tr, global_model, batch)
+            tr, st = opt_update(tr, grads, st, lr)
+            return (tr, st), loss
+
+        def epoch(carry, _):
+            if cache:
+                return jax.lax.scan(step_cached, carry, (batches, cached))
+            return jax.lax.scan(step_plain, carry, batches)
+
+        if fl.local_epochs > 1:
+            (trainable, _), losses = jax.lax.scan(
+                epoch, (trainable, state), None, length=fl.local_epochs)
+        else:
+            (trainable, _), losses = jax.lax.scan(
+                step_plain, (trainable, state), batches)
+        return trainable, jnp.mean(losses)
+
+    return local_train

@@ -1,0 +1,109 @@
+"""One federated round as a single jit-able step function.
+
+Two execution modes map the round onto the device mesh (DESIGN.md §4):
+
+* ``client_parallel`` — vmap over the round's clients; the client axis of
+  the batch is sharded over the mesh's ``data`` (and ``pod``) axes, so each
+  data-group trains one client's replica and the final weighted average is
+  the only cross-group collective (exactly the communication FedAvg counts).
+
+* ``client_sequential`` — ``lax.scan`` over clients with a running weighted
+  parameter sum; a single (FSDP/expert-sharded) model instance lives at a
+  time, and the batch *within* a client is sharded over ``data``.
+
+Both return (new_global_state, metrics).  ``global_state`` is
+``{'model': params, 'fusion': fusion_params_or_absent}``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FLConfig
+from repro.core.aggregate import (normalize_weights, running_update,
+                                  weighted_mean, zeros_like_tree)
+from repro.core.fusion import fusion_aggregate
+from repro.core.local import make_local_trainer
+from repro.models.registry import ModelBundle
+
+
+def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
+                  impl="auto"):
+    """Returns round_fn(global_state, client_batches, n_examples, lr).
+
+    ``client_batches``: pytree with leading dims [n_clients, local_steps, ...].
+    ``n_examples``: [n_clients] float (n_t weighting).
+    """
+    assert mode in ("client_parallel", "client_sequential"), mode
+    trainer = make_local_trainer(bundle, fl, impl=impl)
+    is_fusion = fl.algorithm == "fedfusion"
+
+    def _finalize(global_state, stacked_models, stacked_fusions, weights,
+                  losses):
+        new_model = weighted_mean(stacked_models, weights)
+        new_state: Dict[str, Any] = {"model": new_model}
+        if is_fusion:
+            new_state["fusion"] = fusion_aggregate(
+                fl.fusion_op, global_state["fusion"], stacked_fusions,
+                weights, fl.ema_beta)
+        return new_state, {"local_loss": jnp.mean(losses)}
+
+    if mode == "client_parallel":
+        def round_fn(global_state, client_batches, n_examples, lr):
+            weights = normalize_weights(n_examples)
+            gm = global_state["model"]
+            gf = global_state.get("fusion")
+
+            def train_one(batches):
+                return trainer(gm, gf, batches, lr)
+
+            trainables, losses = jax.vmap(train_one)(client_batches)
+            return _finalize(global_state, trainables["model"],
+                             trainables.get("fusion"), weights, losses)
+
+        return round_fn
+
+    def round_fn(global_state, client_batches, n_examples, lr):
+        weights = normalize_weights(n_examples)
+        gm = global_state["model"]
+        gf = global_state.get("fusion")
+        acc0 = {"model": zeros_like_tree(gm)}
+        if is_fusion:
+            acc0["fusion"] = zeros_like_tree(gf)
+
+        def body(acc, xs):
+            batches, w = xs
+            trainable, loss = trainer(gm, gf, batches, lr)
+            acc = dict(acc)
+            acc["model"] = running_update(acc["model"], trainable["model"], w)
+            if is_fusion:
+                # accumulate the weighted client gates; EMA applied after
+                acc["fusion"] = running_update(acc["fusion"],
+                                               trainable["fusion"], w)
+            return acc, loss
+
+        acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
+        new_state: Dict[str, Any] = {"model": acc["model"]}
+        if is_fusion:
+            if fl.fusion_op == "conv":
+                new_state["fusion"] = acc["fusion"]
+            else:
+                new_state["fusion"] = jax.tree.map(
+                    lambda old, new: fl.ema_beta * old + (1 - fl.ema_beta) * new,
+                    gf, acc["fusion"])
+        return new_state, {"local_loss": jnp.mean(losses)}
+
+    return round_fn
+
+
+def init_global_state(bundle: ModelBundle, fl: FLConfig, key):
+    """Server line 1: initialise the global model (+ fusion module)."""
+    from repro.core.fusion import fusion_init
+    k1, k2 = jax.random.split(key)
+    state: Dict[str, Any] = {"model": bundle.init(k1)}
+    if fl.algorithm == "fedfusion":
+        state["fusion"] = fusion_init(fl.fusion_op, bundle.feature_channels,
+                                      k2)
+    return state

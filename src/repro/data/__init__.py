@@ -1,0 +1,5 @@
+from repro.data.federated import FederatedDataset  # noqa: F401
+from repro.data.partition import (artificial_noniid_partition,  # noqa: F401
+                                  class_split_partition, iid_partition,
+                                  permuted_partition, source_partition)
+from repro.data.synth import class_images, token_stream  # noqa: F401

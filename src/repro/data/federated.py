@@ -1,0 +1,67 @@
+"""Federated data loader: samples clients per round and builds the stacked
+round batch the round-fn consumes ([n_clients, local_steps, B, ...])."""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+class FederatedDataset:
+    """Holds per-client datasets + a held-out test set."""
+
+    def __init__(self, clients: List[Dict[str, np.ndarray]],
+                 test: Dict[str, np.ndarray], *, seed: int = 0):
+        self.clients = clients
+        self.test = test
+        self._rng = np.random.default_rng(seed)
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    def client_sizes(self) -> np.ndarray:
+        key = "x" if "x" in self.clients[0] else "tokens"
+        return np.array([len(c[key]) for c in self.clients], np.float32)
+
+    def sample_clients(self, n: int) -> np.ndarray:
+        n = min(n, self.n_clients)
+        return self._rng.choice(self.n_clients, size=n, replace=False)
+
+    def _draw(self, client: Dict[str, np.ndarray], n: int) -> Dict[str, np.ndarray]:
+        key = "x" if "x" in client else "tokens"
+        size = len(client[key])
+        idx = self._rng.choice(size, size=n, replace=size < n)
+        return {k: v[idx] for k, v in client.items() if k != "perm"}
+
+    def round_batch(self, client_ids, local_steps: int, batch: int):
+        """Returns (batches, n_examples):
+        batches: dict of arrays [n_clients, local_steps, batch, ...]
+        n_examples: [n_clients] (n_t for weighting).
+        """
+        per_client = []
+        for cid in client_ids:
+            steps = [self._draw(self.clients[cid], batch)
+                     for _ in range(local_steps)]
+            per_client.append({k: np.stack([s[k] for s in steps])
+                               for k in steps[0]})
+        stacked = {k: np.stack([pc[k] for pc in per_client])
+                   for k in per_client[0]}
+        sizes = self.client_sizes()[np.asarray(client_ids)]
+        return _to_batch(stacked), sizes
+
+    def test_batch(self, n: Optional[int] = None) -> Dict[str, np.ndarray]:
+        if n is None:
+            return _to_batch(dict(self.test))
+        key = "x" if "x" in self.test else "tokens"
+        idx = self._rng.choice(len(self.test[key]), size=n, replace=False)
+        return _to_batch({k: v[idx] for k, v in self.test.items()})
+
+
+def _to_batch(d: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Map raw arrays to model-batch keys (tokens -> tokens+labels)."""
+    if "tokens" in d:
+        toks = d.pop("tokens")
+        d["tokens"] = toks[..., :-1]
+        d["labels"] = toks[..., 1:]
+    return d

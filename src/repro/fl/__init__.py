@@ -1,0 +1,3 @@
+from repro.fl.comm import CommLog, tree_bytes  # noqa: F401
+from repro.fl.newclient import newclient_convergence  # noqa: F401
+from repro.fl.server import ServerResult, evaluate, run_federated  # noqa: F401

@@ -1,0 +1,45 @@
+"""Communication-cost accounting.
+
+The paper's metric is *communication rounds to reach an accuracy milestone*;
+we additionally account raw bytes (down = global model broadcast, up = local
+model + fusion module returns), since FedFusion's fusion module adds a small
+upload overhead that the round-count metric hides.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree)))
+
+
+@dataclass
+class CommLog:
+    rounds: int = 0
+    bytes_up: int = 0
+    bytes_down: int = 0
+    history: List[Dict] = field(default_factory=list)
+
+    def log_round(self, global_state, n_clients: int, metrics: Dict):
+        model_b = tree_bytes(global_state["model"])
+        fusion_b = tree_bytes(global_state.get("fusion", ()))
+        down = n_clients * model_b          # server -> clients: global model
+        up = n_clients * (model_b + fusion_b)  # clients -> server
+        self.rounds += 1
+        self.bytes_down += down
+        self.bytes_up += up
+        self.history.append({"round": self.rounds, "bytes_up": up,
+                             "bytes_down": down, **metrics})
+
+    def rounds_to(self, key: str, threshold: float) -> int:
+        """First round where history[key] >= threshold (-1 if never)."""
+        for h in self.history:
+            if h.get(key, -np.inf) >= threshold:
+                return h["round"]
+        return -1

@@ -1,0 +1,105 @@
+"""Federated server loop (paper Alg. 1 / Alg. 2) for CPU-scale experiments.
+
+The per-round step (local training on the sampled clients + aggregation) is
+a single jit'd function from ``repro.core.rounds``; this loop adds client
+sampling, the lr schedule, evaluation and communication accounting.  The
+pod-scale counterpart (pjit on the production mesh) lives in
+``repro.launch.train``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import accuracy, cross_entropy, init_global_state, make_round_fn
+from repro.core.fusion import fusion_apply
+from repro.data.federated import FederatedDataset
+from repro.fl.comm import CommLog
+from repro.models.registry import ModelBundle
+from repro.optim import exp_decay_per_round
+
+
+@dataclass
+class ServerResult:
+    global_state: Dict
+    comm: CommLog
+
+
+def evaluate(bundle: ModelBundle, fl: FLConfig, global_state, batch,
+             max_examples: int = 2048) -> Dict[str, float]:
+    """Test accuracy of the *global* model (paper's y-axis).
+
+    For FedFusion the deployed global model fuses its own features with
+    itself through the aggregated fusion module (E_g = E_l = global), which
+    reduces to the identity for multi/single gates and to W_g+W_l for conv.
+    """
+    key = "x" if "x" in batch else "tokens"
+    n = min(len(batch[key]), max_examples)
+    batch = {k: jnp.asarray(v[:n]) for k, v in batch.items()}
+    out = bundle.apply(global_state["model"], batch)
+    logits = out["logits"]
+    if fl.algorithm == "fedfusion":
+        fused = fusion_apply(fl.fusion_op, global_state["fusion"],
+                             out["features"], out["features"])
+        logits = bundle.head(global_state["model"], fused)
+    labels = bundle.labels(batch)
+    return {"acc": float(accuracy(logits, labels)),
+            "loss": float(cross_entropy(logits, labels))}
+
+
+def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
+                  *, rounds: int, seed: int = 0, mode: str = "client_parallel",
+                  eval_every: int = 1, eval_examples: int = 2048,
+                  verbose: bool = False,
+                  checkpoint_dir: Optional[str] = None,
+                  checkpoint_every: int = 10,
+                  callback: Optional[Callable] = None) -> ServerResult:
+    """Server loop.  With ``checkpoint_dir``, the server state is saved
+    every ``checkpoint_every`` rounds and training RESUMES from the last
+    checkpoint if one exists (round-resumable, paper Alg. 1 line 1 is
+    only executed on a cold start)."""
+    import os
+    from repro.checkpoint.io import restore_server_state, save_server_state
+
+    key = jax.random.PRNGKey(seed)
+    global_state = init_global_state(bundle, fl, key)
+    start_round = 0
+    if checkpoint_dir and os.path.exists(
+            os.path.join(checkpoint_dir, "meta.json")):
+        global_state, start_round = restore_server_state(checkpoint_dir,
+                                                         global_state)
+        global_state = jax.tree.map(jnp.asarray, global_state)
+    round_fn = jax.jit(make_round_fn(bundle, fl, mode))
+    lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)
+    comm = CommLog()
+    test = data.test_batch()
+
+    for r in range(start_round, rounds):
+        cids = data.sample_clients(fl.clients_per_round)
+        batches, sizes = data.round_batch(cids, fl.local_steps,
+                                          fl.local_batch)
+        batches = {k: jnp.asarray(v) for k, v in batches.items()}
+        global_state, metrics = round_fn(global_state, batches,
+                                         jnp.asarray(sizes), lr_at(r))
+        metrics = {k: float(v) for k, v in metrics.items()}
+        if (r + 1) % eval_every == 0:
+            metrics.update(evaluate(bundle, fl, global_state, test,
+                                    eval_examples))
+        comm.log_round(global_state, len(cids), metrics)
+        if verbose:
+            print(f"round {r+1:4d} " +
+                  " ".join(f"{k}={v:.4f}" for k, v in metrics.items()))
+        if callback is not None:
+            callback(r, global_state, metrics)
+        if checkpoint_dir and (r + 1) % checkpoint_every == 0:
+            save_server_state(checkpoint_dir, global_state, r + 1,
+                              extra={"algorithm": fl.algorithm})
+    if checkpoint_dir:
+        save_server_state(checkpoint_dir, global_state, rounds,
+                          extra={"algorithm": fl.algorithm})
+    return ServerResult(global_state=global_state, comm=comm)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: fused multi-width RBF Gram-sum for MK-MMD.
+
+Computes  S(x, y) = sum_{i<n, j<m} mean_w exp(-||x_i - y_j||^2 / (2 w sigma))
+without materialising the n x m Gram matrix in HBM.  Squared distances are
+formed per VMEM tile via the ||x||^2 + ||y||^2 - 2 x.y identity, so the
+inner product runs on the MXU; all RBF widths are applied to the distance
+tile in-register and accumulated.  HBM traffic is O((n+m) d), arithmetic
+intensity ~ O(tile).
+
+MMD^2 then assembles three of these sums (xx, yy, xy) on the host side of
+the kernel (see ops.mk_mmd2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _gram_sum_kernel(x_ref, y_ref, sigma_ref, out_ref, *, widths, n, m,
+                     tile_i, tile_j):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # [ti, d]
+    y = y_ref[...].astype(jnp.float32)            # [tj, d]
+    sigma = sigma_ref[0]
+
+    x2 = jnp.sum(x * x, axis=-1)                  # [ti]
+    y2 = jnp.sum(y * y, axis=-1)                  # [tj]
+    xy = jax.lax.dot_general(x, y, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [ti, tj]
+    d2 = x2[:, None] + y2[None, :] - 2.0 * xy
+    d2 = jnp.maximum(d2, 0.0)
+
+    # validity mask for the padded tail rows/cols
+    row = i * tile_i + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 0)
+    col = j * tile_j + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    valid = (row < n) & (col < m)
+
+    acc = jnp.zeros_like(d2)
+    for w in widths:
+        acc = acc + jnp.exp(-d2 / (2.0 * w * sigma))
+    acc = jnp.where(valid, acc, 0.0)
+    out_ref[...] += jnp.sum(acc) / len(widths)
+
+
+def gram_sum(x, y, sigma, widths, *, tile_i=TILE, tile_j=TILE,
+             interpret=True):
+    """sum_{ij} mean_w RBF_w(||x_i - y_j||^2); x [n,d], y [m,d]."""
+    n, d = x.shape
+    m = y.shape[0]
+    ti = min(tile_i, max(8, n))
+    tj = min(tile_j, max(8, m))
+    pn = (-n) % ti
+    pm = (-m) % tj
+    if pn:
+        x = jnp.pad(x, ((0, pn), (0, 0)))
+    if pm:
+        y = jnp.pad(y, ((0, pm), (0, 0)))
+    grid = (x.shape[0] // ti, y.shape[0] // tj)
+    sigma = jnp.asarray(sigma, jnp.float32).reshape(1)
+
+    kernel = functools.partial(_gram_sum_kernel, widths=tuple(widths), n=n,
+                               m=m, tile_i=ti, tile_j=tj)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tj, d), lambda i, j: (j, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=interpret,
+    )(x, y, sigma)
+    return out[0]

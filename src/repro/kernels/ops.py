@@ -1,0 +1,69 @@
+"""jit'd public wrappers for the Pallas kernels, with implementation dispatch.
+
+On CPU (this container) the default implementation is the pure-jnp oracle —
+Pallas ``interpret=True`` executes the kernel body in Python and is used by
+the correctness tests, not the hot path.  On TPU the Pallas kernels compile
+natively (``interpret=False``).
+
+Select with ``impl``: 'auto' | 'jnp' | 'pallas' | 'pallas_interpret'.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_attn import flash_decode
+from repro.kernels.fusion_conv import fusion_conv
+from repro.kernels.mk_mmd import gram_sum
+
+
+def _on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "jnp"
+    return impl
+
+
+def mk_mmd2(x, y, widths, *, impl="auto"):
+    """Multi-kernel squared MMD between feature batches x [n,d], y [m,d]."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.mk_mmd2_ref(x, y, widths)
+    interpret = impl == "pallas_interpret"
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    n, m = x.shape[0], y.shape[0]
+    # median-heuristic sigma from the cross sq-distances (O(nm d) but cheap
+    # relative to the Gram sums; stop-grad like the oracle).
+    x2 = jnp.sum(x * x, -1)
+    y2 = jnp.sum(y * y, -1)
+    dxy = x2[:, None] + y2[None, :] - 2 * (x @ y.T)
+    sigma = jax.lax.stop_gradient(jnp.mean(dxy)) + 1e-8
+    sxx = gram_sum(x, x, sigma, widths, interpret=interpret)
+    syy = gram_sum(y, y, sigma, widths, interpret=interpret)
+    sxy = gram_sum(x, y, sigma, widths, interpret=interpret)
+    return sxx / (n * n) + syy / (m * m) - 2.0 * sxy / (n * m)
+
+
+def fused_fusion_conv(f_g, f_l, w, *, impl="auto"):
+    """FedFusion conv operator: W . concat(f_g, f_l) along channels."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.fusion_conv_ref(f_g, f_l, w)
+    return fusion_conv(f_g, f_l, w, interpret=(impl == "pallas_interpret"))
+
+
+def gqa_flash_decode(q, k_cache, v_cache, valid_len=None, *, impl="auto"):
+    """One-token GQA decode attention against a KV cache."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        vl = k_cache.shape[1] if valid_len is None else valid_len
+        return ref.decode_attn_ref(q, k_cache, v_cache, vl)
+    return flash_decode(q, k_cache, v_cache, valid_len,
+                        interpret=(impl == "pallas_interpret"))

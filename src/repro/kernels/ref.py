@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the Pallas kernels must match them (tests sweep
+shapes/dtypes and assert_allclose against these).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mk_mmd2_ref(x, y, widths, *, median_heuristic=True):
+    """Multi-kernel (multi-width RBF) squared MMD — paper Eq. (2).
+
+    x [n,d], y [m,d] feature batches.  Biased V-statistic estimator:
+        MMD^2 = E[K(x,x)] + E[K(y,y)] - 2 E[K(x,y)]
+    with K = mean over RBF kernels exp(-||a-b||^2 / (2 w sigma)).
+    ``sigma`` is the (stop-grad) mean pairwise squared distance (median-
+    heuristic surrogate) so the widths are scale-free, matching MK-MMD
+    practice (Gretton et al. 2012).
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+
+    def sqdist(a, b):
+        a2 = jnp.sum(a * a, axis=-1)
+        b2 = jnp.sum(b * b, axis=-1)
+        return a2[:, None] + b2[None, :] - 2.0 * (a @ b.T)
+
+    dxx, dyy, dxy = sqdist(x, x), sqdist(y, y), sqdist(x, y)
+    if median_heuristic:
+        sigma = jax.lax.stop_gradient(jnp.mean(dxy)) + 1e-8
+    else:
+        sigma = 1.0
+
+    def kmean(d2):
+        k = 0.0
+        for w in widths:
+            k = k + jnp.exp(-d2 / (2.0 * w * sigma))
+        return jnp.mean(k) / len(widths)
+
+    return kmean(dxx) + kmean(dyy) - 2.0 * kmean(dxy)
+
+
+def fusion_conv_ref(f_g, f_l, w):
+    """1x1-conv fusion operator (paper Eq. 6).
+
+    f_g, f_l [..., C]; w [2C, C].  Equivalent to concat along the channel
+    axis followed by a 1x1 convolution (= matmul over channels).
+    """
+    C = f_g.shape[-1]
+    return f_g @ w[:C] + f_l @ w[C:]
+
+
+def decode_attn_ref(q, k_cache, v_cache, valid_len):
+    """GQA flash-decode oracle.
+
+    q [B,1,H,hd]; caches [B,L,KV,hd]; valid_len scalar int (positions
+    >= valid_len are masked).  Returns [B,1,H,hd].
+    """
+    B, _, H, hd = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, KV, rep, hd)
+    s = jnp.einsum("bgrd,blgd->bgrl", qh.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * hd ** -0.5
+    mask = jnp.arange(L) < valid_len
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrl,blgd->bgrd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)

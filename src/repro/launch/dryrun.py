@@ -1,0 +1,189 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on the
+production meshes and record memory/cost/roofline terms.
+
+This file — and ONLY this file — forces 512 placeholder host devices, which
+is why the env var is set before any other import.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+
+Results: one JSON per (arch, shape, mesh) under benchmarks/artifacts/dryrun/.
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCH_CONFIGS, INPUT_SHAPES  # noqa: E402
+from repro.configs.base import FLConfig               # noqa: E402
+from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.launch.specs import skip_reason            # noqa: E402
+from repro.launch.steps import build_step             # noqa: E402
+from repro.roofline import analyze                    # noqa: E402
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "artifacts", "dryrun")
+
+
+def default_fl() -> FLConfig:
+    # the paper's main technique, conv operator (most representative)
+    return FLConfig(algorithm="fedfusion", fusion_op="conv", local_steps=2)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            fl: FLConfig | None = None, save: bool = True,
+            save_hlo: bool = False, remat: str = "none",
+            serve_ep: bool = False, shard_capacity: bool = False,
+            moe_dispatch: str = "gather", tag: str = "") -> dict:
+    import dataclasses
+    cfg = dataclasses.replace(ARCH_CONFIGS[arch], remat=remat,
+                              serve_expert_parallel=serve_ep,
+                              moe_shard_capacity=shard_capacity,
+                              moe_dispatch=moe_dispatch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    reason = skip_reason(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if tag:
+        rec["tag"] = tag
+    if reason:
+        rec.update(status="skip", reason=reason)
+        return _save(rec) if save else rec
+
+    fl = fl or default_fl()
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fn, args, in_sh, out_sh = build_step(cfg, fl, shape, mesh)
+        with jax.set_mesh(mesh):   # sharding-constraint P specs resolve here
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        chips = mesh.size
+        roof = analyze(compiled, cfg, shape, mesh_name, chips, mesh,
+                       two_stream=fl.algorithm != "fedavg")
+        mem = compiled.memory_analysis()
+        rec.update(
+            status="ok",
+            t_lower_s=round(t_lower, 1),
+            t_compile_s=round(t_compile, 1),
+            memory={k: int(getattr(mem, k, 0)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")},
+            roofline=roof.to_dict(),
+        )
+        per_chip = (rec["memory"]["argument_size_in_bytes"]
+                    + rec["memory"]["temp_size_in_bytes"]) / chips
+        rec["bytes_per_chip"] = int(per_chip)
+        rec["fits_16gb_hbm"] = bool(per_chip < 16e9)
+        if save_hlo:
+            os.makedirs(ART_DIR, exist_ok=True)
+            hsuffix = f"__{tag}" if tag else ""
+            hpath = os.path.join(
+                ART_DIR,
+                f"{arch}__{shape_name}__{mesh_name}{hsuffix}.hlo.txt")
+            with open(hpath, "w") as f:
+                f.write(compiled.as_text())
+            rec["hlo_path"] = hpath
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a finding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return _save(rec) if save else rec
+
+
+def _save(rec: dict) -> dict:
+    os.makedirs(ART_DIR, exist_ok=True)
+    suffix = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = os.path.join(
+        ART_DIR, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCH_CONFIGS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--algorithm", default="fedfusion",
+                    choices=("fedavg", "fedmmd", "fedfusion", "fedl2"))
+    ap.add_argument("--fusion-op", default="conv",
+                    choices=("conv", "multi", "single"))
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="dump compiled HLO text next to the JSON record")
+    ap.add_argument("--remat", default="none",
+                    choices=("none", "attn", "layer"),
+                    help="activation-checkpoint policy (perf knob)")
+    ap.add_argument("--serve-ep", action="store_true",
+                    help="expert-parallel sharding for prefill/decode")
+    ap.add_argument("--moe-shard-capacity", action="store_true",
+                    help="shard MoE capacity dim over 'model' (perf knob)")
+    ap.add_argument("--moe-a2a", action="store_true",
+                    help="shard_map all-to-all expert dispatch (perf knob)")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the artifact filename (perf variants)")
+    args = ap.parse_args()
+    fl = FLConfig(algorithm=args.algorithm, fusion_op=args.fusion_op,
+                  local_steps=2)
+
+    if args.all:
+        pods = [False, True]
+        if args.single_pod_only:
+            pods = [False]
+        if args.multi_pod_only:
+            pods = [True]
+        for arch in ARCH_CONFIGS:
+            for shape in INPUT_SHAPES:
+                for mp in pods:
+                    rec = run_one(arch, shape, mp, fl,
+                                  save_hlo=args.save_hlo, remat=args.remat,
+                                  serve_ep=args.serve_ep,
+                                  shard_capacity=args.moe_shard_capacity,
+                                  tag=args.tag)
+                    _report(rec)
+        return
+    rec = run_one(args.arch, args.shape, args.multi_pod, fl,
+                  save_hlo=args.save_hlo, remat=args.remat,
+                  serve_ep=args.serve_ep,
+                  shard_capacity=args.moe_shard_capacity,
+                  moe_dispatch="a2a" if args.moe_a2a else "gather",
+                  tag=args.tag)
+    _report(rec, verbose=True)
+
+
+def _report(rec: dict, verbose: bool = False) -> None:
+    tag = f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s}"
+    if rec["status"] == "skip":
+        print(f"{tag} SKIP ({rec['reason']})")
+    elif rec["status"] == "error":
+        print(f"{tag} ERROR {rec['error']}")
+        if verbose:
+            print(rec.get("traceback", ""))
+    else:
+        r = rec["roofline"]
+        print(f"{tag} ok  compile={rec['t_compile_s']}s "
+              f"bytes/chip={rec['bytes_per_chip']/1e9:.2f}GB "
+              f"t_comp={r['t_compute']*1e3:.2f}ms t_mem={r['t_memory']*1e3:.2f}ms "
+              f"t_coll={r['t_collective']*1e3:.2f}ms -> {r['bottleneck']}"
+              f" useful={r['useful_ratio']:.2f}")
+        if verbose:
+            print(json.dumps(rec["memory"], indent=1))
+            print(json.dumps(r["coll_breakdown"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction (TPU v5e target).
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model").
+
+Defined as a FUNCTION so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax import; tests must keep
+seeing the single real CPU device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mesh(shape, axes):
+    # explicit Auto axis types: silences the jax 0.9 default-change warning
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1x1 mesh over the real local device (CPU smoke paths)."""
+    return _mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh) -> tuple:
+    """Mesh axes a batch-like dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh, *names) -> int:
+    s = 1
+    for n in names:
+        if n in mesh.axis_names:
+            s *= mesh.shape[n]
+    return s

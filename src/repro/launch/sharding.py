@@ -1,0 +1,198 @@
+"""PartitionSpec builders: name-based rules over the param/cache pytrees.
+
+Three layouts (DESIGN.md §4):
+* ``client_parallel`` train — params replicated over data/pod (each data
+  group holds one client's transient replica), tensor-parallel over model.
+* ``client_sequential`` train — FSDP: the d_model-ish dim of large matrices
+  additionally sharded over data; MoE experts expert-parallel over data.
+* ``serve`` — tensor-parallel params; KV caches sharded batch x cache-length
+  (flash-decode style sequence sharding when batch alone can't fill the
+  mesh); SSD/RG-LRU states sharded over whatever divides.
+
+All rules are divisibility-aware: a dim is only sharded if the axis size
+divides it (GSPMD tolerates uneven shardings, but even layouts keep the
+roofline accounting clean).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _fits(dim: int, mesh, name) -> bool:
+    return name in mesh.axis_names and dim % _axis(mesh, name) == 0
+
+
+def shard_if(dim: int, mesh, name) -> Optional[str]:
+    return name if _fits(dim, mesh, name) else None
+
+
+def _names_of(path) -> list:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+    return out
+
+
+# matrices whose FIRST dim is the contraction (d_model-like) axis and whose
+# SECOND dim is model-parallel; and the transposed set
+_COL_PARALLEL = {"wq", "wk", "wv", "w1", "w3", "w_x", "w_gate", "w_a", "w_i"}
+_ROW_PARALLEL = {"wo", "w2", "w_out"}
+_REPLICATED = {"scale", "bias", "b_a", "b_i", "conv_b", "dt_bias", "A_log",
+               "D", "lam", "b", "router", "conv_w"}
+
+
+def param_pspec(path, leaf, mesh, *, fsdp: bool, ep: Optional[bool] = None) -> P:
+    names = _names_of(path)
+    last = names[-1]
+    shape = leaf.shape
+    stacked = 1 if ("cycles" in names or "layers" in names) else 0
+    fsdp_ax = "data" if fsdp else None
+    ep = fsdp if ep is None else ep   # expert-parallel defaults to fsdp mode
+
+    def spec(*dims):
+        return P(*([None] * stacked + list(dims)))
+
+    # --- MoE experts: expert-parallel over data when fsdp/EP mode ---
+    # (rank check excludes the 2-D dense-residual MLP nested under "moe")
+    if "moe" in names and last in ("w1", "w2", "w3") \
+            and len(shape) - stacked == 3:
+        e_ax = shard_if(shape[stacked], mesh, "data") if ep else None
+        if last == "w2":  # [E, f, d]
+            return spec(e_ax, shard_if(shape[stacked + 1], mesh, "model"), None)
+        return spec(e_ax, None, shard_if(shape[stacked + 2], mesh, "model"))
+    if last == "table":  # embedding [V, d]
+        return spec(shard_if(shape[stacked], mesh, "model"),
+                    shard_if(shape[stacked + 1], mesh, fsdp_ax)
+                    if fsdp else None)
+    if "head" in names and last == "w":  # [d, V]
+        return spec(shard_if(shape[stacked], mesh, fsdp_ax) if fsdp else None,
+                    shard_if(shape[stacked + 1], mesh, "model"))
+    if last == "w_in":  # ssd in-proj [d, mixed] — shard only the d side
+        return spec(shard_if(shape[stacked], mesh, fsdp_ax) if fsdp else None,
+                    None)
+    if last in _COL_PARALLEL and len(shape) - stacked == 2:
+        return spec(shard_if(shape[stacked], mesh, fsdp_ax) if fsdp else None,
+                    shard_if(shape[stacked + 1], mesh, "model"))
+    if last in _ROW_PARALLEL and len(shape) - stacked == 2:
+        return spec(shard_if(shape[stacked], mesh, "model"),
+                    shard_if(shape[stacked + 1], mesh, fsdp_ax)
+                    if fsdp else None)
+    if last == "w" and len(shape) - stacked == 2:  # generic proj (vis/fusion)
+        return spec(None, shard_if(shape[stacked + 1], mesh, "model"))
+    return P(*([None] * len(shape)))
+
+
+def param_shardings(mesh, params_struct, *, fsdp: bool,
+                    ep: Optional[bool] = None):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh,
+                                                           fsdp=fsdp, ep=ep)),
+        params_struct)
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+def _batch_axes_for(dim: int, mesh) -> Any:
+    """Largest prefix of ('pod','data') whose product divides dim."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    chosen = []
+    prod = 1
+    for a in axes:
+        if dim % (prod * mesh.shape[a]) == 0:
+            chosen.append(a)
+            prod *= mesh.shape[a]
+    if not chosen:
+        return None
+    return tuple(chosen) if len(chosen) > 1 else chosen[0]
+
+
+def train_batch_shardings(mesh, batch_struct):
+    """Leading dim = clients (client_parallel) or within-client batch dim
+    at index 2 (client_sequential) — both handled by sharding dim 0 if it
+    divides, else dim 2."""
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ax0 = _batch_axes_for(leaf.shape[0], mesh)
+        if ax0 is not None:
+            return NamedSharding(mesh, P(*([ax0] + [None] * (leaf.ndim - 1))))
+        if leaf.ndim >= 3:
+            ax2 = _batch_axes_for(leaf.shape[2], mesh)
+            return NamedSharding(
+                mesh, P(*([None, None, ax2] + [None] * (leaf.ndim - 3))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_struct)
+
+
+def serve_batch_shardings(mesh, batch_struct):
+    def rule(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        ax0 = _batch_axes_for(leaf.shape[0], mesh)
+        return NamedSharding(mesh, P(*([ax0] + [None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_struct)
+
+
+def cache_shardings(mesh, cache_struct):
+    """KV caches [.., B, L, KV, hd]; SSD states; RG-LRU states.
+
+    Batch shards over ('pod','data') when it divides; the cache length L
+    additionally shards over 'model' (sequence-parallel flash-decode) since
+    KV head counts (1..20) generally don't divide the model axis.
+    """
+    def rule(path, leaf):
+        names = _names_of(path)
+        shape = leaf.shape
+        stacked = 1 if "cycles" in names else 0
+        dims = [None] * len(shape)
+        last = names[-1]
+        if last in ("k", "v", "xk", "xv"):
+            b, L = shape[stacked], shape[stacked + 1]
+            dims[stacked] = _batch_axes_for(b, mesh)
+            if dims[stacked] is None and b == 1:
+                # batch-1 long-context: shard L over everything that fits
+                dims[stacked + 1] = _batch_axes_for(L, mesh)
+                if _fits(L // max(_axis(mesh, 'data') * _axis(mesh, 'pod'), 1),
+                         mesh, "model"):
+                    pass
+            if _fits(L, mesh, "model"):
+                merged = dims[stacked + 1]
+                if merged is None:
+                    dims[stacked + 1] = "model"
+                elif isinstance(merged, tuple):
+                    dims[stacked + 1] = merged + ("model",)
+                else:
+                    dims[stacked + 1] = (merged, "model")
+        elif last == "h" and len(shape) - stacked == 4:   # SSD state [B,H,P,N]
+            dims[stacked] = _batch_axes_for(shape[stacked], mesh)
+            if _fits(shape[stacked + 2], mesh, "model"):
+                dims[stacked + 2] = "model"
+        elif last == "h":                                  # RG-LRU [B,W]
+            dims[stacked] = _batch_axes_for(shape[stacked], mesh)
+            if _fits(shape[stacked + 1], mesh, "model"):
+                dims[stacked + 1] = "model"
+        elif last == "conv":
+            dims[stacked] = _batch_axes_for(shape[stacked], mesh)
+            if _fits(shape[-1], mesh, "model"):
+                dims[-1] = "model"
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_struct)
+
+
+def replicated(mesh, struct):
+    return jax.tree.map(lambda x: NamedSharding(mesh, P()), struct)

@@ -1,0 +1,84 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape, mesh)`` returns the abstract batch for the given
+(architecture x input-shape) pair; modality frontends (vision patches, audio
+frames) appear as precomputed embeddings per the assignment's stub carve-out.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.launch.mesh import axis_size
+
+
+@dataclass(frozen=True)
+class FLPlan:
+    """How one FL round maps onto the mesh for the train shape."""
+    n_clients: int
+    local_steps: int
+    client_batch: int
+
+
+def fl_plan(cfg: ArchConfig, shape: InputShape, mesh) -> FLPlan:
+    assert shape.kind == "train"
+    if cfg.fl_mode == "client_parallel":
+        # one client per data(-pod) group
+        nc = axis_size(mesh, "pod", "data")
+    else:
+        # sequential visitation; a few clients per round, batch-parallel within
+        nc = 4
+    nc = min(nc, shape.global_batch)
+    return FLPlan(n_clients=nc, local_steps=2,
+                  client_batch=max(shape.global_batch // nc, 1))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract batch for train/prefill shapes (decode handled in steps.py
+    together with the cache struct)."""
+    S = shape.seq_len
+    if shape.kind == "train":
+        plan = fl_plan(cfg, shape, mesh)
+        lead = (plan.n_clients, plan.local_steps, plan.client_batch)
+        batch = {
+            "tokens": _sds(lead + (S,), jnp.int32),
+            "labels": _sds(lead + (S,), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds(
+                lead + (cfg.n_vision_tokens, cfg.d_model), dtype)
+        if cfg.family == "audio":
+            batch["audio_frames"] = _sds(
+                lead + (cfg.n_audio_frames, cfg.d_model), dtype)
+        return batch
+    B = shape.global_batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = _sds(
+                (B, cfg.n_vision_tokens, cfg.d_model), dtype)
+        if cfg.family == "audio":
+            batch["audio_frames"] = _sds(
+                (B, cfg.n_audio_frames, cfg.d_model), dtype)
+        return batch
+    # decode: one new token; the KV/state cache is built in steps.py
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def skip_reason(cfg: ArchConfig, shape: InputShape) -> str | None:
+    """Assignment carve-outs (DESIGN.md §6)."""
+    if shape.name == "long_500k":
+        if cfg.family == "audio":
+            return "enc-dec audio backbone: context bounded by encoder frames"
+        if not cfg.has_subquadratic_decode:
+            return "pure full-attention arch: no sub-quadratic variant"
+    return None

@@ -1,0 +1,113 @@
+"""Step builders: jit-able train / prefill / serve steps with shardings.
+
+Each builder returns (fn, arg_structs, in_shardings, out_shardings) ready
+for ``jax.jit(fn, in_shardings=..., out_shardings=...).lower(*arg_structs)``
+— the dry-run and the real launchers share this code path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, FLConfig, InputShape
+from repro.core.rounds import init_global_state, make_round_fn
+from repro.launch import sharding as sh
+from repro.launch.specs import fl_plan, input_specs
+from repro.models import transformer as tfm
+from repro.models.registry import make_bundle
+
+
+def build_train_step(cfg: ArchConfig, fl: FLConfig, shape: InputShape, mesh,
+                     dtype=jnp.bfloat16):
+    """One FL round (paper Alg. 1/2) as a single pjit step."""
+    if getattr(cfg, "moe_dispatch", "gather") == "a2a":
+        from repro.models import moe_dispatch
+        moe_dispatch.set_dispatch_mesh(mesh)
+    bundle = make_bundle(cfg, dtype)
+    mode = cfg.fl_mode
+    round_fn = make_round_fn(bundle, fl, mode)
+    plan = fl_plan(cfg, shape, mesh)
+
+    state_struct = jax.eval_shape(
+        lambda k: init_global_state(bundle, fl, k), jax.random.PRNGKey(0))
+    batch_struct = input_specs(cfg, shape, mesh, dtype)
+    nex_struct = jax.ShapeDtypeStruct((plan.n_clients,), jnp.float32)
+    lr_struct = jax.ShapeDtypeStruct((), jnp.float32)
+
+    fsdp = mode == "client_sequential"
+    state_shardings = sh.param_shardings(mesh, state_struct, fsdp=fsdp)
+    batch_shardings = sh.train_batch_shardings(mesh, batch_struct)
+    in_shardings = (state_shardings, batch_shardings,
+                    sh.replicated(mesh, nex_struct),
+                    sh.replicated(mesh, lr_struct))
+    metrics_struct = jax.eval_shape(round_fn, state_struct, batch_struct,
+                                    nex_struct, lr_struct)[1]
+    out_shardings = (state_shardings, sh.replicated(mesh, metrics_struct))
+    args = (state_struct, batch_struct, nex_struct, lr_struct)
+    return round_fn, args, in_shardings, out_shardings
+
+
+def build_prefill_step(cfg: ArchConfig, shape: InputShape, mesh,
+                       dtype=jnp.bfloat16):
+    """Prefill: full-sequence forward producing logits + KV/state cache."""
+    if getattr(cfg, "moe_dispatch", "gather") == "a2a":
+        from repro.models import moe_dispatch
+        moe_dispatch.set_dispatch_mesh(mesh)
+    def prefill(params, batch):
+        out = tfm.forward_seq(cfg, params, batch, want_cache=True)
+        return out["logits"], out["cache"]
+
+    params_struct = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    batch_struct = input_specs(cfg, shape, mesh, dtype)
+    params_sh = sh.param_shardings(mesh, params_struct, fsdp=False,
+                                   ep=cfg.serve_expert_parallel)
+    batch_sh = sh.serve_batch_shardings(mesh, batch_struct)
+    out_struct = jax.eval_shape(prefill, params_struct, batch_struct)
+    logits_sh = sh.serve_batch_shardings(mesh, out_struct[0])
+    cache_sh = sh.cache_shardings(mesh, out_struct[1])
+    return (prefill, (params_struct, batch_struct), (params_sh, batch_sh),
+            (logits_sh, cache_sh))
+
+
+def build_serve_step(cfg: ArchConfig, shape: InputShape, mesh,
+                     dtype=jnp.bfloat16):
+    """Decode: ONE new token against a cache of ``shape.seq_len``."""
+    if getattr(cfg, "moe_dispatch", "gather") == "a2a":
+        from repro.models import moe_dispatch
+        moe_dispatch.set_dispatch_mesh(mesh)
+    B, S = shape.global_batch, shape.seq_len
+
+    def serve(params, tokens, cache, pos):
+        return tfm.decode_step(cfg, params, tokens, cache, pos)
+
+    params_struct = jax.eval_shape(
+        lambda k: tfm.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+    cache_struct = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, S, dtype))
+    tok_struct = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_struct = jax.ShapeDtypeStruct((), jnp.int32)
+
+    params_sh = sh.param_shardings(mesh, params_struct, fsdp=False,
+                                   ep=cfg.serve_expert_parallel)
+    cache_sh = sh.cache_shardings(mesh, cache_struct)
+    tok_sh = sh.serve_batch_shardings(mesh, tok_struct)
+    out_struct = jax.eval_shape(serve, params_struct, tok_struct,
+                                cache_struct, pos_struct)
+    logits_sh = sh.serve_batch_shardings(mesh, out_struct[0])
+    in_shardings = (params_sh, tok_sh, cache_sh, sh.replicated(mesh, pos_struct))
+    out_shardings = (logits_sh, cache_sh)
+    args = (params_struct, tok_struct, cache_struct, pos_struct)
+    return serve, args, in_shardings, out_shardings
+
+
+def build_step(cfg: ArchConfig, fl: FLConfig, shape: InputShape, mesh,
+               dtype=jnp.bfloat16):
+    if shape.kind == "train":
+        return build_train_step(cfg, fl, shape, mesh, dtype)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, dtype)
+    return build_serve_step(cfg, shape, mesh, dtype)

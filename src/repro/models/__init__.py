@@ -1,0 +1,1 @@
+from repro.models.registry import ModelBundle, make_bundle  # noqa: F401

@@ -1,0 +1,202 @@
+"""GQA attention: blocked flash-style for train/prefill, cached for decode.
+
+All functions are pure; params are dicts.  Shapes:
+  q: [B, S, H, hd]    k/v: [B, S, KV, hd]   with H = KV * rep (GQA).
+
+The sequence path is a blocked online-softmax (flash) implemented with
+``lax.scan`` over query blocks and an inner scan over KV blocks, so the
+S x S score matrix is never materialised — this is what makes the 32k
+prefill shapes lowerable with sane memory.  Sliding-window layers slice a
+static-length KV span per query block (FLOPs O(S * window), not O(S^2)).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model, n_heads, n_kv_heads, head_dim, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+
+
+def project_qkv(params, x, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    k = (x @ params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+    v = (x @ params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def project_out(params, o):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Blocked flash attention (sequence mode)
+# ---------------------------------------------------------------------------
+
+def _block_attn(q_blk, k_blk, v_blk, q_pos, k_pos, carry, *, window, scale,
+                causal=True, kv_valid=2**62):
+    """One (q_block, kv_block) tile of online-softmax attention.
+
+    q_blk [B,qb,KV,rep,hd]; k_blk/v_blk [B,kb,KV,hd];
+    carry = (m [B,KV,rep,qb], l [B,KV,rep,qb], acc [B,qb,KV,rep,hd]).
+    """
+    m, l, acc = carry
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", q_blk, k_blk,
+                   preferred_element_type=jnp.float32) * scale
+    mask = k_pos[None, :] <= q_pos[:, None] if causal else (
+        jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool))
+    mask &= (k_pos < kv_valid)[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v_blk.dtype), v_blk,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * jnp.moveaxis(corr, -1, 1)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def flash_attention(q, k, v, *, window=None, q_block=512, kv_block=1024,
+                    q_offset=0, causal=True):
+    """Blocked attention: causal (default), sliding-window, or bidirectional.
+
+    q [B,Sq,H,hd], k/v [B,Sk,KV,hd]; returns [B,Sq,H,hd] in q.dtype.
+    ``q_offset``: global position of q[0] (for prefill continuation).
+    Non-block-aligned sequence lengths are zero-padded internally and the
+    padded KV positions are masked out.
+    """
+    B, Sq0, H, hd = q.shape
+    Sk0, KV = k.shape[1], k.shape[2]
+    q_block = min(q_block, Sq0)
+    kv_block = min(kv_block, Sk0)
+    pad_q = (-Sq0) % q_block
+    pad_k = (-Sk0) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Sk = Sq0 + pad_q, Sk0 + pad_k
+    rep = H // KV
+    scale = hd ** -0.5
+    nq = Sq // q_block
+
+    qs = q.reshape(B, nq, q_block, KV, rep, hd)
+    qs = jnp.moveaxis(qs, 1, 0)  # [nq, B, qb, KV, rep, hd]
+
+    span = None
+    if window is not None:
+        span = window + q_block
+        span = -(-span // kv_block) * kv_block  # round up to kv_block
+        if span >= Sk:
+            span = None  # window covers everything -> global path
+
+    def q_body(_, inputs):
+        i, q_blk = inputs
+        q_pos = q_offset + i * q_block + jnp.arange(q_block)
+        m0 = jnp.full((B, KV, rep, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, q_block), jnp.float32)
+        a0 = jnp.zeros((B, q_block, KV, rep, hd), jnp.float32)
+
+        if span is None:
+            k_src, v_src, k_start = k, v, 0
+        else:
+            start = jnp.clip(q_offset + (i + 1) * q_block - span, 0, Sk - span)
+            k_src = jax.lax.dynamic_slice(k, (0, start, 0, 0), (B, span, KV, hd))
+            v_src = jax.lax.dynamic_slice(v, (0, start, 0, 0), (B, span, KV, hd))
+            k_start = start
+
+        Sk_eff = k_src.shape[1]
+        nk = Sk_eff // kv_block
+        ks = jnp.moveaxis(k_src.reshape(B, nk, kv_block, KV, hd), 1, 0)
+        vs = jnp.moveaxis(v_src.reshape(B, nk, kv_block, KV, hd), 1, 0)
+
+        def kv_body(carry, kv_in):
+            j, k_blk, v_blk = kv_in
+            k_pos = k_start + j * kv_block + jnp.arange(kv_block)
+            return _block_attn(q_blk, k_blk, v_blk, q_pos, k_pos, carry,
+                               window=window, scale=scale, causal=causal,
+                               kv_valid=Sk0), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(jnp.moveaxis(l, -1, 1), 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_body, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, hd)
+    return out[:, :Sq0]
+
+
+# ---------------------------------------------------------------------------
+# Decode (one query token against a KV cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, *, cache_len=None, window=None,
+                     kernel=None):
+    """q [B,1,H,hd]; caches [B,L,KV,hd]. Returns [B,1,H,hd].
+
+    ``cache_len``: number of valid cache positions (int array or None=all).
+    ``window``: for sliding-window layers whose cache is already the ring
+    buffer, pass None (the cache itself is the window).
+    ``kernel``: optional accelerated implementation (Pallas flash-decode);
+    signature (q, k, v, valid_len) -> out.
+    """
+    B, _, H, hd = q.shape
+    L, KV = k_cache.shape[1], k_cache.shape[2]
+    rep = H // KV
+    if kernel is not None:
+        return kernel(q, k_cache, v_cache, cache_len)
+    scale = hd ** -0.5
+    qh = q.reshape(B, KV, rep, hd)
+    s = jnp.einsum("bgrd,blgd->bgrl", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(L)
+    valid = jnp.ones((L,), bool) if cache_len is None else pos < cache_len
+    if window is not None:
+        hi = L if cache_len is None else cache_len
+        valid &= pos >= hi - window
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrl,blgd->bgrd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def reference_attention(q, k, v, *, window=None, q_offset=0, causal=True):
+    """Naive O(S^2) oracle for tests."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, Sq, KV, rep, hd)
+    s = jnp.einsum("bqgrd,bkgd->bgrqk", qh, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = (k_pos[None, :] <= q_pos[:, None] if causal else
+            jnp.ones((Sq, k.shape[1]), bool))
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqk,bkgd->bqgrd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

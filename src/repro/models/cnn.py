@@ -1,0 +1,78 @@
+"""The paper's CNN models (§4.1.1), split into extractor / classifier.
+
+The split matters: FedFusion keeps the *global feature extractor* E_g frozen
+and fuses its feature maps with the local extractor's before the classifier
+(paper Fig. 3).  Feature maps are NHWC; the fusion channel axis is the last.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+from repro.models.layers import dense_init
+
+
+def _conv_init(key, k, cin, cout, dtype):
+    ks = jax.random.split(key)
+    return {
+        "w": dense_init(ks[0], (k, k, cin, cout), dtype,
+                        scale=1.0 / (k * (cin ** 0.5))),
+        "b": jnp.zeros((cout,), dtype),
+    }
+
+
+def cnn_init(cfg: CNNConfig, key, dtype=jnp.float32):
+    n_conv = len(cfg.conv_channels)
+    keys = jax.random.split(key, n_conv + len(cfg.fc_units) + 1)
+    convs = []
+    cin = cfg.input_shape[-1]
+    for i, cout in enumerate(cfg.conv_channels):
+        convs.append(_conv_init(keys[i], 5, cin, cout, dtype))
+        cin = cout
+    h, w = cfg.feature_hw
+    fcs = []
+    d = h * w * cin
+    for j, units in enumerate(cfg.fc_units):
+        fcs.append({"w": dense_init(keys[n_conv + j], (d, units), dtype),
+                    "b": jnp.zeros((units,), dtype)})
+        d = units
+    head = {"w": dense_init(keys[-1], (d, cfg.n_classes), dtype),
+            "b": jnp.zeros((cfg.n_classes,), dtype)}
+    return {"convs": convs, "fcs": fcs, "head": head}
+
+
+def _maxpool(x, size, stride):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, size, size, 1), (1, stride, stride, 1),
+        "VALID")
+
+
+def cnn_extract(cfg: CNNConfig, params, x):
+    """x [B,H,W,C_in] -> feature maps [B,h,w,C]."""
+    h = x
+    for conv in params["convs"]:
+        h = jax.lax.conv_general_dilated(
+            h, conv["w"], (1, 1), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + conv["b"]
+        h = jax.nn.relu(h)
+        h = _maxpool(h, cfg.pool_size, cfg.pool_stride)
+    return h
+
+
+def cnn_head(cfg: CNNConfig, params, feats, *, rng=None):
+    """feats [B,h,w,C] -> logits [B,n_classes]. rng enables dropout."""
+    h = feats.reshape(feats.shape[0], -1)
+    for i, fc in enumerate(params["fcs"]):
+        h = jax.nn.relu(h @ fc["w"] + fc["b"])
+        if rng is not None and cfg.dropout > 0:
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1 - cfg.dropout), 0.0)
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def cnn_apply(cfg: CNNConfig, params, x, *, rng=None):
+    feats = cnn_extract(cfg, params, x)
+    return {"features": feats, "logits": cnn_head(cfg, params, feats, rng=rng),
+            "aux": jnp.zeros((), jnp.float32)}

@@ -1,0 +1,114 @@
+"""Core layer primitives (pure functions over pytree params)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale=None):
+    """Truncated-normal fan-in init (LeCun-style)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    if scale is None:
+        scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps=1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def norm_init(kind, dim, dtype=jnp.float32):
+    return layernorm_init(dim, dtype) if kind == "layernorm" else rmsnorm_init(dim, dtype)
+
+
+def norm_apply(kind, params, x, eps=1e-6):
+    return layernorm(params, x, eps) if kind == "layernorm" else rmsnorm(params, x, eps)
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU ("silu") or plain GELU MLP ("gelu")
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model, d_ff, act, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w2": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if act == "silu":
+        p["w3"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def mlp_apply(params, x, act):
+    h = x @ params["w1"]
+    if act == "silu":
+        h = jax.nn.silu(h) * (x @ params["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["w2"]
+
+
+def mlp_flops(d_model, d_ff, act, n_tokens):
+    mult = 3 if act == "silu" else 2
+    return 2 * mult * d_model * d_ff * n_tokens
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d_model, dtype=jnp.float32):
+    return {"table": dense_init(key, (vocab, d_model), dtype, scale=1.0)}
+
+
+def embed_apply(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed_apply(params, x, head=None):
+    """Tied (use embedding table) or separate LM head."""
+    table = head if head is not None else params["table"]
+    return x @ table.T if head is None else x @ table
+
+
+def sinusoidal_positions(n_pos, dim, dtype=jnp.float32):
+    """Whisper-style sinusoidal absolute position embeddings."""
+    inv = np.exp(-np.log(10_000.0) * np.arange(dim // 2) / max(dim // 2 - 1, 1))
+    pos = np.arange(n_pos)[:, None] * inv[None, :]
+    return jnp.asarray(
+        np.concatenate([np.sin(pos), np.cos(pos)], axis=-1), dtype=dtype)
+
+
+def sinusoidal_position_at(pos, dim, dtype=jnp.float32):
+    """Single-position sinusoidal embedding [dim] for a traced scalar pos
+    (avoids baking an O(max_len * dim) constant into decode HLO)."""
+    half = dim // 2
+    inv = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32)
+                  / max(half - 1, 1))
+    ang = pos.astype(jnp.float32) * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)

@@ -1,0 +1,103 @@
+"""Uniform ModelBundle API over all architectures (transformers + CNNs).
+
+The FL core (FedAvg / FedMMD / FedFusion) is written against this protocol:
+    bundle.init(key)                 -> params
+    bundle.extract(params, batch)    -> (features, aux)   # trunk only
+    bundle.head(params, features)    -> logits
+    bundle.apply(params, batch)      -> {'features','logits','aux'}
+    bundle.pool(features)            -> [B, C] pooled features (for MMD)
+    bundle.labels(batch)             -> targets for the loss
+    bundle.loss_kind                 -> 'lm' | 'classify'
+    bundle.feature_channels          -> fusion channel width C
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Union
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, CNNConfig
+from repro.models import cnn as cnn_mod
+from repro.models import transformer as tfm
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    name: str
+    config: Union[ArchConfig, CNNConfig]
+    init: Callable[..., Any]
+    extract: Callable[..., Any]
+    head: Callable[..., Any]
+    apply: Callable[..., Dict[str, Any]]
+    pool: Callable[..., Any]
+    labels: Callable[[Dict[str, Any]], Any]
+    loss_kind: str
+    feature_channels: int
+
+
+def make_bundle(cfg: Union[ArchConfig, CNNConfig], dtype=jnp.float32
+                ) -> ModelBundle:
+    if isinstance(cfg, CNNConfig):
+        return _cnn_bundle(cfg, dtype)
+    return _transformer_bundle(cfg, dtype)
+
+
+def _cnn_bundle(cfg: CNNConfig, dtype) -> ModelBundle:
+    def init(key):
+        return cnn_mod.cnn_init(cfg, key, dtype)
+
+    def extract(params, batch):
+        return cnn_mod.cnn_extract(cfg, params, batch["x"]), jnp.zeros((), jnp.float32)
+
+    def head(params, feats):
+        return cnn_mod.cnn_head(cfg, params, feats)
+
+    def apply(params, batch):
+        return cnn_mod.cnn_apply(cfg, params, batch["x"])
+
+    def pool(feats):           # [B,h,w,C] -> [B,C]
+        return feats.mean(axis=(1, 2))
+
+    return ModelBundle(
+        name=cfg.name, config=cfg, init=init, extract=extract, head=head,
+        apply=apply, pool=pool, labels=lambda b: b["y"],
+        loss_kind="classify", feature_channels=cfg.conv_channels[-1])
+
+
+def _transformer_bundle(cfg: ArchConfig, dtype) -> ModelBundle:
+    def init(key):
+        return tfm.init_params(cfg, key, dtype)
+
+    def extract(params, batch):
+        out = tfm.forward_seq(cfg, params, batch, want_logits=False)
+        return out["features"], out["aux"]
+
+    def head(params, feats):
+        return tfm.head_apply(cfg, params, feats)
+
+    def apply(params, batch):
+        return tfm.forward_seq(cfg, params, batch)
+
+    def pool(feats):           # [B,S,d] -> [B,d]
+        return feats.mean(axis=1)
+
+    def labels(batch):
+        # next-token prediction: labels[t] = tokens[t+1]; last target is pad
+        if "labels" in batch:
+            return batch["labels"]
+        toks = batch["tokens"]
+        return jnp.concatenate([toks[:, 1:], toks[:, -1:]], axis=1)
+
+    return ModelBundle(
+        name=cfg.name, config=cfg, init=init, extract=extract, head=head,
+        apply=apply, pool=pool, labels=labels, loss_kind="lm",
+        feature_channels=cfg.d_model)
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, pos):
+    return tfm.decode_step(cfg, params, tokens, cache, pos)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.float32):
+    return tfm.init_cache(cfg, batch, max_len, dtype)

@@ -1,0 +1,111 @@
+"""RecurrentGemma RG-LRU recurrent block (Griffin, arXiv:2402.19427).
+
+Block = gated dual branch:
+    branch A: linear -> causal conv1d(w=4) -> RG-LRU
+    branch B: linear -> GeLU
+    out     = linear(branch A * branch B)
+
+RG-LRU recurrence (elementwise, width W):
+    r_t = sigmoid(x_t @ W_a + b_a)            recurrence gate
+    i_t = sigmoid(x_t @ W_x + b_x)            input gate
+    log_a_t = -c * softplus(Lambda) * r_t     (c = 8)
+    h_t = exp(log_a_t) * h_{t-1} + sqrt(1 - exp(2*log_a_t)) * (i_t * x_t)
+
+Sequence mode uses `lax.associative_scan` over the linear recurrence
+(h_t = a_t h_{t-1} + b_t), which parallelises over the sequence — the
+TPU-native alternative to a step-wise scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def rglru_init(key, d_model, lru_width, conv_width=4, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": dense_init(ks[0], (d_model, lru_width), dtype),
+        "w_gate": dense_init(ks[1], (d_model, lru_width), dtype),
+        "conv_w": dense_init(ks[2], (conv_width, lru_width), dtype, scale=0.5),
+        "conv_b": jnp.zeros((lru_width,), dtype),
+        "lam": jnp.linspace(-2.0, 2.0, lru_width).astype(dtype),  # softplus arg
+        "w_a": dense_init(ks[3], (lru_width, lru_width), dtype),
+        "b_a": jnp.zeros((lru_width,), dtype),
+        "w_i": dense_init(ks[4], (lru_width, lru_width), dtype),
+        "b_i": jnp.zeros((lru_width,), dtype),
+        "w_out": dense_init(ks[5], (lru_width, d_model), dtype),
+    }
+
+
+def _gates(params, x):
+    """x [..., W] -> (log_a [..., W], gated input [..., W]) in f32."""
+    x32 = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 @ params["w_a"].astype(jnp.float32)
+                       + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(x32 @ params["w_i"].astype(jnp.float32)
+                       + params["b_i"].astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * (i * x32)
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def rglru_apply(params, x, conv_width=4):
+    """Sequence mode. x [B,S,d] -> [B,S,d]."""
+    u = x @ params["w_x"]
+    u = _causal_conv(u, params["conv_w"], params["conv_b"])
+    log_a, b = _gates(params, u)
+    a = jnp.exp(log_a)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(x.dtype)
+    gate = jax.nn.gelu(x @ params["w_gate"])
+    return (h * gate) @ params["w_out"]
+
+
+def rglru_init_cache(batch, lru_width, conv_width=4, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+    }
+
+
+def rglru_decode(params, x, cache, conv_width=4):
+    """x [B,1,d] -> (y [B,1,d], new_cache)."""
+    u = x @ params["w_x"]                                      # [B,1,W]
+    win = jnp.concatenate([cache["conv"], u], axis=1)
+    u1 = jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    log_a, b = _gates(params, u1)
+    h = jnp.exp(log_a) * cache["h"] + b
+    gate = jax.nn.gelu(x[:, 0] @ params["w_gate"])
+    y = (h.astype(x.dtype) * gate) @ params["w_out"]
+    return y[:, None, :], {"h": h, "conv": win[:, 1:, :]}
+
+
+def rglru_reference(params, x, conv_width=4):
+    """Step-wise oracle for tests."""
+    B, S, _ = x.shape
+    cache = rglru_init_cache(B, params["w_x"].shape[1], conv_width, x.dtype)
+    ys = []
+    for t in range(S):
+        y, cache = rglru_decode(params, x[:, t:t + 1], cache, conv_width)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

@@ -1,0 +1,65 @@
+"""Rotary position embeddings: standard, partial-rotary, and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions, head_dim_rot, theta):
+    """positions [..., S] -> (cos, sin) of shape [..., S, head_dim_rot//2]."""
+    half = head_dim_rot // 2
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """Apply rotation to the first 2*half dims of x (split-halves convention).
+
+    x: [..., S, H, hd]; cos/sin: [..., S, half] broadcast over heads.
+    """
+    half = cos.shape[-1]
+    x_rot, x_pass = x[..., : 2 * half], x[..., 2 * half:]
+    x1, x2 = x_rot[..., :half], x_rot[..., half:]
+    c = cos[..., None, :]  # add head axis
+    s = sin[..., None, :]
+    out1 = x1 * c - x2 * s
+    out2 = x2 * c + x1 * s
+    return jnp.concatenate([out1, out2, x_pass], axis=-1).astype(x.dtype)
+
+
+def apply_rope(q, k, positions, *, theta, head_dim, partial_pct=1.0):
+    """q [B,S,H,hd], k [B,S,KV,hd], positions [B,S] (or [S])."""
+    rot = int(head_dim * partial_pct)
+    rot -= rot % 2
+    if rot == 0 or theta <= 0:
+        return q, k
+    cos, sin = rope_angles(positions, rot, theta)   # [B,S,half]
+    if cos.ndim == 2:                               # [S,half] -> [1,S,half]
+        cos, sin = cos[None], sin[None]
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def mrope_angles(positions_3d, head_dim, theta, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    positions_3d: [3, B, S] (temporal, height, width position ids).
+    sections: per-axis number of rotary *pairs*, sums to head_dim//2.
+    Returns cos/sin [B, S, head_dim//2] where frequency slot j uses the
+    position id of the section it falls in.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # section id per frequency slot
+    sec_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.asarray(sections), total_repeat_length=half)
+    # pick the matching positional stream per slot: [B, S, half]
+    pos = jnp.take(positions_3d, sec_id, axis=0)          # [half?, ...] wrong axis
+    pos = jnp.moveaxis(pos, 0, -1).astype(jnp.float32)    # [B, S, half]
+    ang = pos * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_mrope(q, k, positions_3d, *, theta, head_dim, sections):
+    cos, sin = mrope_angles(positions_3d, head_dim, theta, sections)
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)

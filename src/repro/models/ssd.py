@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan, TPU-friendly.
+
+The SSD recurrence per head (state N, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * (x_t outer B_t)        [P, N]
+    y_t = h_t @ C_t + D * x_t
+is computed chunk-wise (arXiv:2405.21060 §6): quadratic attention-like
+matmuls *within* a chunk (MXU work) and a `lax.scan` over chunk states
+(sequential part shrinks by the chunk length).  All decays are computed in
+log-space; `cum` is non-positive so every exp() is <= 1 (numerically safe).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def ssd_init(key, d_model, *, expand, d_state, head_dim, conv_width,
+             dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * d_state   # conv runs over [x, B, C] jointly
+    ks = jax.random.split(key, 5)
+    return {
+        # in_proj -> [z (gate), xBC, dt]
+        "w_in": dense_init(ks[0], (d_model, d_inner + conv_ch + n_heads), dtype),
+        "conv_w": dense_init(ks[1], (conv_width, conv_ch), dtype, scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(dtype),
+        "dt_bias": jnp.zeros((n_heads,), dtype),
+        "D": jnp.ones((n_heads,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d_model), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x [B,S,C], w [W,C] -> [B,S,C]."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],                     # [W, 1, C] depthwise
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def _split_proj(params, x, cfg_dims):
+    d_inner, d_state, n_heads = cfg_dims
+    proj = x @ params["w_in"]
+    conv_ch = d_inner + 2 * d_state
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:d_inner + conv_ch]
+    dt = proj[..., d_inner + conv_ch:]
+    return z, xBC, dt
+
+
+def ssd_apply(params, x, *, expand, d_state, head_dim, chunk, conv_width):
+    """Sequence mode. x [B,S,d] -> y [B,S,d]."""
+    Bsz, S, d_model = x.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    z, xBC, dt = _split_proj(params, x, (d_inner, d_state, n_heads))
+    xBC = jax.nn.silu(_causal_conv(xBC, params["conv_w"], params["conv_b"]))
+    xs = xBC[..., :d_inner].reshape(Bsz, S, n_heads, head_dim)
+    Bmat = xBC[..., d_inner:d_inner + d_state]                 # [B,S,N]
+    Cmat = xBC[..., d_inner + d_state:]                        # [B,S,N]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # [H] < 0
+
+    y = _ssd_chunked(xs, Bmat, Cmat, dt, A, chunk)
+    y = y + params["D"].astype(y.dtype)[None, None, :, None] * xs
+    y = y.reshape(Bsz, S, d_inner)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"]
+
+
+def _ssd_chunked(xs, Bmat, Cmat, dt, A, chunk):
+    """Core chunked SSD. xs [B,S,H,P]; B/C [B,S,N]; dt [B,S,H]; A [H]."""
+    Bsz, S, H, P = xs.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+
+    def c(x_):  # chunkify leading seq axis -> [nc, B, Q, ...]
+        return jnp.moveaxis(x_.reshape(Bsz, nc, Q, *x_.shape[2:]), 1, 0)
+
+    xc, Bc, Cc, dtc = c(xs), c(Bmat), c(Cmat), c(dt)
+    a = dtc * A[None, None, None, :]                 # [nc,B,Q,H], <= 0
+    cum = jnp.cumsum(a, axis=2)                      # within-chunk log decay
+
+    def body(h_prev, inp):
+        x_q, B_q, C_q, dt_q, a_q, cum_q = inp
+        # intra-chunk: attention-like lower-triangular mix
+        scores = jnp.einsum("bqn,bkn->bqk", C_q, B_q,
+                            preferred_element_type=jnp.float32)
+        # mask in LOG space before the exp: the upper triangle has positive
+        # log-decay (exp -> inf) whose gradient would be NaN even after a
+        # post-hoc where(); -1e30 exps to exactly 0 with zero gradient.
+        diff = cum_q[:, :, None, :] - cum_q[:, None, :, :]            # [B,Q,K,H]
+        tri = jnp.tril(jnp.ones((x_q.shape[1], x_q.shape[1]), bool))
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], diff, -1e30))
+        dtx = dt_q[..., None] * x_q.astype(jnp.float32)               # [B,K,H,P]
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, decay, dtx)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", C_q.astype(jnp.float32),
+                             jnp.exp(cum_q), h_prev)
+        # new carried state
+        w_k = jnp.exp(cum_q[:, -1:, :] - cum_q) * dt_q                # [B,K,H]
+        S_c = jnp.einsum("bkh,bkhp,bkn->bhpn", w_k,
+                         x_q.astype(jnp.float32), B_q.astype(jnp.float32))
+        h_new = jnp.exp(cum_q[:, -1])[:, :, None, None] * h_prev + S_c
+        return h_new, (y_intra + y_inter).astype(xs.dtype)
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, yc = jax.lax.scan(body, h0, (xc, Bc, Cc, dtc, a, cum))
+    return jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, P)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token, carried state)
+# ---------------------------------------------------------------------------
+
+def ssd_init_cache(batch, d_model, *, expand, d_state, head_dim, conv_width,
+                   dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    conv_ch = d_inner + 2 * d_state
+    return {
+        "h": jnp.zeros((batch, n_heads, head_dim, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssd_decode(params, x, cache, *, expand, d_state, head_dim, conv_width):
+    """x [B,1,d] -> (y [B,1,d], new_cache)."""
+    Bsz, _, d_model = x.shape
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    z, xBC, dt = _split_proj(params, x, (d_inner, d_state, n_heads))
+    # conv over stored window + current input
+    win = jnp.concatenate([cache["conv"], xBC], axis=1)        # [B,W,ch]
+    conv_out = jnp.einsum("bwc,wc->bc", win, params["conv_w"]) + params["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = win[:, 1:, :]
+
+    xs = xBC[..., :d_inner].reshape(Bsz, n_heads, head_dim)
+    Bv = xBC[:, 0, d_inner:d_inner + d_state]                  # [B,N]
+    Cv = xBC[:, 0, d_inner + d_state:]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * A[None, :])                          # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtv, xs.astype(jnp.float32),
+                     Bv.astype(jnp.float32))
+    h = decay[:, :, None, None] * cache["h"] + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cv.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs
+    y = y.reshape(Bsz, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ params["w_out"], {"h": h, "conv": new_conv}
+
+
+def ssd_reference(params, x, *, expand, d_state, head_dim, conv_width):
+    """Step-by-step scan oracle (no chunking) for tests."""
+    Bsz, S, d_model = x.shape
+    cache = ssd_init_cache(Bsz, d_model, expand=expand, d_state=d_state,
+                           head_dim=head_dim, conv_width=conv_width,
+                           dtype=x.dtype)
+    ys = []
+    for t in range(S):
+        y, cache = ssd_decode(params, x[:, t:t + 1], cache, expand=expand,
+                              d_state=d_state, head_dim=head_dim,
+                              conv_width=conv_width)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (adam_init, adam_update, make_optimizer,
+                                    sgd_init, sgd_update)  # noqa: F401
+from repro.optim.schedules import exp_decay_per_round  # noqa: F401

@@ -1,0 +1,62 @@
+"""Minimal pytree optimizers (no optax dependency): SGD(+momentum), Adam."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_init(params, momentum=0.0):
+    if momentum == 0.0:
+        return {"t": jnp.zeros((), jnp.int32)}
+    return {"t": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params)}
+
+
+def sgd_update(params, grads, state, *, lr, momentum=0.0, weight_decay=0.0):
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    if momentum == 0.0:
+        new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                           params, grads)
+        return new, {"t": state["t"] + 1}
+    mu = jax.tree.map(lambda m, g: (momentum * m + g).astype(m.dtype),
+                      state["mu"], grads)
+    new = jax.tree.map(lambda p, m: (p - lr * m).astype(p.dtype), params, mu)
+    return new, {"t": state["t"] + 1, "mu": mu}
+
+
+def adam_init(params):
+    return {"t": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(jnp.zeros_like, params),
+            "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def adam_update(params, grads, state, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                weight_decay=0.0):
+    t = state["t"] + 1
+    if weight_decay:
+        grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+    m = jax.tree.map(lambda m_, g: (b1 * m_ + (1 - b1) * g).astype(m_.dtype),
+                     state["m"], grads)
+    v = jax.tree.map(
+        lambda v_, g: (b2 * v_ + (1 - b2) * g * g).astype(v_.dtype),
+        state["v"], grads)
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - b1 ** tf
+    c2 = 1.0 - b2 ** tf
+    new = jax.tree.map(
+        lambda p, m_, v_: (p - lr * (m_ / c1)
+                           / (jnp.sqrt(v_ / c2) + eps)).astype(p.dtype),
+        params, m, v)
+    return new, {"t": t, "m": m, "v": v}
+
+
+def make_optimizer(kind: str, momentum: float = 0.0):
+    """Returns (init_fn(params), update_fn(params, grads, state, lr))."""
+    if kind == "sgd":
+        return (lambda p: sgd_init(p, momentum),
+                lambda p, g, s, lr: sgd_update(p, g, s, lr=lr,
+                                               momentum=momentum))
+    if kind == "adam":
+        return adam_init, lambda p, g, s, lr: adam_update(p, g, s, lr=lr)
+    raise ValueError(kind)

@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: F401
+                                     Roofline, analyze, model_flops)
+from repro.roofline.hlo import (collective_bytes,  # noqa: F401
+                                collective_op_counts)

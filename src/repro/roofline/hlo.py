@@ -1,0 +1,391 @@
+"""Structural HLO analyzer: loop-aware FLOPs / HBM bytes / collective bytes.
+
+Why not ``compiled.cost_analysis()``?  XLA's cost analysis counts each
+computation ONCE — a ``lax.scan`` over 30 layers contributes 1/30th of its
+true cost.  Since this framework deliberately scans over layer cycles,
+clients and attention blocks, we parse the scheduled HLO text ourselves:
+
+* computations are parsed into op lists; operands in scheduled HLO are bare
+  ``%names``, so shapes are resolved through a per-computation symbol table
+  (header parameters + op results);
+* ``while`` trip counts are recovered from the loop-condition computation
+  (the ``compare(iv, constant(N))`` pattern lax.scan emits);
+* costs roll up through the call graph (entry -> while bodies x trips).
+
+Cost model per op (shapes in post-SPMD HLO are PER-DEVICE shapes, so all
+results are per-chip):
+* ``dot``: FLOPs = 2 * prod(result) * contraction_size; bytes = operands +
+  result.
+* ``convolution``: FLOPs ~= 2 * prod(result) * kernel_elems / C_out.
+* ``fusion``: bytes = operands + result — exactly XLA's fused-kernel HBM
+  traffic model.  Elementwise ops outside fusions are ignored (they fuse in
+  practice).
+* collectives: bytes = operand payload a chip moves.
+* data movement ops (dynamic-(update-)slice, gather, scatter, reduce, sort,
+  copy, transpose, concatenate): bytes = operands + result.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_MOVE_OPS = ("dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+             "reduce", "sort", "copy", "transpose", "concatenate", "reverse",
+             "pad", "slice")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*?)\[([\d,]*)\]")
+_OPCODE_RE = re.compile(r"\b([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"\bconstant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 0)
+
+
+def _shapes_bytes(shapes: List[Tuple[str, str]]) -> int:
+    return sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_shapes: List[Tuple[str, str]]
+    operand_names: List[str]
+    attrs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    params: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+    ops: List[Op] = field(default_factory=list)
+    symbols: Dict[str, List[Tuple[str, str]]] = field(default_factory=dict)
+    consts: Dict[str, int] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)
+    coll_counts: Dict[str, float] = field(default_factory=dict)
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v
+        return self
+
+    def scaled(self, m: float) -> "Cost":
+        return Cost(self.flops * m, self.bytes * m,
+                    {k: v * m for k, v in self.coll_bytes.items()},
+                    {k: v * m for k, v in self.coll_counts.items()})
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+
+_HDR_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\((.*)\)\s*->")
+
+
+def parse_computations(hlo_text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if not s or s.startswith("//") or s.startswith("HloModule"):
+            continue
+        if s.endswith("{"):
+            m = _HDR_RE.match(s)
+            if m:
+                cur = Computation(name=m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                # header params: "pname: TYPE[dims], ..."
+                for pm in re.finditer(r"([\w.\-]+):\s*(\(?[^,()]*(?:\([^)]*\))?)",
+                                      m.group(3)):
+                    pname = pm.group(1)
+                    shapes = _SHAPE_RE.findall(pm.group(2))
+                    if shapes:
+                        cur.params[pname] = shapes
+                        cur.symbols[pname] = shapes
+                continue
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in s:
+            continue
+        name_part, _, rhs = s.partition("=")
+        name = name_part.replace("ROOT", "").strip().lstrip("%")
+        rhs = rhs.strip()
+        om = _OPCODE_RE.search(rhs)
+        if not om:
+            continue
+        opcode = om.group(1)
+        result_shapes = _SHAPE_RE.findall(rhs[:om.start()])
+        # operands: %names inside the first balanced paren group
+        depth = 0
+        end = om.end()
+        for i in range(om.end() - 1, len(rhs)):
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        operand_text = rhs[om.end():end]
+        attrs = rhs[end:]
+        operands = _OPERAND_RE.findall(operand_text)
+        op = Op(name=name, opcode=opcode, result_shapes=result_shapes,
+                operand_names=operands, attrs=attrs)
+        cur.ops.append(op)
+        cur.symbols[name] = result_shapes
+        if opcode == "constant":
+            cm = _CONST_INT_RE.search(rhs)
+            if cm:
+                cur.consts[name] = int(cm.group(1))
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, entry
+
+
+def _operand_shapes(comp: Computation, op: Op) -> List[Tuple[str, str]]:
+    out: List[Tuple[str, str]] = []
+    for n in op.operand_names:
+        out.extend(comp.symbols.get(n, []))
+    return out
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    lhs_shapes = comp.symbols.get(op.operand_names[0], []) \
+        if op.operand_names else []
+    if not m or not lhs_shapes:
+        return 0.0
+    dims_str = lhs_shapes[0][1]
+    lhs = [int(d) for d in dims_str.split(",")] if dims_str.strip() else []
+    contract = 1
+    for idx in m.group(1).split(","):
+        if idx.strip() and int(idx) < len(lhs):
+            contract *= lhs[int(idx)]
+    out = 0
+    for dt, dims in op.result_shapes:
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        out += n
+    return 2.0 * out * contract
+
+
+def _conv_flops(comp: Computation, op: Op) -> float:
+    shapes = _operand_shapes(comp, op)
+    if len(shapes) < 2:
+        return 0.0
+    kdims = shapes[1][1]
+    kshape = [int(d) for d in kdims.split(",")] if kdims.strip() else [1]
+    kn = 1
+    for d in kshape:
+        kn *= d
+    out_n = 0
+    for dt, dims in op.result_shapes:
+        n = 1
+        if dims.strip():
+            for d in dims.split(","):
+                n *= int(d)
+        out_n += n
+    c_out = kshape[-1] if kshape else 1
+    return 2.0 * out_n * (kn / max(c_out, 1))
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> float:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1.0
+    # preferred: the constant operand of the ROOT compare
+    for op in cond.ops:
+        if op.opcode == "compare":
+            for n in op.operand_names:
+                if n in cond.consts:
+                    return float(max(cond.consts[n], 1))
+    if cond.consts:
+        return float(max(max(cond.consts.values()), 1))
+    return 1.0
+
+
+def analyze_entry(hlo_text: str) -> Cost:
+    comps, entry = parse_computations(hlo_text)
+    cache: Dict[str, Cost] = {}
+
+    def cost_of(name: str, depth=0) -> Cost:
+        if name in cache:
+            return cache[name]
+        comp = comps.get(name)
+        total = Cost()
+        if comp is None or depth > 60:
+            return total
+        cache[name] = total
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                m = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                b = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = _trip_count(comps, m.group(1)) if m else 1.0
+                if b:
+                    total += cost_of(b.group(1), depth + 1).scaled(trips)
+                if m:
+                    total += cost_of(m.group(1), depth + 1).scaled(trips)
+                continue
+            matched_coll = None
+            for coll in COLLECTIVE_OPS:
+                if oc == coll or oc == coll + "-start":
+                    matched_coll = coll
+                    break
+            if matched_coll:
+                payload = float(_shapes_bytes(_operand_shapes(comp, op)))
+                total += Cost(0.0, payload, {matched_coll: payload},
+                              {matched_coll: 1.0})
+                continue
+            if oc.endswith("-done"):
+                continue
+            if oc == "dot":
+                total += Cost(_dot_flops(comp, op),
+                              float(_shapes_bytes(op.result_shapes) +
+                                    _shapes_bytes(_operand_shapes(comp, op))))
+            elif oc == "convolution":
+                total += Cost(_conv_flops(comp, op),
+                              float(_shapes_bytes(op.result_shapes) +
+                                    _shapes_bytes(_operand_shapes(comp, op))))
+            elif oc in ("fusion", "custom-call"):
+                total += Cost(0.0,
+                              float(_shapes_bytes(op.result_shapes) +
+                                    _shapes_bytes(_operand_shapes(comp, op))))
+                cm = re.search(r"calls=%?([\w.\-]+)", op.attrs)
+                if cm:
+                    inner = cost_of(cm.group(1), depth + 1)
+                    total += Cost(inner.flops, 0.0, dict(inner.coll_bytes),
+                                  dict(inner.coll_counts))
+            elif oc in ("call", "conditional", "async-start"):
+                for cname in re.findall(
+                        r"(?:to_apply|called_computations|calls)=\{?%?([\w.\-]+)",
+                        op.attrs):
+                    if cname in comps:
+                        total += cost_of(cname, depth + 1)
+            elif oc in ("dynamic-slice", "gather", "slice"):
+                # traffic = the slice read + written, NOT the whole source
+                total += Cost(0.0, 2.0 * _shapes_bytes(op.result_shapes))
+            elif oc == "dynamic-update-slice":
+                # read-modify-write of the updated region only
+                upd = (comp.symbols.get(op.operand_names[1], [])
+                       if len(op.operand_names) > 1 else [])
+                total += Cost(0.0, 2.0 * _shapes_bytes(upd))
+            elif oc == "scatter":
+                upd = (comp.symbols.get(op.operand_names[-1], [])
+                       if op.operand_names else [])
+                total += Cost(0.0, 2.0 * _shapes_bytes(upd))
+            elif oc in _MOVE_OPS:
+                total += Cost(0.0,
+                              float(_shapes_bytes(op.result_shapes) +
+                                    _shapes_bytes(_operand_shapes(comp, op))))
+        cache[name] = total
+        return total
+
+    return cost_of(entry)
+
+
+# Simple interfaces ---------------------------------------------------------
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    return {k: int(v) for k, v in analyze_entry(hlo_text).coll_bytes.items()}
+
+
+def collective_op_counts(hlo_text: str) -> Dict[str, int]:
+    return {k: int(v) for k, v in analyze_entry(hlo_text).coll_counts.items()}
+
+
+def flops_breakdown(hlo_text: str, top: int = 25) -> List[Tuple[str, float, float]]:
+    """Trip-weighted (computation, flops, bytes) hot list for perf work.
+
+    Walks the call graph like analyze_entry but attributes each
+    computation's OWN ops (not its callees) scaled by the product of
+    enclosing trip counts — a poor man's profile of the compiled step.
+    """
+    comps, entry = parse_computations(hlo_text)
+    own: Dict[str, Cost] = {}
+    mult: Dict[str, float] = {}
+
+    def own_cost(name: str) -> Cost:
+        if name in own:
+            return own[name]
+        comp = comps.get(name)
+        total = Cost()
+        if comp is None:
+            own[name] = total
+            return total
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += Cost(_dot_flops(comp, op),
+                              float(_shapes_bytes(op.result_shapes) +
+                                    _shapes_bytes(_operand_shapes(comp, op))))
+            elif op.opcode == "convolution":
+                total += Cost(_conv_flops(comp, op), 0.0)
+            elif op.opcode in ("fusion", "custom-call"):
+                total += Cost(0.0,
+                              float(_shapes_bytes(op.result_shapes) +
+                                    _shapes_bytes(_operand_shapes(comp, op))))
+        own[name] = total
+        return total
+
+    def walk(name: str, m: float, depth=0):
+        comp = comps.get(name)
+        if comp is None or depth > 60:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for op in comp.ops:
+            if op.opcode == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+                bm = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                trips = _trip_count(comps, cm.group(1)) if cm else 1.0
+                if bm:
+                    walk(bm.group(1), m * trips, depth + 1)
+            elif op.opcode in ("fusion", "custom-call", "call", "conditional"):
+                for cname in re.findall(
+                        r"(?:to_apply|called_computations|calls)=\{?%?([\w.\-]+)",
+                        op.attrs):
+                    if cname in comps:
+                        walk(cname, m, depth + 1)
+
+    walk(entry, 1.0)
+    rows = []
+    for name, m in mult.items():
+        c = own_cost(name)
+        if c.flops or c.bytes:
+            rows.append((name, c.flops * m, c.bytes * m))
+    rows.sort(key=lambda r: -r[1])
+    return rows[:top]

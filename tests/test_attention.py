@@ -1,0 +1,92 @@
+"""Blocked flash attention vs the naive O(S^2) oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (decode_attention, flash_attention,
+                                    reference_attention)
+
+
+def _mk(key, B, Sq, Sk, H, KV, hd, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("S,window,causal,qb,kb", [
+    (64, None, True, 16, 16),
+    (64, 16, True, 16, 16),
+    (96, 32, True, 32, 16),
+    (50, None, False, 16, 16),   # non-aligned + bidirectional
+    (33, 8, True, 16, 16),       # non-aligned + window
+    (128, None, True, 128, 128),  # single block
+])
+def test_flash_matches_reference(S, window, causal, qb, kb):
+    q, k, v = _mk(jax.random.PRNGKey(0), 2, S, S, 4, 2, 16)
+    got = flash_attention(q, k, v, window=window, q_block=qb, kv_block=kb,
+                          causal=causal)
+    want = reference_attention(q, k, v, window=window, causal=causal)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    S=st.integers(4, 80),
+    H=st.sampled_from([1, 2, 4, 6]),
+    ratio=st.sampled_from([1, 2]),
+    hd=st.sampled_from([8, 16, 32]),
+    window=st.sampled_from([None, 4, 16]),
+)
+def test_flash_property_sweep(S, H, ratio, hd, window):
+    if H % ratio:
+        return
+    KV = H // ratio
+    q, k, v = _mk(jax.random.PRNGKey(S), 1, S, S, H, KV, hd)
+    got = flash_attention(q, k, v, window=window, q_block=16, kv_block=16)
+    want = reference_attention(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_flash_gqa_equals_repeated_mha():
+    """GQA with repeated KV == MHA on the expanded heads."""
+    q, k, v = _mk(jax.random.PRNGKey(3), 2, 32, 32, 4, 2, 16)
+    got = flash_attention(q, k, v, q_block=16, kv_block=16)
+    k_rep = jnp.repeat(k, 2, axis=2)
+    v_rep = jnp.repeat(v, 2, axis=2)
+    # repeat pattern: head h uses kv group h // rep -> repeat matches
+    want = flash_attention(
+        q.reshape(2, 32, 2, 2, 16).reshape(2, 32, 4, 16),
+        k_rep, v_rep, q_block=16, kv_block=16)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_last_row_of_seq():
+    """Decode of token t == row t of full-sequence attention."""
+    S = 40
+    q, k, v = _mk(jax.random.PRNGKey(4), 2, S, S, 4, 2, 16)
+    full = reference_attention(q, k, v)
+    got = decode_attention(q[:, S - 1:S], k, v, cache_len=S)
+    np.testing.assert_allclose(got[:, 0], full[:, S - 1], atol=2e-5, rtol=2e-5)
+
+
+def test_decode_respects_cache_len():
+    S, valid = 64, 37
+    q, k, v = _mk(jax.random.PRNGKey(5), 1, S, S, 2, 2, 8)
+    got = decode_attention(q[:, valid - 1:valid], k, v, cache_len=valid)
+    want = reference_attention(q[:, :valid], k[:, :valid], v[:, :valid])
+    np.testing.assert_allclose(got[:, 0], want[:, valid - 1], atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_q_offset_prefill_continuation():
+    """Attention over [0,S) == concat(prefill [0,P), continuation [P,S))."""
+    S, P = 48, 32
+    q, k, v = _mk(jax.random.PRNGKey(6), 1, S, S, 2, 1, 8)
+    full = reference_attention(q, k, v)
+    part = flash_attention(q[:, P:], k, v, q_offset=P, q_block=16,
+                           kv_block=16)
+    np.testing.assert_allclose(part, full[:, P:], atol=2e-5, rtol=2e-5)

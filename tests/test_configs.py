@@ -1,0 +1,120 @@
+"""Assigned-architecture configs: exact values + reduced-variant invariants."""
+import pytest
+
+from repro.configs import ARCH_CONFIGS, CNN_CONFIGS, INPUT_SHAPES, get_config
+from repro.configs.base import ATTN_GLOBAL, ATTN_LOCAL, RGLRU, SSD
+
+# (name, family, L, d_model, H, KV, d_ff, vocab)
+ASSIGNED = [
+    ("arctic-480b", "moe", 35, 7168, 56, 8, 4864, 32000),
+    ("granite-moe-1b-a400m", "moe", 24, 1024, 16, 8, 512, 49155),
+    ("smollm-135m", "dense", 30, 576, 9, 3, 1536, 49152),
+    ("qwen2-vl-7b", "vlm", 28, 3584, 28, 4, 18944, 152064),
+    ("h2o-danube-3-4b", "dense", 24, 3840, 32, 8, 10240, 32000),
+    ("recurrentgemma-9b", "hybrid", 38, 4096, 16, 1, 12288, 256000),
+    ("gemma3-1b", "dense", 26, 1152, 4, 1, 6912, 262144),
+    ("whisper-large-v3", "audio", 32, 1280, 20, 20, 5120, 51866),
+    ("mamba2-130m", "ssm", 24, 768, 0, 0, 0, 50280),
+    ("stablelm-3b", "dense", 32, 2560, 32, 32, 6912, 50304),
+]
+
+
+@pytest.mark.parametrize("name,family,L,d,H,KV,dff,V", ASSIGNED)
+def test_assigned_values(name, family, L, d, H, KV, dff, V):
+    cfg = get_config(name)
+    assert cfg.family == family
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    if family != "ssm":
+        assert cfg.n_heads == H
+        assert cfg.n_kv_heads == KV
+    assert cfg.d_ff == dff
+    assert cfg.vocab_size == V
+    assert cfg.source, f"{name} missing citation"
+
+
+def test_pool_covers_all_ten():
+    assert len(ARCH_CONFIGS) == 10
+    assert {c.family for c in ARCH_CONFIGS.values()} == {
+        "moe", "dense", "vlm", "hybrid", "audio", "ssm"}
+
+
+def test_moe_settings():
+    a = get_config("arctic-480b")
+    assert (a.n_experts, a.top_k, a.dense_residual) == (128, 2, True)
+    g = get_config("granite-moe-1b-a400m")
+    assert (g.n_experts, g.top_k) == (32, 8)
+
+
+def test_block_patterns():
+    assert set(get_config("mamba2-130m").block_pattern) == {SSD}
+    rg = get_config("recurrentgemma-9b").block_pattern
+    assert rg[:3] == (RGLRU, RGLRU, ATTN_LOCAL)       # 1:2 attn:recurrent
+    g3 = get_config("gemma3-1b").block_pattern
+    assert g3[:6] == (ATTN_LOCAL,) * 5 + (ATTN_GLOBAL,)  # 5:1 local:global
+    assert set(get_config("h2o-danube-3-4b").block_pattern) == {ATTN_LOCAL}
+
+
+def test_whisper_is_encdec():
+    w = get_config("whisper-large-v3")
+    assert w.n_enc_layers == 32
+    assert w.n_audio_frames == 1500
+
+
+def test_mamba2_state():
+    m = get_config("mamba2-130m")
+    assert m.ssm_state == 128
+    assert m.is_attention_free
+
+
+@pytest.mark.parametrize("name", sorted(ARCH_CONFIGS))
+def test_reduced_invariants(name):
+    cfg = get_config(name)
+    r = cfg.reduced()
+    assert r.n_layers == 2
+    assert r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.vocab_size <= 512
+    # same family + same block kinds exercised
+    assert r.family == cfg.family
+    assert set(r.block_pattern) <= set(cfg.block_pattern)
+    if cfg.n_heads:
+        assert r.n_heads % r.n_kv_heads == 0
+        assert r.d_model % r.n_heads == 0
+    if cfg.mrope:
+        assert sum(r.mrope_sections) == r.head_dim // 2
+
+
+def test_param_counts_plausible():
+    # order-of-magnitude sanity vs the names
+    assert 1.0e8 < get_config("smollm-135m").param_count() < 1.9e8
+    assert 1.0e8 < get_config("mamba2-130m").param_count() < 2.0e8
+    assert 2.5e9 < get_config("stablelm-3b").param_count() < 4.5e9
+    assert 3.0e9 < get_config("h2o-danube-3-4b").param_count() < 5.0e9
+    assert 6e9 < get_config("qwen2-vl-7b").param_count() < 9.5e9
+    assert 7e9 < get_config("recurrentgemma-9b").param_count() < 11e9
+    arctic = get_config("arctic-480b")
+    assert 3.5e11 < arctic.param_count() < 5.6e11
+    assert arctic.active_param_count() < 0.1 * arctic.param_count()
+    gr = get_config("granite-moe-1b-a400m")
+    assert gr.param_count() < 2.2e9
+    assert gr.active_param_count() < gr.param_count()
+
+
+def test_input_shapes_exact():
+    assert (INPUT_SHAPES["train_4k"].seq_len,
+            INPUT_SHAPES["train_4k"].global_batch) == (4096, 256)
+    assert (INPUT_SHAPES["prefill_32k"].seq_len,
+            INPUT_SHAPES["prefill_32k"].global_batch) == (32768, 32)
+    assert (INPUT_SHAPES["decode_32k"].seq_len,
+            INPUT_SHAPES["decode_32k"].global_batch) == (32768, 128)
+    assert (INPUT_SHAPES["long_500k"].seq_len,
+            INPUT_SHAPES["long_500k"].global_batch) == (524288, 1)
+
+
+def test_cnn_configs_match_paper():
+    m = CNN_CONFIGS["cnn_mnist"]
+    assert m.conv_channels == (32, 64) and m.fc_units == (512,)
+    c = CNN_CONFIGS["cnn_cifar"]
+    assert c.conv_channels == (64, 64) and c.fc_units == (384, 192)
+    assert c.pool_size == 3 and c.pool_stride == 2

@@ -1,0 +1,129 @@
+"""Data pipeline: synthetic generators + the paper's three partitions."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.federated import FederatedDataset
+from repro.data.partition import (artificial_noniid_partition,
+                                  class_split_partition, iid_partition,
+                                  permuted_partition, source_partition)
+from repro.data.synth import class_images, token_stream
+
+
+def _small():
+    return class_images(30, n_classes=10, shape=(12, 12, 1), seed=0)
+
+
+def test_class_images_shapes_and_labels():
+    x, y = _small()
+    assert x.shape == (300, 12, 12, 1)
+    assert y.shape == (300,)
+    assert set(np.unique(y)) == set(range(10))
+
+
+def test_class_images_classes_are_separable():
+    """Class templates differ: within-class distance << between-class."""
+    x, y = class_images(50, n_classes=4, shape=(12, 12, 1), seed=0, noise=0.1)
+    means = np.stack([x[y == c].mean(0).ravel() for c in range(4)])
+    d = np.linalg.norm(means[:, None] - means[None], axis=-1)
+    off = d[~np.eye(4, dtype=bool)]
+    assert off.min() > 0.5  # templates are distinct
+
+
+@pytest.mark.parametrize("fn,kw", [
+    (iid_partition, {}),
+    (artificial_noniid_partition, {"shards_per_client": 2}),
+    (permuted_partition, {}),
+])
+def test_partitions_cover_all_examples_disjointly(fn, kw):
+    x, y = _small()
+    parts = fn(x, y, 5, **kw)
+    total = sum(len(p["x"]) for p in parts)
+    assert total == len(x)
+
+
+def test_artificial_noniid_limits_classes_per_client():
+    """2 shards of label-sorted data -> each client sees <= ~2-3 classes."""
+    x, y = class_images(100, n_classes=10, shape=(8, 8, 1), seed=0)
+    parts = artificial_noniid_partition(x, y, 10, shards_per_client=2, seed=0)
+    for p in parts:
+        assert len(np.unique(p["y"])) <= 3
+    # while IID clients see (almost) all classes
+    parts_iid = iid_partition(x, y, 10, seed=0)
+    assert np.mean([len(np.unique(p["y"])) for p in parts_iid]) > 8
+
+
+def test_class_split_partition_disjoint_classes():
+    x, y = _small()
+    parts = class_split_partition(x, y, 2, n_classes=10)
+    c0 = set(np.unique(parts[0]["y"]))
+    c1 = set(np.unique(parts[1]["y"]))
+    assert c0 == {0, 1, 2, 3, 4} and c1 == {5, 6, 7, 8, 9}
+
+
+def test_permuted_partition_applies_fixed_permutation():
+    """Same client = same permutation; different clients differ (user-
+    specific non-IID: same classes, different input distributions)."""
+    x, y = _small()
+    parts = permuted_partition(x, y, 3, seed=0)
+    perms = [p["perm"] for p in parts]
+    assert not np.array_equal(perms[0], perms[1])
+    # each client's label distribution still covers most classes
+    for p in parts:
+        assert len(np.unique(p["y"])) >= 8
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_clients=st.integers(2, 10), spc=st.integers(1, 4))
+def test_artificial_partition_property(n_clients, spc):
+    x, y = class_images(20, n_classes=5, shape=(6, 6, 1), seed=1)
+    parts = artificial_noniid_partition(x, y, n_clients,
+                                        shards_per_client=spc, seed=1)
+    assert len(parts) == n_clients
+    assert sum(len(p["x"]) for p in parts) == len(x)
+
+
+def test_token_stream_vocab_and_structure():
+    toks, src = token_stream(20, 32, vocab=1000, n_sources=4, seed=0)
+    assert toks.shape == (20, 33)
+    assert toks.max() < 1000 and toks.min() >= 0
+    assert set(np.unique(src)) <= set(range(4))
+
+
+def test_token_stream_has_learnable_bigram():
+    """Even positions continue the previous token's phrase — a perfect
+    bigram predictor exists, so training loss can actually decrease."""
+    toks, src = token_stream(50, 64, vocab=512, n_sources=1, seed=0)
+    # find the shift: t1 = (t0 + shift) % vocab_eff at odd positions
+    diffs = (toks[:, 1::2].astype(np.int64)
+             - toks[:, 0:-1:2].astype(np.int64)) % 512
+    assert len(np.unique(diffs)) == 1
+
+
+def test_source_partition_groups_sources():
+    toks, src = token_stream(60, 16, vocab=256, n_sources=6, seed=0)
+    parts = source_partition(toks, src, 3, sources_per_client=2, seed=0)
+    assert len(parts) == 3
+    for p in parts:
+        assert len(p["tokens"]) > 0
+
+
+def test_federated_dataset_round_batch_shapes():
+    x, y = _small()
+    ds = FederatedDataset(iid_partition(x, y, 4), {"x": x[:50], "y": y[:50]})
+    cids = ds.sample_clients(3)
+    batches, sizes = ds.round_batch(cids, local_steps=2, batch=8)
+    assert batches["x"].shape == (3, 2, 8, 12, 12, 1)
+    assert batches["y"].shape == (3, 2, 8)
+    assert sizes.shape == (3,)
+    assert all(s == 75 for s in sizes)  # 300/4
+
+
+def test_federated_dataset_lm_batches_shift_labels():
+    toks, src = token_stream(40, 16, vocab=128, n_sources=4, seed=0)
+    ds = FederatedDataset(source_partition(toks, src, 4), {"tokens": toks})
+    batches, _ = ds.round_batch([0, 1], local_steps=1, batch=4)
+    assert batches["tokens"].shape == (2, 1, 4, 16)
+    assert batches["labels"].shape == (2, 1, 4, 16)
+    np.testing.assert_array_equal(batches["labels"][..., :-1],
+                                  batches["tokens"][..., 1:])

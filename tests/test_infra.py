@@ -1,0 +1,178 @@
+"""Optimizers, schedules, checkpointing, comm accounting, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (load_tree, restore_server_state, save_tree,
+                                 save_server_state)
+from repro.configs import ARCH_CONFIGS
+from repro.fl.comm import CommLog, tree_bytes
+from repro.launch.mesh import make_host_mesh
+from repro.launch import sharding as sh
+from repro.models import transformer as tfm
+from repro.optim import exp_decay_per_round, make_optimizer
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,momentum", [("sgd", 0.0), ("sgd", 0.9),
+                                           ("adam", 0.0)])
+def test_optimizer_converges_on_quadratic(kind, momentum):
+    opt_init, opt_update = make_optimizer(kind, momentum)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt_init(params)
+    lr = 0.1 if kind == "sgd" else 0.3
+    for _ in range(200):
+        grads = jax.tree.map(lambda p: 2 * (p - target), params)
+        params, state = opt_update(params, grads, state, lr)
+    np.testing.assert_allclose(params["w"], target, atol=1e-2)
+
+
+def test_sgd_momentum_differs_from_plain():
+    init0, up0 = make_optimizer("sgd", 0.0)
+    init9, up9 = make_optimizer("sgd", 0.9)
+    p = {"w": jnp.ones(2)}
+    g = {"w": jnp.ones(2)}
+    a, _ = up0(p, g, init0(p), 0.1)
+    s9 = init9(p)
+    b, s9 = up9(p, g, s9, 0.1)
+    np.testing.assert_allclose(a["w"], b["w"])  # first step identical
+    a2, _ = up0(a, g, init0(a), 0.1)
+    b2, _ = up9(b, g, s9, 0.1)
+    assert float(jnp.abs(a2["w"] - b2["w"]).max()) > 1e-6  # then diverge
+
+
+def test_exp_decay_schedule():
+    lr = exp_decay_per_round(2e-3, 0.985)
+    np.testing.assert_allclose(float(lr(0)), 2e-3, rtol=1e-6)
+    np.testing.assert_allclose(float(lr(10)), 2e-3 * 0.985 ** 10, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+def test_tree_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3),
+            "nested": {"b": jnp.ones(4), "t": (jnp.zeros(2), jnp.ones(1))}}
+    p = str(tmp_path / "t.npz")
+    save_tree(p, tree)
+    back = load_tree(p, tree)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y), tree, back)
+
+
+def test_server_state_roundtrip(tmp_path):
+    state = {"model": {"w": jnp.ones((3, 3))},
+             "fusion": {"lam": jnp.full((4,), 0.5)}}
+    d = str(tmp_path / "ckpt")
+    save_server_state(d, state, round_idx=17, extra={"lr": 1e-3})
+    back, r = restore_server_state(d, state)
+    assert r == 17
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(x, y), state, back)
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting
+# ---------------------------------------------------------------------------
+
+def test_tree_bytes():
+    t = {"a": jnp.zeros((10, 10), jnp.float32), "b": jnp.zeros(5, jnp.int32)}
+    assert tree_bytes(t) == 400 + 20
+
+
+def test_commlog_counts_fusion_upload_overhead():
+    state = {"model": {"w": jnp.zeros((100,), jnp.float32)}}
+    state_f = dict(state, fusion={"w": jnp.zeros((10,), jnp.float32)})
+    a, b = CommLog(), CommLog()
+    a.log_round(state, n_clients=4, metrics={})
+    b.log_round(state_f, n_clients=4, metrics={})
+    assert a.bytes_down == b.bytes_down == 4 * 400
+    assert b.bytes_up == a.bytes_up + 4 * 40   # fusion module rides along
+
+
+def test_commlog_rounds_to_milestone():
+    log = CommLog()
+    state = {"model": {"w": jnp.zeros(1)}}
+    for acc in (0.3, 0.5, 0.93, 0.96):
+        log.log_round(state, 1, {"acc": acc})
+    assert log.rounds_to("acc", 0.94) == 4
+    assert log.rounds_to("acc", 0.5) == 2
+    assert log.rounds_to("acc", 0.99) == -1
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules (structure-level; the 256/512-device check is the dry-run)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(ARCH_CONFIGS))
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_pspecs_rank_matches(name, fsdp):
+    """Every param leaf gets a PartitionSpec of matching rank, and sharded
+    dims exist — on any mesh (host mesh here; sizes 1 so everything fits)."""
+    cfg = ARCH_CONFIGS[name].reduced()
+    mesh = make_host_mesh()
+    struct = jax.eval_shape(lambda k: tfm.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    shardings = sh.param_shardings(mesh, struct, fsdp=fsdp)
+
+    def check(leaf, s):
+        assert len(s.spec) <= leaf.ndim, (leaf.shape, s.spec)
+
+    jax.tree.map(check, struct, shardings)
+
+
+def test_shard_if_divisibility():
+    mesh = make_host_mesh()  # sizes 1 -> everything "fits"
+    assert sh.shard_if(4, mesh, "data") == "data"
+    assert sh.shard_if(4, mesh, "nonexistent") is None
+
+
+def test_cache_shardings_cover_tree():
+    cfg = ARCH_CONFIGS["gemma3-1b"].reduced()
+    mesh = make_host_mesh()
+    struct = jax.eval_shape(lambda: tfm.init_cache(cfg, 4, 64))
+    shardings = sh.cache_shardings(mesh, struct)
+    assert (jax.tree.structure(shardings, is_leaf=lambda x: hasattr(x, "spec"))
+            == jax.tree.structure(struct))
+
+
+def test_server_checkpoint_resume(tmp_path):
+    """run_federated resumes from the last checkpoint: a 4-round run
+    interrupted at 2 + resumed equals the checkpointed state at round 4."""
+    import dataclasses
+    import numpy as np
+    from repro.configs import CNN_CONFIGS
+    from repro.configs.base import FLConfig
+    from repro.data.federated import FederatedDataset
+    from repro.data.partition import iid_partition
+    from repro.data.synth import class_images
+    from repro.fl.server import run_federated
+    from repro.models.registry import make_bundle
+
+    cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"], input_shape=(8, 8, 1),
+                              conv_channels=(4,), fc_units=(8,), dropout=0.0)
+    bundle = make_bundle(cfg)
+    x, y = class_images(10, n_classes=4, shape=(8, 8, 1), seed=0)
+    data = FederatedDataset(iid_partition(x, y, 2), {"x": x[:8], "y": y[:8]})
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=1,
+                  local_batch=4, lr=0.05)
+    d = str(tmp_path / "ckpt")
+
+    # run 2 rounds with checkpointing, then resume to 4
+    run_federated(bundle, fl, data, rounds=2, checkpoint_dir=d,
+                  checkpoint_every=1, eval_every=100)
+    res = run_federated(bundle, fl, data, rounds=4, checkpoint_dir=d,
+                        checkpoint_every=1, eval_every=100)
+    # resumed run only executed rounds 3..4
+    assert res.comm.rounds == 2
+    # and a fresh directory starts from scratch
+    res_fresh = run_federated(bundle, fl, data, rounds=2,
+                              checkpoint_dir=str(tmp_path / "fresh"),
+                              eval_every=100)
+    assert res_fresh.comm.rounds == 2

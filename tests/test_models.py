@@ -1,0 +1,212 @@
+"""Model-layer oracles: MoE, SSD, RG-LRU, RoPE, norms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssd as ssd_mod
+from repro.models.layers import layernorm, layernorm_init, rmsnorm, rmsnorm_init
+from repro.models.rope import apply_mrope, apply_rope
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,k,act", [(4, 1, "silu"), (4, 2, "silu"),
+                                     (8, 2, "gelu"), (4, 4, "silu")])
+def test_moe_matches_dense_reference_at_full_capacity(E, k, act):
+    d, f = 16, 32
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, act)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    got, _ = moe_mod.moe_apply(params, x, top_k=k, act=act,
+                               capacity_factor=float(E))  # cap >= T
+    want = moe_mod.moe_reference(params, x, top_k=k, act=act)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_moe_dense_residual():
+    d, f, E = 8, 16, 4
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu",
+                              dense_residual=True, d_ff=32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, d))
+    got, _ = moe_mod.moe_apply(params, x, top_k=2, act="silu",
+                               capacity_factor=float(E), dense_residual=True)
+    want = moe_mod.moe_reference(params, x, top_k=2, act="silu",
+                                 dense_residual=True)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """A tight capacity factor must drop over-capacity tokens (output
+    differs from the dense reference) — the documented trade-off."""
+    d, f, E = 8, 16, 4
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu")
+    # craft inputs that all route to the same expert: identical tokens
+    x = jnp.broadcast_to(
+        jax.random.normal(jax.random.PRNGKey(1), (1, 1, d)), (1, 16, d))
+    tight, _ = moe_mod.moe_apply(params, x, top_k=1, act="silu",
+                                 capacity_factor=0.25)
+    full, _ = moe_mod.moe_apply(params, x, top_k=1, act="silu",
+                                capacity_factor=float(E))
+    assert float(jnp.abs(tight - full).max()) > 1e-6
+
+
+def test_moe_aux_loss_minimal_when_balanced():
+    """Uniform routing gives aux ~= 1 (the Switch lower bound)."""
+    d, f, E = 8, 16, 4
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu")
+    # zero router logits -> uniform gates
+    params = dict(params, router=jnp.zeros_like(params["router"]))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, d))
+    _, aux = moe_mod.moe_apply(params, x, top_k=2, act="silu",
+                               capacity_factor=float(E))
+    assert 0.9 < float(aux) < 1.1
+
+
+# ---------------------------------------------------------------------------
+# SSD (mamba2)
+# ---------------------------------------------------------------------------
+
+SSD_KW = dict(expand=2, d_state=8, head_dim=8, conv_width=4)
+
+
+@pytest.mark.parametrize("S,chunk", [(8, 4), (16, 8), (12, 8), (32, 32)])
+def test_ssd_chunked_matches_stepwise(S, chunk):
+    d = 16
+    params = ssd_mod.ssd_init(jax.random.PRNGKey(0), d, **SSD_KW)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, d))
+    got = ssd_mod.ssd_apply(params, x, chunk=chunk, **SSD_KW)
+    want = ssd_mod.ssd_reference(params, x, **SSD_KW)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_decode_continues_sequence():
+    """decode(x_t | state after x_{<t}) == seq output at t."""
+    d, S = 16, 12
+    params = ssd_mod.ssd_init(jax.random.PRNGKey(0), d, **SSD_KW)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, d))
+    full = ssd_mod.ssd_reference(params, x, **SSD_KW)
+    cache = ssd_mod.ssd_init_cache(1, d, **SSD_KW)
+    for t in range(S):
+        y, cache = ssd_mod.ssd_decode(params, x[:, t:t + 1], cache, **SSD_KW)
+    np.testing.assert_allclose(y, full[:, -1:], atol=1e-5, rtol=1e-4)
+
+
+def test_ssd_state_decays():
+    """With zero input, the carried state must not grow."""
+    d = 16
+    params = ssd_mod.ssd_init(jax.random.PRNGKey(0), d, **SSD_KW)
+    cache = ssd_mod.ssd_init_cache(1, d, **SSD_KW)
+    cache = dict(cache, h=jnp.ones_like(cache["h"]))
+    x = jnp.zeros((1, 1, d))
+    _, new = ssd_mod.ssd_decode(params, x, cache, **SSD_KW)
+    assert float(jnp.abs(new["h"]).max()) <= 1.0 + 1e-5
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def test_rglru_assoc_scan_matches_stepwise():
+    d, W, S = 12, 16, 20
+    params = rglru_mod.rglru_init(jax.random.PRNGKey(0), d, W)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, S, d))
+    got = rglru_mod.rglru_apply(params, x)
+    want = rglru_mod.rglru_reference(params, x)
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_decode_continues_sequence():
+    d, W, S = 8, 8, 10
+    params = rglru_mod.rglru_init(jax.random.PRNGKey(0), d, W)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, S, d))
+    full = rglru_mod.rglru_apply(params, x)
+    cache = rglru_mod.rglru_init_cache(1, W)
+    for t in range(S):
+        y, cache = rglru_mod.rglru_decode(params, x[:, t:t + 1], cache)
+    np.testing.assert_allclose(y, full[:, -1:], atol=1e-5, rtol=1e-4)
+
+
+def test_rglru_stability():
+    """|a_t| < 1 by construction: long constant input cannot blow up."""
+    d, W = 8, 8
+    params = rglru_mod.rglru_init(jax.random.PRNGKey(0), d, W)
+    x = jnp.ones((1, 512, d))
+    y = rglru_mod.rglru_apply(params, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.abs(y).max()) < 1e3
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def test_rope_preserves_norm():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 8, 1, 16))
+    q2, k2 = apply_rope(q, k, jnp.arange(8), theta=1e4, head_dim=16)
+    np.testing.assert_allclose(jnp.linalg.norm(q2, axis=-1),
+                               jnp.linalg.norm(q, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_property():
+    """<RoPE(q,m), RoPE(k,n)> depends only on m - n."""
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+
+    def dot_at(m, n):
+        qm, _ = apply_rope(q, q, jnp.array([m]), theta=1e4, head_dim=hd)
+        kn, _ = apply_rope(k, k, jnp.array([n]), theta=1e4, head_dim=hd)
+        return float(jnp.sum(qm * kn))
+
+    np.testing.assert_allclose(dot_at(3, 1), dot_at(10, 8), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(7, 7), dot_at(0, 0), rtol=1e-4)
+
+
+def test_partial_rotary_leaves_tail_untouched():
+    hd = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 2, hd))
+    q2, _ = apply_rope(q, q, jnp.arange(4), theta=1e4, head_dim=hd,
+                       partial_pct=0.25)
+    rot = int(hd * 0.25)
+    np.testing.assert_allclose(q2[..., rot:], q[..., rot:])
+    assert float(jnp.abs(q2[:, 1:, :, :rot] - q[:, 1:, :, :rot]).max()) > 1e-6
+
+
+def test_mrope_equals_rope_when_positions_equal():
+    """With t==h==w position ids, M-RoPE must equal standard RoPE."""
+    hd, S = 16, 6
+    sections = (2, 3, 3)
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, S, 2, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, S, 1, hd))
+    pos = jnp.arange(S)
+    pos3 = jnp.broadcast_to(pos, (3, 1, S))
+    qa, ka = apply_mrope(q, k, pos3, theta=1e4, head_dim=hd,
+                         sections=sections)
+    qb, kb = apply_rope(q, k, pos, theta=1e4, head_dim=hd)
+    np.testing.assert_allclose(qa, qb, atol=1e-5)
+    np.testing.assert_allclose(ka, kb, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def test_rmsnorm_unit_scale_output_rms():
+    p = rmsnorm_init(32)
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    y = rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(y * y, axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-3)
+
+
+def test_layernorm_zero_mean_unit_var():
+    p = layernorm_init(32)
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 32)) * 3 + 7
+    y = layernorm(p, x)
+    np.testing.assert_allclose(jnp.mean(y, -1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(jnp.var(y, -1), 1.0, atol=1e-3)
