@@ -11,13 +11,15 @@ import argparse
 import time
 
 from benchmarks import (fig4_fedmmd, fig5_fedfusion, fig6_newclient,
-                        kernels_bench, roofline_report, table2_milestones)
+                        fig7_compression, kernels_bench, roofline_report,
+                        table2_milestones)
 
 SUITES = {
     "fig4": fig4_fedmmd.run,          # FedMMD vs FedAvg vs L2
     "fig5": fig5_fedfusion.run,       # FedFusion operators + Table 1
     "table2": table2_milestones.run,  # rounds-to-milestone reductions
     "fig6": fig6_newclient.run,       # new-client generalization
+    "fig7": fig7_compression.run,     # wire codecs: acc vs uplink bytes
     "kernels": kernels_bench.run,     # kernel microbench + overhead claim
     "roofline": roofline_report.run,  # collate dry-run artifacts
 }

@@ -1,0 +1,49 @@
+"""Pluggable uplink/downlink compression for federated communication.
+
+The paper's headline metric is communication cost; this package supplies
+the codecs that actually reduce it.  A :class:`Codec` turns a model pytree
+(weights or deltas) into a wire payload and reports true wire bytes, so
+``CommLog`` can account real MB instead of idealized fp32 sizes.
+
+Codecs (select via ``FLConfig.uplink_codec`` / ``downlink_codec``):
+
+    identity            raw fp32 (baseline)
+    int8 / int4 / quant stochastic uniform quantization, per-leaf scale
+                        (``quant`` reads ``FLConfig.quant_bits``)
+    topk / topk_noef    top-k sparsification (+ client error feedback)
+    mask / lowrank      seed-expanded random sketching
+
+The quant hot paths (fused quantize+pack, scatter-unpack) run as Pallas
+kernels on TPU with pure-jnp references on CPU; a top-k threshold-select
+kernel is available via ``ops.topk_threshold_select`` for tie-free dense
+masking (the topk codec's residual uses the exact scatter complement so
+ties at the k-th magnitude never leak untransmitted mass) — see
+``repro.kernels.compress_pack`` and ``repro.kernels.ops``.
+"""
+from repro.compress.codec import Codec, IdentityCodec  # noqa: F401
+from repro.compress.quant import QuantCodec  # noqa: F401
+from repro.compress.sketch import SketchCodec  # noqa: F401
+from repro.compress.topk import TopKCodec  # noqa: F401
+
+CODEC_NAMES = ("identity", "quant", "int8", "int4", "topk", "topk_noef",
+               "mask", "lowrank")
+
+
+def make_codec(name: str, *, topk_frac: float = 0.05, quant_bits: int = 8,
+               impl: str = "auto") -> Codec:
+    """Build a codec by config name (see :data:`CODEC_NAMES`)."""
+    if name == "identity":
+        return IdentityCodec()
+    if name == "quant":
+        return QuantCodec(quant_bits, impl=impl)
+    if name in ("int8", "int4"):
+        return QuantCodec(int(name[3:]), impl=impl)
+    if name == "topk":
+        return TopKCodec(topk_frac, error_feedback=True, impl=impl)
+    if name == "topk_noef":
+        return TopKCodec(topk_frac, error_feedback=False, impl=impl)
+    if name == "mask":
+        return SketchCodec(topk_frac, mode="mask", impl=impl)
+    if name == "lowrank":
+        return SketchCodec(topk_frac, mode="lowrank", impl=impl)
+    raise ValueError(f"unknown codec {name!r}; choose from {CODEC_NAMES}")

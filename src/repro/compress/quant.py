@@ -1,0 +1,53 @@
+"""Stochastic int8 / int4 uniform quantization with per-leaf scale.
+
+Per leaf: scale = max|x| / qmax, codes = clip(floor(x/scale + u), ±qmax)
+with u ~ U[0,1) (unbiased stochastic rounding; u = 0.5 when no key is
+given).  int4 codes are nibble-packed two-per-byte, so the wire payload is
+n/8 of fp32.  The quantize+pack and unpack hot paths dispatch to the
+Pallas kernels in ``repro.kernels.compress_pack`` (jnp reference on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.codec import Codec
+from repro.kernels import ops
+
+
+class QuantCodec(Codec):
+    """Stochastic uniform quantizer; ``bits`` in {4, 8}."""
+
+    stateful = False
+    uses_key = True
+
+    def __init__(self, bits: int = 8, *, impl: str = "auto"):
+        assert bits in (4, 8), bits
+        self.bits = bits
+        self.impl = impl
+        self.name = f"int{bits}"
+
+    def _padded_n(self, i) -> int:
+        n = self._n(i)
+        return n + (n % 2 if self.bits == 4 else 0)
+
+    def _encode_leaf(self, x, state, key, i):
+        n = x.shape[0]
+        pn = self._padded_n(i)
+        if pn != n:
+            x = jnp.pad(x, (0, pn - n))
+        qmax = 127 if self.bits == 8 else 7
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+        if key is None:
+            noise = jnp.full((pn,), 0.5, jnp.float32)
+        else:
+            noise = jax.random.uniform(key, (pn,), jnp.float32)
+        packed = ops.quantize_pack(x, scale, noise, bits=self.bits,
+                                   impl=self.impl)
+        return {"q": packed, "scale": scale.reshape(1)}, state
+
+    def _decode_leaf(self, payload, i):
+        pn = self._padded_n(i)
+        y = ops.quantize_unpack(payload["q"], payload["scale"][0],
+                                bits=self.bits, n=pn, impl=self.impl)
+        return y[:self._n(i)]

@@ -1,0 +1,59 @@
+"""Top-k magnitude sparsification with client-side error feedback.
+
+Per leaf (flattened, k = max(1, round(frac * n))): transmit the k largest-
+magnitude entries as (int32 index, fp32 value) pairs — wire bytes = 8k
+vs 4n raw.  With error feedback (memory of what compression dropped, added
+back before the next encode) non-IID convergence stays close to the
+uncompressed baseline at aggressive sparsity, which is what lets the
+bytes-to-milestone metric actually improve.
+
+The residual uses the exact scatter complement (``g.at[idx].set(0)``) so
+ties at the k-th magnitude never leak untransmitted mass into the model.
+(The dense threshold-select approximation of decode∘encode exists as the
+``topk_select`` Pallas kernel — ``ops.topk_threshold_select`` — for
+callers that want tie-free dense masking without index traffic; this
+codec deliberately does NOT use it, because a tie at the threshold would
+make the dense mask disagree with the k-entry payload.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.codec import Codec
+
+
+class TopKCodec(Codec):
+    """Keep the top ``frac`` fraction of entries per leaf (by |value|)."""
+
+    uses_key = False
+
+    def __init__(self, frac: float = 0.05, *, error_feedback: bool = True,
+                 impl: str = "auto"):
+        assert 0.0 < frac <= 1.0, frac
+        self.frac = frac
+        self.error_feedback = error_feedback
+        self.stateful = error_feedback
+        self.impl = impl
+        self.name = "topk" if error_feedback else "topk_noef"
+
+    def _k(self, i) -> int:
+        return max(1, int(round(self.frac * self._n(i))))
+
+    def _init_leaf_state(self, i):
+        if not self.error_feedback:
+            return ()
+        return jnp.zeros((self._n(i),), jnp.float32)
+
+    def _encode_leaf(self, x, state, key, i):
+        g = x + state if self.error_feedback else x
+        _, idx = jax.lax.top_k(jnp.abs(g), self._k(i))
+        idx = idx.astype(jnp.int32)
+        val = jnp.take(g, idx)
+        payload = {"idx": idx, "val": val.astype(jnp.float32)}
+        new_state = g.at[idx].set(0.0) if self.error_feedback else state
+        return payload, new_state
+
+    def _decode_leaf(self, payload, i):
+        dense = jnp.zeros((self._n(i),), jnp.float32)
+        return dense.at[payload["idx"]].set(payload["val"])

@@ -20,6 +20,12 @@ SSD = "ssd"                     # Mamba-2 state-space-duality block
 FAMILIES = ("dense", "moe", "vlm", "hybrid", "ssm", "audio")
 FL_MODES = ("client_parallel", "client_sequential")
 
+# Wire codecs from repro.compress (kept literal here so the config layer
+# stays import-light; repro.compress.CODEC_NAMES is the authoritative set
+# and test_compress asserts the two stay in sync).
+CODEC_NAMES = ("identity", "quant", "int8", "int4", "topk", "topk_noef",
+               "mask", "lowrank")
+
 
 @dataclass(frozen=True)
 class ArchConfig:
@@ -259,9 +265,24 @@ class FLConfig:
     optimizer: str = "sgd"            # sgd | adam
     weighted_by_examples: bool = True
 
+    # --- communication codecs (repro.compress) ---
+    uplink_codec: str = "identity"    # client -> server delta codec
+    downlink_codec: str = "identity"  # server -> client broadcast codec
+    topk_frac: float = 0.05           # kept fraction (topk / mask / lowrank)
+    quant_bits: int = 8               # the "quant" codec's bit width
+
     def __post_init__(self):
         assert self.algorithm in ("fedavg", "fedmmd", "fedfusion", "fedl2")
         assert self.fusion_op in ("conv", "multi", "single")
+        assert self.uplink_codec in CODEC_NAMES, self.uplink_codec
+        assert self.downlink_codec in CODEC_NAMES, self.downlink_codec
+        assert 0.0 < self.topk_frac <= 1.0, self.topk_frac
+        assert self.quant_bits in (4, 8), self.quant_bits
+
+    @property
+    def compressed(self) -> bool:
+        return (self.uplink_codec, self.downlink_codec) != \
+            ("identity", "identity")
 
 
 @dataclass(frozen=True)

@@ -98,6 +98,123 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     return round_fn
 
 
+def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
+                             uplink, downlink, *, impl="auto"):
+    """A federated round with the wire path routed through codecs.
+
+    Returns round_fn(global_state, client_batches, n_examples, lr,
+    ef_state, down_mirror, key) -> (new_global_state, metrics,
+    new_ef_state, new_down_mirror):
+
+      1. downlink: the server broadcasts the *model update* against a
+         mirror of what clients already hold — it transmits
+         ``downlink.encode(model - mirror)`` and every client forms
+         ``bcast = mirror + decode(payload)``, which becomes the next
+         mirror.  Compressing the update (not the raw weights) is what
+         makes sparse downlink codecs sound: a top-k broadcast of the
+         weights themselves would hand clients a mostly-zero network,
+         while the mirrored update stream converges to the model
+         (EF21-style server compression).  The mirror gap itself carries
+         every previously-dropped unit of mass, so the compressor is
+         applied STATELESSLY here — adding an error-feedback residual on
+         top would count dropped mass twice and the stream provably
+         diverges (g_{r+1} = 2e_r - e_{r-1} on unselected coordinates).
+      2. each client trains locally, forms its delta vs the broadcast, and
+         uplinks ``uplink.encode(delta, ef)`` (error-feedback state is
+         per-client, threaded via ``ef_state`` with leading client axis).
+      3. the server decodes every payload and applies the aggregate to its
+         FULL-PRECISION model: ``model + Σ w_i · decode(payload_i)`` —
+         downlink codec error therefore never accumulates into the server
+         state (clients see it through the mirror only).  Identical to
+         FedAvg's weighted model average when both codecs are identity.
+
+    Fusion-module parameters (FedFusion) ride along uncompressed, exactly
+    as before — their raw bytes stay accounted in ``CommLog``.
+    """
+    assert mode in ("client_parallel", "client_sequential"), mode
+    trainer = make_local_trainer(bundle, fl, impl=impl)
+    is_fusion = fl.algorithm == "fedfusion"
+
+    def round_fn(global_state, client_batches, n_examples, lr, ef_state,
+                 down_mirror, key):
+        weights = normalize_weights(n_examples)
+        n_clients = weights.shape[0]
+        kd, ku = jax.random.split(key)
+        down_update = jax.tree.map(lambda m, w: m - w,
+                                   global_state["model"], down_mirror)
+        down_payload, _ = downlink.encode(
+            down_update, downlink.init_state(),   # stateless: see above
+            kd if downlink.uses_key else None)
+        bcast = jax.tree.map(lambda w, d: w + d.astype(w.dtype),
+                             down_mirror, downlink.decode(down_payload))
+        gf = global_state.get("fusion")
+        client_keys = jax.random.split(ku, n_clients)
+
+        def client_step(batches, ef, ck):
+            trainable, loss = trainer(bcast, gf, batches, lr)
+            delta = jax.tree.map(lambda a, b: a - b, trainable["model"],
+                                 bcast)
+            payload, new_ef = uplink.encode(
+                delta, ef, ck if uplink.uses_key else None)
+            decoded = uplink.decode(payload)
+            out = {"delta": decoded, "ef": new_ef, "loss": loss}
+            if is_fusion:
+                out["fusion"] = trainable["fusion"]
+            return out
+
+        if mode == "client_parallel":
+            outs = jax.vmap(client_step)(client_batches, ef_state,
+                                         client_keys)
+            agg_delta = weighted_mean(outs["delta"], weights)
+            new_ef = outs["ef"]
+            stacked_fusions = outs.get("fusion")
+            losses = outs["loss"]
+        else:
+            acc0 = zeros_like_tree(global_state["model"])
+            if is_fusion:
+                acc0 = (acc0, zeros_like_tree(gf))
+
+            def body(acc, xs):
+                batches, w, ef, ck = xs
+                out = client_step(batches, ef, ck)
+                if is_fusion:
+                    acc = (running_update(acc[0], out["delta"], w),
+                           running_update(acc[1], out["fusion"], w))
+                else:
+                    acc = running_update(acc, out["delta"], w)
+                return acc, (out["ef"], out["loss"])
+
+            acc, (new_ef, losses) = jax.lax.scan(
+                body, acc0, (client_batches, weights, ef_state, client_keys))
+            if is_fusion:
+                agg_delta, fusion_sum = acc
+                stacked_fusions = None
+            else:
+                agg_delta = acc
+
+        # apply the aggregate update to the FULL-PRECISION server model;
+        # the aggregate of the client models themselves is bcast+Σw·Δ, but
+        # folding the broadcast's codec error back into the server state
+        # would compound it round over round.
+        new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
+                                 global_state["model"], agg_delta)
+        new_state: Dict[str, Any] = {"model": new_model}
+        if is_fusion:
+            if mode == "client_parallel":
+                new_state["fusion"] = fusion_aggregate(
+                    fl.fusion_op, global_state["fusion"], stacked_fusions,
+                    weights, fl.ema_beta)
+            elif fl.fusion_op == "conv":
+                new_state["fusion"] = fusion_sum
+            else:
+                new_state["fusion"] = jax.tree.map(
+                    lambda old, new: fl.ema_beta * old
+                    + (1 - fl.ema_beta) * new, gf, fusion_sum)
+        return (new_state, {"local_loss": jnp.mean(losses)}, new_ef, bcast)
+
+    return round_fn
+
+
 def init_global_state(bundle: ModelBundle, fl: FLConfig, key):
     """Server line 1: initialise the global model (+ fusion module)."""
     from repro.core.fusion import fusion_init

@@ -26,16 +26,40 @@ class CommLog:
     bytes_down: int = 0
     history: List[Dict] = field(default_factory=list)
 
-    def log_round(self, global_state, n_clients: int, metrics: Dict):
+    def log_round(self, global_state, n_clients: int, metrics: Dict, *,
+                  wire_up: int = None, wire_down: int = None,
+                  n_down: int = None):
+        """Account one round.
+
+        ``wire_up`` / ``wire_down``: codec-reported bytes per client for the
+        model payload (repro.compress).  None falls back to the idealized
+        raw fp32 size — the pre-codec behaviour.  FedFusion's fusion module
+        crosses the wire uncompressed in BOTH directions (clients receive
+        the aggregated module and return their trained copy), so its raw
+        size rides along on up and down alike.
+        ``n_down``: receivers of the model broadcast; defaults to
+        ``n_clients``.  A mirror-based downlink codec is a multicast
+        *stream* — every client must hear every round's update to keep its
+        mirror current — so the server passes the full federation size
+        there, not just the round's sampled clients.  The fusion module is
+        only needed by the round's participants, so its raw bytes are
+        charged to ``n_clients`` receivers in both directions.
+        """
         model_b = tree_bytes(global_state["model"])
         fusion_b = tree_bytes(global_state.get("fusion", ()))
-        down = n_clients * model_b          # server -> clients: global model
-        up = n_clients * (model_b + fusion_b)  # clients -> server
+        n_down = n_clients if n_down is None else n_down
+        down = (n_down * (model_b if wire_down is None else wire_down)
+                + n_clients * fusion_b)
+        up = n_clients * ((model_b if wire_up is None else wire_up)
+                          + fusion_b)
         self.rounds += 1
         self.bytes_down += down
         self.bytes_up += up
         self.history.append({"round": self.rounds, "bytes_up": up,
-                             "bytes_down": down, **metrics})
+                             "bytes_down": down,
+                             "bytes_up_ideal": n_clients * (model_b
+                                                            + fusion_b),
+                             "cum_bytes_up": self.bytes_up, **metrics})
 
     def rounds_to(self, key: str, threshold: float) -> int:
         """First round where history[key] >= threshold (-1 if never)."""

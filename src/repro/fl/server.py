@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import make_codec
 from repro.configs.base import FLConfig
 from repro.core import accuracy, cross_entropy, init_global_state, make_round_fn
 from repro.core.fusion import fusion_apply
+from repro.core.rounds import make_compressed_round_fn
 from repro.data.federated import FederatedDataset
 from repro.fl.comm import CommLog
 from repro.models.registry import ModelBundle
@@ -64,7 +66,8 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
     checkpoint if one exists (round-resumable, paper Alg. 1 line 1 is
     only executed on a cold start)."""
     import os
-    from repro.checkpoint.io import restore_server_state, save_server_state
+    from repro.checkpoint.io import (load_tree, restore_server_state,
+                                     save_server_state, save_tree)
 
     key = jax.random.PRNGKey(seed)
     global_state = init_global_state(bundle, fl, key)
@@ -74,23 +77,64 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
         global_state, start_round = restore_server_state(checkpoint_dir,
                                                          global_state)
         global_state = jax.tree.map(jnp.asarray, global_state)
-    round_fn = jax.jit(make_round_fn(bundle, fl, mode))
     lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)
     comm = CommLog()
     test = data.test_batch()
+
+    # --- wire codecs (repro.compress) ---------------------------------
+    compressed = fl.compressed
+    wire_up = wire_down = None
+    if compressed:
+        uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac,
+                            quant_bits=fl.quant_bits)
+        downlink = make_codec(fl.downlink_codec, topk_frac=fl.topk_frac,
+                              quant_bits=fl.quant_bits)
+        uplink.bind(global_state["model"])
+        downlink.bind(global_state["model"])
+        wire_up = uplink.wire_bytes()
+        wire_down = downlink.wire_bytes()
+        round_fn = jax.jit(make_compressed_round_fn(bundle, fl, mode,
+                                                    uplink, downlink))
+        # per-client uplink EF residuals + the clients' broadcast-mirror,
+        # persisted across rounds (and checkpoints)
+        ef_template = uplink.init_state()
+        ef_all = jax.tree.map(
+            lambda z: np.zeros((data.n_clients,) + z.shape,
+                               np.dtype(z.dtype)), ef_template)
+        down_mirror = global_state["model"]
+        ef_path = (os.path.join(checkpoint_dir, "ef.npz")
+                   if checkpoint_dir else None)
+        if start_round and ef_path and os.path.exists(ef_path):
+            ef_all, down_mirror = load_tree(ef_path,
+                                            (ef_all, down_mirror))
+        round_key = jax.random.fold_in(key, 0x636f6d70)  # "comp"
+    else:
+        round_fn = jax.jit(make_round_fn(bundle, fl, mode))
 
     for r in range(start_round, rounds):
         cids = data.sample_clients(fl.clients_per_round)
         batches, sizes = data.round_batch(cids, fl.local_steps,
                                           fl.local_batch)
         batches = {k: jnp.asarray(v) for k, v in batches.items()}
-        global_state, metrics = round_fn(global_state, batches,
-                                         jnp.asarray(sizes), lr_at(r))
+        if compressed:
+            ef_round = jax.tree.map(lambda a: jnp.asarray(a[cids]), ef_all)
+            global_state, metrics, new_ef, down_mirror = round_fn(
+                global_state, batches, jnp.asarray(sizes), lr_at(r),
+                ef_round, down_mirror, jax.random.fold_in(round_key, r))
+            for dst, src in zip(jax.tree_util.tree_leaves(ef_all),
+                                jax.tree_util.tree_leaves(new_ef)):
+                dst[np.asarray(cids)] = np.asarray(src)
+        else:
+            global_state, metrics = round_fn(global_state, batches,
+                                             jnp.asarray(sizes), lr_at(r))
         metrics = {k: float(v) for k, v in metrics.items()}
         if (r + 1) % eval_every == 0:
             metrics.update(evaluate(bundle, fl, global_state, test,
                                     eval_examples))
-        comm.log_round(global_state, len(cids), metrics)
+        comm.log_round(global_state, len(cids), metrics,
+                       wire_up=wire_up, wire_down=wire_down,
+                       n_down=(data.n_clients
+                               if fl.downlink_codec != "identity" else None))
         if verbose:
             print(f"round {r+1:4d} " +
                   " ".join(f"{k}={v:.4f}" for k, v in metrics.items()))
@@ -99,7 +143,11 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
         if checkpoint_dir and (r + 1) % checkpoint_every == 0:
             save_server_state(checkpoint_dir, global_state, r + 1,
                               extra={"algorithm": fl.algorithm})
+            if compressed:
+                save_tree(ef_path, (ef_all, down_mirror))
     if checkpoint_dir:
         save_server_state(checkpoint_dir, global_state, rounds,
                           extra={"algorithm": fl.algorithm})
+        if compressed:
+            save_tree(ef_path, (ef_all, down_mirror))
     return ServerResult(global_state=global_state, comm=comm)

@@ -1,0 +1,162 @@
+"""Pallas TPU kernels for the ``repro.compress`` wire hot paths.
+
+Three kernels back the codec subsystem (oracles in ``kernels/ref.py``):
+
+* ``quant_pack``   — fused stochastic-quantize + bit-pack: fp32 deltas are
+  scaled, stochastically rounded (the uniform offsets arrive as an input so
+  the kernel stays deterministic and vmap/test friendly) and written as int8
+  codes, or as two 4-bit nibbles per uint8 for ``bits=4``.  One pass over
+  the tensor, no intermediate integer tensor in HBM.
+* ``quant_unpack`` — scatter-unpack: codes -> fp32, nibble split for int4.
+* ``topk_select``  — magnitude threshold select ``x * (|x| >= t)``: the
+  dense decode∘encode of top-k sparsification, used to form the error-
+  feedback residual without materialising gather/scatter indices.
+
+All kernels view the flat tensor as [rows, 128] lanes and run a 1-D grid
+over row blocks; wrappers pad to tile multiples and slice the result back,
+so callers see exact flat shapes.  On CPU they run with ``interpret=True``
+(the jnp reference is the production CPU path — see ``kernels/ops.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 8          # 8 x 128 fp32 tile per grid step
+
+
+def _pad_rows(flat, lanes, block_rows, fill):
+    """[n] -> [R, lanes] with R a multiple of block_rows."""
+    n = flat.shape[0]
+    per = lanes * block_rows
+    pad = (-n) % per
+    if pad:
+        flat = jnp.pad(flat, (0, pad), constant_values=fill)
+    return flat.reshape(-1, lanes)
+
+
+# ---------------------------------------------------------------------------
+# quantize + pack
+# ---------------------------------------------------------------------------
+
+def _quant_pack_kernel(x_ref, noise_ref, scale_ref, out_ref, *, bits):
+    qmax = 127 if bits == 8 else 7
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.floor(x / scale_ref[0] + noise_ref[...].astype(jnp.float32))
+    q = jnp.clip(q, -qmax, qmax)
+    if bits == 8:
+        out_ref[...] = q.astype(jnp.int8)
+    else:
+        u = (q + 8.0).astype(jnp.uint8)
+        r, c = u.shape
+        u = u.reshape(r, c // 2, 2)
+        out_ref[...] = u[:, :, 0] | (u[:, :, 1] << 4)
+
+
+def quant_pack(x, scale, noise, *, bits=8, interpret=True):
+    """x [n] float, noise [n] in [0,1), scale scalar -> packed codes.
+
+    int8: int8 [n].  int4: uint8 [n/2] (n must be even), element 2i in the
+    low nibble — the exact wire format of ``ref.quant_pack_ref``.
+    """
+    assert bits in (4, 8), bits
+    n = x.shape[0]
+    if bits == 4:
+        assert n % 2 == 0, "int4 pack needs an even element count"
+    xr = _pad_rows(x.astype(jnp.float32), LANES, BLOCK_ROWS, 0.0)
+    nr = _pad_rows(noise.astype(jnp.float32), LANES, BLOCK_ROWS, 0.5)
+    rows = xr.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    out_lanes = LANES if bits == 8 else LANES // 2
+    out_dtype = jnp.int8 if bits == 8 else jnp.uint8
+    packed = pl.pallas_call(
+        functools.partial(_quant_pack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, out_lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, out_lanes), out_dtype),
+        interpret=interpret,
+    )(xr, nr, scale)
+    m = n if bits == 8 else n // 2
+    return packed.reshape(-1)[:m]
+
+
+# ---------------------------------------------------------------------------
+# unpack
+# ---------------------------------------------------------------------------
+
+def _quant_unpack_kernel(q_ref, scale_ref, out_ref, *, bits):
+    scale = scale_ref[0]
+    q = q_ref[...]
+    if bits == 8:
+        out_ref[...] = q.astype(jnp.float32) * scale
+    else:
+        low = (q & 0xF).astype(jnp.int32) - 8
+        high = ((q >> 4) & 0xF).astype(jnp.int32) - 8
+        r, c = q.shape
+        inter = jnp.stack([low, high], axis=-1).reshape(r, 2 * c)
+        out_ref[...] = inter.astype(jnp.float32) * scale
+
+
+def quant_unpack(packed, scale, *, bits=8, n=None, interpret=True):
+    """Packed codes -> fp32 [n] (inverse of :func:`quant_pack`)."""
+    assert bits in (4, 8), bits
+    m = packed.shape[0]
+    n = (m if bits == 8 else 2 * m) if n is None else n
+    in_lanes = LANES if bits == 8 else LANES // 2
+    qr = _pad_rows(packed, in_lanes, BLOCK_ROWS,
+                   0 if bits == 8 else 0x88)       # 0x88 = (8,8) = zeros
+    rows = qr.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        functools.partial(_quant_unpack_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, in_lanes), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(qr, scale)
+    return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# top-k threshold select
+# ---------------------------------------------------------------------------
+
+def _topk_select_kernel(x_ref, thresh_ref, out_ref):
+    x = x_ref[...]
+    keep = jnp.abs(x) >= thresh_ref[0]
+    out_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def topk_select(x, thresh, *, interpret=True):
+    """x [n], thresh scalar -> x masked to entries with |x| >= thresh."""
+    n = x.shape[0]
+    xr = _pad_rows(x.astype(jnp.float32), LANES, BLOCK_ROWS, 0.0)
+    rows = xr.shape[0]
+    thresh = jnp.asarray(thresh, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _topk_select_kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(xr, thresh)
+    return out.reshape(-1)[:n].astype(x.dtype)

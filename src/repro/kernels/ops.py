@@ -14,7 +14,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import compress_pack, ref
 from repro.kernels.decode_attn import flash_decode
 from repro.kernels.fusion_conv import fusion_conv
 from repro.kernels.mk_mmd import gram_sum
@@ -57,6 +57,38 @@ def fused_fusion_conv(f_g, f_l, w, *, impl="auto"):
     if impl == "jnp":
         return ref.fusion_conv_ref(f_g, f_l, w)
     return fusion_conv(f_g, f_l, w, interpret=(impl == "pallas_interpret"))
+
+
+def quantize_pack(x, scale, noise, *, bits=8, impl="auto"):
+    """Fused stochastic-quantize + bit-pack of a flat fp32 tensor.
+
+    Wire format of ``repro.compress``: int8 codes, or nibble-packed uint8
+    for ``bits=4``.  All impls produce bit-identical packed payloads."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.quant_pack_ref(x, scale, noise, bits=bits)
+    return compress_pack.quant_pack(x, scale, noise, bits=bits,
+                                    interpret=(impl == "pallas_interpret"))
+
+
+def quantize_unpack(packed, scale, *, bits=8, n=None, impl="auto"):
+    """Scatter-unpack quantized codes back to fp32 [n]."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        m = packed.shape[0]
+        n = (m if bits == 8 else 2 * m) if n is None else n
+        return ref.quant_unpack_ref(packed, scale, bits=bits, n=n)
+    return compress_pack.quant_unpack(packed, scale, bits=bits, n=n,
+                                      interpret=(impl == "pallas_interpret"))
+
+
+def topk_threshold_select(x, thresh, *, impl="auto"):
+    """Dense top-k select: keep entries with |x| >= thresh, zero the rest."""
+    impl = _resolve(impl)
+    if impl == "jnp":
+        return ref.topk_select_ref(x, thresh)
+    return compress_pack.topk_select(x, thresh,
+                                     interpret=(impl == "pallas_interpret"))
 
 
 def gqa_flash_decode(q, k_cache, v_cache, valid_len=None, *, impl="auto"):

@@ -52,6 +52,44 @@ def fusion_conv_ref(f_g, f_l, w):
     return f_g @ w[:C] + f_l @ w[C:]
 
 
+def quant_pack_ref(x, scale, noise, *, bits):
+    """Fused stochastic-quantize + pack oracle (repro.compress wire format).
+
+    x [n] float; scale scalar (wire step size); noise [n] in [0,1) — the
+    stochastic-rounding offsets (0.5 = deterministic round-half-up).
+    ``bits=8``: int8 codes in [-127, 127].
+    ``bits=4``: codes in [-7, 7] stored as ``code+8`` nibbles, two per uint8
+    (element 2i in the low nibble, 2i+1 in the high one); n must be even.
+    """
+    assert bits in (4, 8), bits
+    qmax = 127 if bits == 8 else 7
+    q = jnp.floor(x.astype(jnp.float32) / scale + noise)
+    q = jnp.clip(q, -qmax, qmax)
+    if bits == 8:
+        return q.astype(jnp.int8)
+    u = (q + 8).astype(jnp.uint8).reshape(-1, 2)
+    return (u[:, 0] | (u[:, 1] << 4)).astype(jnp.uint8)
+
+
+def quant_unpack_ref(packed, scale, *, bits, n):
+    """Inverse of :func:`quant_pack_ref`: packed codes -> float32 [n]."""
+    assert bits in (4, 8), bits
+    if bits == 8:
+        return packed.astype(jnp.float32) * scale
+    low = (packed & 0xF).astype(jnp.int32) - 8
+    high = ((packed >> 4) & 0xF).astype(jnp.int32) - 8
+    q = jnp.stack([low, high], axis=-1).reshape(-1)[:n]
+    return q.astype(jnp.float32) * scale
+
+
+def topk_select_ref(x, thresh):
+    """Magnitude threshold select: keep x where |x| >= thresh, else 0.
+
+    With thresh = the k-th largest |x| this is the dense form of top-k
+    sparsification (the decode∘encode of the topk codec)."""
+    return jnp.where(jnp.abs(x) >= thresh, x, jnp.zeros_like(x))
+
+
 def decode_attn_ref(q, k_cache, v_cache, valid_len):
     """GQA flash-decode oracle.
 

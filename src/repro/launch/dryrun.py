@@ -22,7 +22,7 @@ import jax           # noqa: E402
 
 from repro.configs import ARCH_CONFIGS, INPUT_SHAPES  # noqa: E402
 from repro.configs.base import FLConfig               # noqa: E402
-from repro.launch.mesh import make_production_mesh    # noqa: E402
+from repro.launch.mesh import mesh_context, make_production_mesh    # noqa: E402
 from repro.launch.specs import skip_reason            # noqa: E402
 from repro.launch.steps import build_step             # noqa: E402
 from repro.roofline import analyze                    # noqa: E402
@@ -61,7 +61,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
         fn, args, in_sh, out_sh = build_step(cfg, fl, shape, mesh)
-        with jax.set_mesh(mesh):   # sharding-constraint P specs resolve here
+        with mesh_context(mesh):   # sharding-constraint P specs resolve here
             lowered = jax.jit(fn, in_shardings=in_sh,
                               out_shardings=out_sh).lower(*args)
             t_lower = time.time() - t0

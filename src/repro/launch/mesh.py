@@ -10,13 +10,36 @@ seeing the single real CPU device).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes AxisType; 0.4.x builds Mesh without it
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
 
 
 def _mesh(shape, axes):
+    if AxisType is None:
+        return jax.make_mesh(shape, axes)
     # explicit Auto axis types: silences the jax 0.9 default-change warning
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Version-portable ``jax.make_mesh`` (axis_types only where supported)."""
+    return _mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """Context manager activating ``mesh``.
+
+    jax >= 0.5 uses ``jax.set_mesh``; on 0.4.x the ``Mesh`` object itself is
+    the context manager that sets the thread-local physical mesh.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):

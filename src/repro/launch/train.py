@@ -24,6 +24,7 @@ from repro.core.rounds import init_global_state
 from repro.data.partition import source_partition
 from repro.data.synth import token_stream
 from repro.launch import sharding as sh
+from repro.launch.mesh import mesh_context
 from repro.launch.specs import fl_plan
 from repro.launch.steps import build_train_step
 from repro.models.registry import make_bundle
@@ -73,7 +74,7 @@ def main() -> None:
 
     plan = fl_plan(cfg, shape, mesh)
     bundle = make_bundle(cfg, jnp.float32)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         state = jax.jit(
             lambda k: init_global_state(bundle, fl, k),
             out_shardings=in_sh[0])(jax.random.PRNGKey(0))

@@ -33,6 +33,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.layers import mlp_apply
 
+if hasattr(jax, "shard_map"):          # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
 # Concrete mesh for shard_map, set by the launch layer before tracing
 # (jax.sharding.get_mesh() is unavailable inside jit; the model call stack
 # does not thread the mesh, so the launcher registers it here).
@@ -45,11 +52,12 @@ def set_dispatch_mesh(mesh) -> None:
 
 
 def _local_moe(xt, router, w1, w2, w3, *, top_k, act, capacity_factor,
-               axis, mean_axes=None):
+               axis, mean_axes=None, tp_psum=False):
     """Per-shard body (runs under shard_map).  xt [T_loc, d]."""
     T, d = xt.shape
     E = router.shape[1]
-    n_sh = jax.lax.axis_size(axis)
+    n_sh = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
+            else jax.lax.psum(1, axis))  # jax 0.4.x compat
     E_loc = w1.shape[0]
     assert E == n_sh * E_loc, (E, n_sh, E_loc)
 
@@ -88,7 +96,7 @@ def _local_moe(xt, router, w1, w2, w3, *, top_k, act, capacity_factor,
     else:
         h = jax.nn.gelu(h)
     ye = jnp.einsum("ecf,efd->ecd", h, w2)                      # [E_loc,nshC,d]
-    if "model" in jax.sharding.get_abstract_mesh().axis_names:
+    if tp_psum:
         ye = jax.lax.psum(ye, "model")
 
     # send results back to the source shards
@@ -127,17 +135,18 @@ def moe_apply_a2a(params, x, mesh=None, *, top_k, act, capacity_factor=1.25,
         xt = xb.reshape(-1, d)
         out, aux = _local_moe(xt, router, w1, w2, w3, top_k=top_k, act=act,
                               capacity_factor=capacity_factor, axis=axis,
-                              mean_axes=batch_axes)
+                              mean_axes=batch_axes,
+                              tp_psum="model" in mesh.axis_names)
         return out.reshape(xb.shape), aux
 
     w3 = params["w3"] if has_w3 else jnp.zeros_like(params["w1"])
     tp = "model" if "model" in mesh.axis_names else None
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P(batch_axes), P(), P(axis, None, tp), P(axis, tp, None),
                   P(axis, None, tp)),
         out_specs=(P(batch_axes), P()),
-        check_vma=False)
+        **{_CHECK_KW: False})
     out, aux = fn(x, params["router"], params["w1"], params["w2"], w3)
     if dense_residual:
         out = out + mlp_apply(params["dense"], x, act)

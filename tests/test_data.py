@@ -1,7 +1,7 @@
 """Data pipeline: synthetic generators + the paper's three partitions."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.data.federated import FederatedDataset
 from repro.data.partition import (artificial_noniid_partition,

@@ -92,8 +92,11 @@ def test_commlog_counts_fusion_upload_overhead():
     a, b = CommLog(), CommLog()
     a.log_round(state, n_clients=4, metrics={})
     b.log_round(state_f, n_clients=4, metrics={})
-    assert a.bytes_down == b.bytes_down == 4 * 400
-    assert b.bytes_up == a.bytes_up + 4 * 40   # fusion module rides along
+    assert a.bytes_down == a.bytes_up == 4 * 400
+    # fusion module rides along uncompressed in both directions: clients
+    # receive the aggregated module and return their trained copy
+    assert b.bytes_up == a.bytes_up + 4 * 40
+    assert b.bytes_down == a.bytes_down + 4 * 40
 
 
 def test_commlog_rounds_to_milestone():

@@ -14,20 +14,20 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh, mesh_context
 from repro.models import moe as moe_mod
 from repro.models.moe_dispatch import moe_apply_a2a, set_dispatch_mesh
 
 
 def test_a2a_matches_reference_single_shard():
     """On a 1x1 mesh the dispatch degenerates to the plain expert FFN."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     d, f, E, k = 8, 16, 4, 2
     params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu")
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 4, d))
     want = moe_mod.moe_reference(params, x, top_k=k, act="silu")
     set_dispatch_mesh(mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         got, aux = moe_apply_a2a(params, x, top_k=k, act="silu",
                                  capacity_factor=float(E))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -44,14 +44,14 @@ def test_a2a_matches_reference_multi_shard():
         from repro.models import moe as moe_mod
         from repro.models.moe_dispatch import moe_apply_a2a, set_dispatch_mesh
 
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh, mesh_context
+        mesh = make_mesh((4,), ("data",))
         d, f, E, k = 16, 32, 8, 2
         params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu")
         x = jax.random.normal(jax.random.PRNGKey(1), (8, 4, d))
         want = moe_mod.moe_reference(params, x, top_k=k, act="silu")
         set_dispatch_mesh(mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             got, _ = jax.jit(lambda p, xx: moe_apply_a2a(
                 p, xx, top_k=k, act="silu", capacity_factor=float(E)))(
                     params, x)
@@ -77,14 +77,14 @@ def test_a2a_ep_tp_matches_reference():
         from repro.models import moe as moe_mod
         from repro.models.moe_dispatch import moe_apply_a2a, set_dispatch_mesh
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh, mesh_context
+        mesh = make_mesh((2, 2), ("data", "model"))
         d, f, E, k = 16, 32, 4, 2
         params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu")
         x = jax.random.normal(jax.random.PRNGKey(1), (4, 4, d))
         want = moe_mod.moe_reference(params, x, top_k=k, act="silu")
         set_dispatch_mesh(mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             got, _ = jax.jit(lambda p, xx: moe_apply_a2a(
                 p, xx, top_k=k, act="silu", capacity_factor=float(E)))(
                     params, x)
@@ -104,14 +104,13 @@ def test_a2a_ep_tp_matches_reference():
 def test_a2a_tight_capacity_drops_like_gather_path():
     """With a tight factor the dispatch drops tokens (documented trade-off)
     but stays finite and shaped correctly."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     d, f, E, k = 8, 16, 4, 1
     params = moe_mod.moe_init(jax.random.PRNGKey(0), d, E, f, "silu")
     x = jnp.broadcast_to(
         jax.random.normal(jax.random.PRNGKey(1), (1, 1, d)), (1, 16, d))
     set_dispatch_mesh(mesh)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         tight, _ = moe_apply_a2a(params, x, top_k=k, act="silu",
                                  capacity_factor=0.25)
         full, _ = moe_apply_a2a(params, x, top_k=k, act="silu",
