@@ -101,6 +101,56 @@ def bench_decode(quick):
     return rows
 
 
+def bench_ef_scatter(quick):
+    """EF table row gather/scatter (repro.engine): jnp oracle timing +
+    interpret-mode Pallas agreement.  Shapes: [n_clients, n_params] tables
+    with a round's worth of sampled rows."""
+    shapes = [(64, 8, 1 << 14)] if quick else [
+        (64, 8, 1 << 14), (128, 16, 1 << 16), (256, 32, 1 << 18)]
+    rows_out = []
+    g = jax.jit(lambda t, i: ops.ef_gather(t, i, impl="jnp"))
+    s = jax.jit(lambda t, i, r: ops.ef_scatter(t, i, r, impl="jnp"),
+                donate_argnums=(0,))
+    for N, k, n in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(n % 1009), 3)
+        idx = jax.random.permutation(ks[1], N)[:k].astype(jnp.int32)
+        rows = jax.random.normal(ks[2], (k, n))
+
+        def make_table():
+            return jax.random.normal(ks[0], (N, n))
+
+        table = make_table()
+        us_g = _time(g, table, idx)
+        # donation consumes the table: pre-build one per rep, time only s()
+        s(make_table(), idx, rows)     # compile
+        reps = 5
+        tables = [make_table() for _ in range(reps)]
+        jax.block_until_ready(tables)
+        t0 = time.perf_counter()
+        for t_in in tables:
+            out = s(t_in, idx, rows)
+        jax.block_until_ready(out)
+        us_s = (time.perf_counter() - t0) / reps * 1e6
+        table = make_table()
+        err_g = float(jnp.abs(
+            ops.ef_gather(table, idx, impl="pallas_interpret")
+            - g(table, idx)).max())
+        err_s = float(jnp.abs(
+            ops.ef_scatter(table, idx, rows, impl="pallas_interpret")
+            - ops.ef_scatter(table, idx, rows, impl="jnp")).max())
+        bytes_g = k * n * 4 * 2
+        rows_out.append({"kernel": "ef_gather", "shape": f"{N}x{n}_k{k}",
+                         "us_per_call": round(us_g, 1),
+                         "gbytes_s": round(bytes_g / us_g / 1e3, 2),
+                         "pallas_abs_err": f"{err_g:.2e}"})
+        rows_out.append({"kernel": "ef_scatter(+donate)",
+                         "shape": f"{N}x{n}_k{k}",
+                         "us_per_call": round(us_s, 1),
+                         "gbytes_s": round(bytes_g / us_s / 1e3, 2),
+                         "pallas_abs_err": f"{err_s:.2e}"})
+    return rows_out
+
+
 def bench_two_stream_overhead(quick):
     """Wall-clock per local step: the paper's compute-overhead claim."""
     bundle = bench_cnn("mnist", quick=True)
@@ -135,7 +185,7 @@ def bench_two_stream_overhead(quick):
 
 def run(quick: bool = True):
     rows = (bench_mmd(quick) + bench_fusion(quick) + bench_decode(quick)
-            + bench_two_stream_overhead(quick))
+            + bench_ef_scatter(quick) + bench_two_stream_overhead(quick))
     write_csv("kernels_bench.csv", rows)
     print_table("Kernel microbenchmarks (CPU jnp path; Pallas checked)", rows)
     return rows

@@ -14,6 +14,11 @@ import numpy as np
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
+    # One device_get for the whole tree: server state and the engine's
+    # full-federation EF table live on device, and fetching the pytree in
+    # a single transfer (instead of one blocking np.asarray per leaf) is
+    # what keeps checkpoint stalls to a single host sync.
+    tree = jax.device_get(tree)
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = "/".join(_path_str(p) for p in path)

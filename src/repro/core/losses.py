@@ -24,6 +24,35 @@ def accuracy(logits, labels):
     return jnp.mean(jnp.argmax(logits, axis=-1) == labels)
 
 
+def _broadcast_mask(mask, labels):
+    """Per-example mask [B] -> weights broadcast to the labels' shape
+    ([B] for classification, [B, S] for LM token labels)."""
+    mask = mask.astype(jnp.float32)
+    return jnp.broadcast_to(
+        mask.reshape(mask.shape + (1,) * (labels.ndim - mask.ndim)),
+        labels.shape)
+
+
+def masked_cross_entropy(logits, labels, mask):
+    """Mean CE over the valid examples only (mask [B] bool/float).
+
+    The padded tail of a fixed-shape eval batch contributes zero weight, so
+    one compiled evaluator serves any test-set size (repro.fl.server)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    w = _broadcast_mask(mask, labels)
+    return jnp.sum((logz - gold) * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def masked_accuracy(logits, labels, mask):
+    """Accuracy over the valid examples only (mask [B] bool/float)."""
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    w = _broadcast_mask(mask, labels)
+    return jnp.sum(correct * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
 def l2_tree_distance(tree_a, tree_b):
     """Sum of squared parameter distances (the paper's L2 two-stream
     baseline constraint)."""

@@ -13,6 +13,17 @@ Two execution modes map the round onto the device mesh (DESIGN.md §4):
 
 Both return (new_global_state, metrics).  ``global_state`` is
 ``{'model': params, 'fusion': fusion_params_or_absent}``.
+
+Engine contract (``repro.engine``): the superstep ``lax.scan``s these
+round fns over a chunk of pre-staged rounds, so they must stay *pure*
+functions of their arguments with a stable output structure — state and
+metrics shapes cannot depend on data, and everything that varies per
+round (batches, sizes, lr, sampled cids, the fold_in round key) arrives
+as an argument, never from Python-level state.  For the compressed fn the
+returned broadcast (4th output) IS the clients' next downlink mirror; the
+engine threads it and the per-client EF rows through the scan carry and
+scatters the EF rows back into the device-resident full-federation table
+(``ops.ef_scatter``).
 """
 from __future__ import annotations
 

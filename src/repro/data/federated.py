@@ -25,8 +25,16 @@ class FederatedDataset:
         return np.array([len(c[key]) for c in self.clients], np.float32)
 
     def sample_clients(self, n: int) -> np.ndarray:
+        """Sample n distinct client ids.  Uniqueness is load-bearing: the
+        server scatters per-client EF state back by cid (``dst[cids] =
+        src`` / ``table.at[cids].set``), which silently keeps only the
+        LAST write for a duplicated cid — one client's residual would be
+        lost every round."""
         n = min(n, self.n_clients)
-        return self._rng.choice(self.n_clients, size=n, replace=False)
+        cids = self._rng.choice(self.n_clients, size=n, replace=False)
+        assert len(np.unique(cids)) == len(cids), \
+            f"sample_clients returned duplicate cids: {cids}"
+        return cids
 
     def _draw(self, client: Dict[str, np.ndarray], n: int) -> Dict[str, np.ndarray]:
         key = "x" if "x" in client else "tokens"
@@ -49,6 +57,27 @@ class FederatedDataset:
                    for k in per_client[0]}
         sizes = self.client_sizes()[np.asarray(client_ids)]
         return _to_batch(stacked), sizes
+
+    def round_chunk(self, n_rounds: int, clients_per_round: int,
+                    local_steps: int, batch: int):
+        """Sample ``n_rounds`` consecutive rounds for the superstep engine.
+
+        Returns (cids [K, C], batches {k: [K, C, steps, B, ...]},
+        sizes [K, C]).  The per-round draw order (sample_clients, then
+        round_batch) is IDENTICAL to the one-round-at-a-time server loop,
+        so the rng stream — and therefore every sampled batch — matches the
+        reference loop bit for bit.
+        """
+        cids_l, batch_l, size_l = [], [], []
+        for _ in range(n_rounds):
+            cids = self.sample_clients(clients_per_round)
+            b, s = self.round_batch(cids, local_steps, batch)
+            cids_l.append(cids)
+            batch_l.append(b)
+            size_l.append(s)
+        stacked = {k: np.stack([b[k] for b in batch_l]) for k in batch_l[0]}
+        return (np.stack(cids_l).astype(np.int32), stacked,
+                np.stack(size_l).astype(np.float32))
 
     def test_batch(self, n: Optional[int] = None) -> Dict[str, np.ndarray]:
         if n is None:

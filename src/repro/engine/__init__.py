@@ -1,0 +1,20 @@
+"""Device-resident federated training engine.
+
+Replaces the Python-per-round server loop with a jitted K-round superstep
+(``lax.scan`` over the round fn, donated buffers, on-device error-feedback
+scatter), a double-buffered host prefetch pipeline, and deferred metrics
+so the host never blocks except at eval/checkpoint boundaries.
+
+    run_federated_engine   — drop-in engine behind ``repro.fl.server``
+    make_plain_superstep / make_compressed_superstep — jit-able supersteps
+    HostPrefetcher         — background chunk staging thread
+    MetricsPump            — async device->host metric fetch + CommLog
+    make_eval_fn / pad_eval_batch — fixed-shape jit-able evaluation
+"""
+from repro.engine.engine import (ServerResult,  # noqa: F401
+                                 chunk_schedule, run_federated_engine)
+from repro.engine.evaljit import make_eval_fn, pad_eval_batch  # noqa: F401
+from repro.engine.metrics import MetricsPump  # noqa: F401
+from repro.engine.pipeline import HostPrefetcher  # noqa: F401
+from repro.engine.superstep import (make_compressed_superstep,  # noqa: F401
+                                    make_plain_superstep)

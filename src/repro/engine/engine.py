@@ -1,0 +1,241 @@
+"""Device-resident federated training engine (the server loop, replaced).
+
+``run_federated_engine`` drives training as a sequence of jitted K-round
+supersteps instead of one Python-dispatched round at a time:
+
+* chunk schedule — the round range is cut at eval / checkpoint boundaries
+  (host-visible state is only needed there) and otherwise into
+  ``superstep_rounds``-sized chunks; when evaluation happens every round
+  it is folded into the scan so the chunk size survives;
+* buffers — ``global_state`` (and for compressed runs the full-federation
+  EF tree + broadcast mirror) are donated into every superstep call, so
+  steady-state chunks mutate device buffers in place;
+* host pipeline — a prefetch thread stages the next chunk's client sample,
+  batches and lr slice to device while the current chunk trains
+  (``HostPrefetcher``), and metrics come back through ``MetricsPump``
+  futures, so the host blocks only at eval/checkpoint boundaries and at
+  the end of the run;
+* equivalence — the rng streams (data sampling on the host, per-round
+  ``fold_in`` on device) and the per-round math are exactly those of the
+  preserved reference loop (``repro.fl.server.run_federated_reference``);
+  at chunk size 1 the final model is bitwise-identical to it.
+
+Semantics (checkpoint/resume layout, CommLog history, callback contract)
+match the reference loop; a non-None ``callback`` forces one-round chunks
+since it observes per-round state by contract.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import make_codec
+from repro.configs.base import FLConfig
+from repro.core.rounds import init_global_state
+from repro.engine.evaljit import make_eval_fn, pad_eval_batch
+from repro.engine.metrics import MetricsPump
+from repro.engine.pipeline import HostPrefetcher
+from repro.engine.superstep import (make_compressed_superstep,
+                                    make_plain_superstep)
+from repro.models.registry import ModelBundle
+from repro.optim import exp_decay_per_round
+
+# repro.fl.comm is imported lazily inside run_federated_engine:
+# repro.fl.server imports this module, so the reverse edge would cycle.
+
+_NON_METRIC_KEYS = frozenset(
+    ("round", "bytes_up", "bytes_down", "bytes_up_ideal", "cum_bytes_up"))
+
+
+@dataclass
+class ServerResult:
+    global_state: Dict
+    comm: "repro.fl.comm.CommLog"  # noqa: F821 — lazy import, see above
+
+
+def chunk_schedule(start: int, rounds: int, chunk: int, *,
+                   eval_every: Optional[int] = None,
+                   ckpt_every: Optional[int] = None,
+                   per_round: bool = False) -> List[Tuple[int, int]]:
+    """Cut [start, rounds) into superstep chunks.
+
+    Boundaries land exactly where the host must observe state: after round
+    r when ``(r+1) % eval_every == 0`` (eval) or ``(r+1) % ckpt_every == 0``
+    (checkpoint).  ``per_round=True`` (callback users) degenerates to
+    one-round chunks.  Pass ``eval_every=None`` when evaluation is folded
+    into the scan body — eval then imposes no boundary at all.
+    """
+    bounds = []
+    r = start
+    while r < rounds:
+        if per_round:
+            end = r + 1
+        else:
+            end = min(r + max(1, chunk), rounds)
+            for every in (eval_every, ckpt_every):
+                if every:
+                    end = min(end, (r // every + 1) * every)
+        bounds.append((r, end))
+        r = end
+    return bounds
+
+
+def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
+                         rounds: int, seed: int = 0,
+                         mode: str = "client_parallel",
+                         eval_every: int = 1, eval_examples: int = 2048,
+                         verbose: bool = False,
+                         checkpoint_dir: Optional[str] = None,
+                         checkpoint_every: int = 10,
+                         callback: Optional[Callable] = None,
+                         superstep_rounds: int = 8, prefetch: bool = True,
+                         impl: str = "auto") -> ServerResult:
+    """Engine-backed server loop (see module docstring).
+
+    Drop-in for the reference loop: same arguments, same ServerResult,
+    same checkpoint layout and resume behaviour, plus ``superstep_rounds``
+    (max rounds per jitted chunk), ``prefetch`` (background host staging)
+    and ``impl`` (kernel dispatch for the EF gather/scatter and codecs).
+    """
+    from repro.checkpoint.io import (load_tree, restore_server_state,
+                                     save_server_state, save_tree)
+    from repro.fl.comm import CommLog
+
+    key = jax.random.PRNGKey(seed)
+    global_state = init_global_state(bundle, fl, key)
+    start_round = 0
+    if checkpoint_dir and os.path.exists(
+            os.path.join(checkpoint_dir, "meta.json")):
+        global_state, start_round = restore_server_state(checkpoint_dir,
+                                                         global_state)
+        global_state = jax.tree.map(jnp.asarray, global_state)
+    lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)
+    comm = CommLog().bind_sizes(global_state)
+    n_sampled = min(fl.clients_per_round, data.n_clients)
+
+    # --- wire codecs: device-resident EF + mirror --------------------------
+    compressed = fl.compressed
+    wire_up = wire_down = None
+    ef_all = down_mirror = round_key = None
+    uplink = downlink = None
+    ef_path = None
+    if compressed:
+        uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac,
+                            quant_bits=fl.quant_bits, impl=impl)
+        downlink = make_codec(fl.downlink_codec, topk_frac=fl.topk_frac,
+                              quant_bits=fl.quant_bits, impl=impl)
+        uplink.bind(global_state["model"])
+        downlink.bind(global_state["model"])
+        wire_up = uplink.wire_bytes()
+        wire_down = downlink.wire_bytes()
+        ef_template = uplink.init_state()
+        ef_all = jax.tree.map(
+            lambda z: jnp.zeros((data.n_clients,) + z.shape, z.dtype),
+            ef_template)
+        # a copy, not an alias: the model and the mirror are both donated
+        # into the superstep, and a shared buffer cannot be donated twice.
+        down_mirror = jax.tree.map(jnp.array, global_state["model"])
+        ef_path = (os.path.join(checkpoint_dir, "ef.npz")
+                   if checkpoint_dir else None)
+        if start_round and ef_path and os.path.exists(ef_path):
+            ef_all, down_mirror = jax.tree.map(
+                jnp.asarray, load_tree(ef_path, (ef_all, down_mirror)))
+        round_key = jax.random.fold_in(key, 0x636f6d70)  # "comp"
+
+    # --- fixed-shape evaluation -------------------------------------------
+    test_batch, test_mask = pad_eval_batch(data.test_batch(), eval_examples)
+    eval_fn = make_eval_fn(bundle, fl)
+    eval_in_scan = eval_every == 1 and callback is None
+    jit_eval = None if eval_in_scan else jax.jit(eval_fn)
+
+    # --- chunk schedule + prefetch pipeline -------------------------------
+    schedule = chunk_schedule(
+        start_round, rounds, superstep_rounds,
+        eval_every=None if eval_in_scan else eval_every,
+        ckpt_every=checkpoint_every if checkpoint_dir else None,
+        per_round=callback is not None)
+
+    def build_chunk(r0, r1):
+        cids, batches, sizes = data.round_chunk(
+            r1 - r0, fl.clients_per_round, fl.local_steps, fl.local_batch)
+        staged = {
+            "batches": {k: jax.device_put(v) for k, v in batches.items()},
+            "sizes": jax.device_put(sizes),
+            # one vectorized schedule op, not K scalar dispatches — the
+            # elementwise pow gives the same float32 values as the
+            # reference loop's per-round lr_at(r)
+            "lrs": lr_at(jnp.arange(r0, r1)),
+        }
+        if compressed:   # only the compressed superstep consumes these
+            staged["cids"] = jax.device_put(cids)
+            staged["ridx"] = jax.device_put(
+                np.arange(r0, r1, dtype=np.int32))
+        return staged
+
+    prefetcher = HostPrefetcher(build_chunk, schedule, enabled=prefetch)
+
+    # --- jitted supersteps, cached per chunk length -----------------------
+    steps: Dict[int, Callable] = {}
+
+    def get_step(n_rounds):
+        if n_rounds not in steps:
+            in_scan = eval_fn if eval_in_scan else None
+            if compressed:
+                fn = make_compressed_superstep(
+                    bundle, fl, mode, n_rounds, uplink, downlink,
+                    eval_fn=in_scan, impl=impl)
+                steps[n_rounds] = jax.jit(fn, donate_argnums=(0, 1, 2))
+            else:
+                fn = make_plain_superstep(bundle, fl, mode, n_rounds,
+                                          eval_fn=in_scan, impl=impl)
+                steps[n_rounds] = jax.jit(fn, donate_argnums=(0,))
+        return steps[n_rounds]
+
+    pump = MetricsPump(comm, n_sampled, wire_up=wire_up,
+                       wire_down=wire_down,
+                       n_down=(data.n_clients
+                               if fl.downlink_codec != "identity" else None),
+                       verbose=verbose)
+    test_args = (test_batch, test_mask) if eval_in_scan else ()
+
+    try:
+        for r0, r1, staged in prefetcher:
+            step = get_step(r1 - r0)
+            if compressed:
+                global_state, mstack, ef_all, down_mirror = step(
+                    global_state, ef_all, down_mirror, staged["batches"],
+                    staged["sizes"], staged["lrs"], staged["cids"],
+                    staged["ridx"], round_key, *test_args)
+            else:
+                global_state, mstack = step(
+                    global_state, staged["batches"], staged["sizes"],
+                    staged["lrs"], *test_args)
+            eval_metrics = None
+            if jit_eval is not None and eval_every and r1 % eval_every == 0:
+                eval_metrics = jit_eval(global_state, test_batch, test_mask)
+            pump.submit(mstack, eval_metrics)
+            if callback is not None:        # per-round chunks by contract
+                pump.drain()
+                metrics = {k: v for k, v in comm.history[-1].items()
+                           if k not in _NON_METRIC_KEYS}
+                callback(r0, global_state, metrics)
+            if checkpoint_dir and r1 % checkpoint_every == 0:
+                save_server_state(checkpoint_dir, global_state, r1,
+                                  extra={"algorithm": fl.algorithm})
+                if compressed:
+                    save_tree(ef_path, (ef_all, down_mirror))
+    finally:
+        prefetcher.close()
+        pump.close()
+
+    if checkpoint_dir:
+        save_server_state(checkpoint_dir, global_state, rounds,
+                          extra={"algorithm": fl.algorithm})
+        if compressed:
+            save_tree(ef_path, (ef_all, down_mirror))
+    return ServerResult(global_state=global_state, comm=comm)

@@ -1,0 +1,70 @@
+"""Jit-able global-model evaluation with fixed (pad-and-mask) shapes.
+
+The pre-engine evaluator ran ``bundle.apply`` uncompiled on the raw test
+batch every ``eval_every`` rounds — op-by-op Python dispatch on what the
+paper plots every single round (Fig. 4-7 are accuracy-per-round curves).
+Here the metrics are a traceable function of ``(global_state, batch,
+mask)`` so they can be jitted standalone, or folded straight into the
+superstep's ``lax.scan`` body when evaluation happens every round.
+
+Shapes are stabilised by padding the test batch to a power-of-two bucket
+(capped at ``max_examples``) with a per-example validity mask: one
+compiled evaluator serves any test-set size, and the masked means are
+numerically identical to the unpadded ones (pad rows carry zero weight,
+the divisor is the true example count).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fusion import fusion_apply
+from repro.core.losses import masked_accuracy, masked_cross_entropy
+
+
+def make_eval_fn(bundle, fl):
+    """Traceable ``eval_metrics(global_state, batch, mask) -> {acc, loss}``.
+
+    For FedFusion the deployed global model fuses its own features with
+    itself through the aggregated fusion module (E_g = E_l = global),
+    exactly as the pre-engine evaluator did.
+    """
+    is_fusion = fl.algorithm == "fedfusion"
+
+    def eval_metrics(global_state, batch, mask) -> Dict:
+        out = bundle.apply(global_state["model"], batch)
+        logits = out["logits"]
+        if is_fusion:
+            fused = fusion_apply(fl.fusion_op, global_state["fusion"],
+                                 out["features"], out["features"])
+            logits = bundle.head(global_state["model"], fused)
+        labels = bundle.labels(batch)
+        return {"acc": masked_accuracy(logits, labels, mask),
+                "loss": masked_cross_entropy(logits, labels, mask)}
+
+    return eval_metrics
+
+
+def pad_eval_batch(batch, max_examples: int = 2048) -> Tuple[Dict, jnp.ndarray]:
+    """Truncate to ``max_examples``, zero-pad to a power-of-two bucket.
+
+    Returns (padded device batch, [bucket] bool mask).  Bucketing keeps the
+    compiled-shape count logarithmic in the test-set sizes seen by one
+    process while never evaluating more than ~2x the requested examples.
+    """
+    key = "x" if "x" in batch else "tokens"
+    n = min(len(batch[key]), max_examples)
+    bucket = 1
+    while bucket < n:
+        bucket *= 2
+    bucket = min(bucket, max_examples)
+    padded = {}
+    for k, v in batch.items():
+        v = np.asarray(v[:n])
+        if bucket > n:
+            v = np.pad(v, ((0, bucket - n),) + ((0, 0),) * (v.ndim - 1))
+        padded[k] = jnp.asarray(v)
+    mask = jnp.asarray(np.arange(bucket) < n)
+    return padded, mask

@@ -1,0 +1,79 @@
+"""Deferred metrics: device->host fetches ride a worker thread.
+
+The old loop ran ``float(v)`` on every round's metrics — a host sync that
+stalled the dispatch pipeline once per round.  The engine instead hands
+each chunk's stacked ``[K]`` metrics (and the chunk-end eval metrics, if
+any) to a single-worker executor: ``jax.device_get`` blocks *that* thread
+until the superstep producing the values has finished, while the main
+thread keeps dispatching the next chunk.  ``CommLog`` rounds are logged in
+order when futures are drained — bounded by ``max_pending`` chunks so a
+long run cannot pile up unfetched device buffers.
+"""
+from __future__ import annotations
+
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import jax
+
+# NOTE: nothing in repro.engine imports repro.fl at module scope —
+# repro.fl.server imports the engine, and the reverse edge would cycle.
+
+
+class MetricsPump:
+    """Feed per-round metrics into a ``repro.fl.comm.CommLog`` without
+    blocking.
+
+    ``comm`` must have wire sizes bound (``comm.bind_sizes``) — the pump
+    logs with ``global_state=None``.  ``wire_up`` / ``wire_down`` /
+    ``n_down`` are the per-run constants the server loop previously passed
+    to every ``log_round`` call.
+    """
+
+    def __init__(self, comm, n_clients: int, *,
+                 wire_up: Optional[int] = None,
+                 wire_down: Optional[int] = None,
+                 n_down: Optional[int] = None,
+                 verbose: bool = False, max_pending: int = 4):
+        self._comm = comm
+        self._n_clients = n_clients
+        self._wire = dict(wire_up=wire_up, wire_down=wire_down,
+                          n_down=n_down)
+        self._verbose = verbose
+        self._max_pending = max_pending
+        self._pool = ThreadPoolExecutor(1, thread_name_prefix="engine-metrics")
+        self._pending: deque = deque()
+
+    def submit(self, metrics_stack, eval_metrics=None):
+        """Queue one chunk: ``metrics_stack`` leaves are [K] device arrays;
+        ``eval_metrics`` (scalar device dict or None) merges into the
+        chunk's LAST round — chunk boundaries are aligned to eval rounds
+        by the engine's schedule."""
+        self._pending.append(self._pool.submit(
+            jax.device_get, (metrics_stack, eval_metrics)))
+        while len(self._pending) > self._max_pending:
+            self._log(self._pending.popleft().result())
+
+    def drain(self):
+        """Resolve every pending chunk into the CommLog (host blocks)."""
+        while self._pending:
+            self._log(self._pending.popleft().result())
+
+    def close(self):
+        self.drain()
+        self._pool.shutdown(wait=True)
+
+    def _log(self, fetched):
+        stack, ev = fetched
+        n_rounds = len(next(iter(stack.values())))
+        for k in range(n_rounds):
+            metrics = {key: float(v[k]) for key, v in stack.items()}
+            if ev is not None and k == n_rounds - 1:
+                metrics.update({key: float(v) for key, v in ev.items()})
+            self._comm.log_round(None, self._n_clients, metrics,
+                                 **self._wire)
+            if self._verbose:
+                print(f"round {self._comm.rounds:4d} " +
+                      " ".join(f"{k2}={v2:.4f}"
+                               for k2, v2 in metrics.items()))

@@ -1,0 +1,87 @@
+"""Double-buffered host pipeline: stage chunk i+1 while chunk i trains.
+
+The old server loop serialized host work (numpy batch assembly, rng draws,
+host->device transfer) with device work every round.  ``HostPrefetcher``
+moves all of it onto one background thread that walks the chunk schedule
+in order — a single thread, because the data rng stream must advance in
+exactly the per-round order of the reference loop for sampled clients and
+batches to match it bit for bit — and hands staged, device-resident chunks
+to the consumer through a bounded queue (default depth 2: one chunk being
+consumed, one in flight).
+
+Exceptions raised inside the builder are re-raised at the consuming
+``__iter__`` site; ``close()`` unblocks and retires the worker if the
+consumer stops early.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, Tuple
+
+
+class HostPrefetcher:
+    """Iterate ``(r0, r1, build_chunk(r0, r1))`` over ``schedule``.
+
+    With ``enabled=False`` the chunks are built synchronously on the
+    consumer thread (same iteration contract, no overlap) — the debugging
+    / fallback path.
+    """
+
+    def __init__(self, build_chunk: Callable, schedule: Iterable[Tuple[int,
+                 int]], *, depth: int = 2, enabled: bool = True):
+        self._build = build_chunk
+        self._schedule = list(schedule)
+        self._enabled = enabled
+        if enabled:
+            self._q: queue.Queue = queue.Queue(maxsize=depth)
+            self._stop = threading.Event()
+            self._thread = threading.Thread(
+                target=self._worker, name="engine-prefetch", daemon=True)
+            self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Blocking put that stays responsive to close()."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _worker(self):
+        try:
+            for r0, r1 in self._schedule:
+                if self._stop.is_set():
+                    return
+                if not self._put((r0, r1, self._build(r0, r1))):
+                    return
+            self._put(None)
+        except BaseException as e:  # surfaced at the consumer
+            self._put(e)
+
+    def __iter__(self) -> Iterator:
+        if not self._enabled:
+            for r0, r1 in self._schedule:
+                yield r0, r1, self._build(r0, r1)
+            return
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+
+    def close(self):
+        """Stop the worker and drop any staged chunks (idempotent)."""
+        if not self._enabled:
+            return
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=1.0)

@@ -1,0 +1,134 @@
+"""Jitted K-round supersteps: ``lax.scan`` over the federated round fn.
+
+One superstep call turns K pre-staged rounds entirely on device:
+
+* client sampling arrives as a pre-sampled ``cids [K, C]`` array (drawn on
+  the host by the prefetch pipeline with the exact rng stream of the
+  one-round-at-a-time loop);
+* the lr schedule arrives as a ``lrs [K]`` array;
+* the compressed path's full-federation error-feedback tree and broadcast
+  mirror ride the scan carry: each round gathers the sampled clients' EF
+  rows (``ops.ef_gather``), runs the compressed round fn, and scatters the
+  new residuals back with a fused in-place row scatter (``ops.ef_scatter``
+  — ``.at[cids].set`` under donation on the jnp path, an aliased Pallas
+  kernel on TPU).  The per-round device->host->device NumPy round-trip of
+  the old server loop is gone;
+* per-round metrics come back stacked ``[K]`` so the host never has to
+  block mid-chunk, and when evaluation happens every round (the paper's
+  accuracy-per-round curves) the fixed-shape evaluator is folded straight
+  into the scan body.
+
+``K == 1`` bypasses ``lax.scan`` and applies the round body to the leading
+slice directly, so a chunk-size-1 engine run compiles the same per-round
+computation as the reference loop — that is what makes the K=1 final model
+bitwise-equal to the pre-engine loop (the equivalence contract
+``tests/test_engine.py`` pins down).
+
+The caller jits the returned function; donate ``global_state`` (and for
+the compressed path ``ef_all`` + ``mirror``) so steady-state chunks update
+those buffers in place instead of reallocating them every call.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rounds import make_compressed_round_fn, make_round_fn
+from repro.kernels import ops
+
+
+def _stack1(tree):
+    """Metrics of a single round -> the [1]-stacked layout scan returns."""
+    return jax.tree.map(lambda v: jnp.asarray(v)[None], tree)
+
+
+def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
+                         impl="auto"):
+    """Uncompressed K-round superstep.
+
+    Returns ``superstep(global_state, batches, sizes, lrs[, test_batch,
+    test_mask]) -> (new_global_state, metrics stacked [K])`` with leading
+    dims ``batches [K, C, steps, B, ...]``, ``sizes [K, C]``, ``lrs [K]``.
+    ``eval_fn`` (traceable, from :func:`repro.engine.make_eval_fn`) folds
+    per-round evaluation of the post-round state into the scan.
+    """
+    round_fn = make_round_fn(bundle, fl, mode, impl=impl)
+
+    def one_round(state, b, n, lr, test):
+        state, metrics = round_fn(state, b, n, lr)
+        if eval_fn is not None:
+            metrics = {**metrics, **eval_fn(state, test[0], test[1])}
+        return state, metrics
+
+    if n_rounds == 1:
+        def superstep(global_state, batches, sizes, lrs, *test):
+            b0 = jax.tree.map(lambda a: a[0], batches)
+            state, m = one_round(global_state, b0, sizes[0], lrs[0], test)
+            return state, _stack1(m)
+        return superstep
+
+    def superstep(global_state, batches, sizes, lrs, *test):
+        def body(state, xs):
+            b, n, lr = xs
+            return one_round(state, b, n, lr, test)
+
+        return jax.lax.scan(body, global_state, (batches, sizes, lrs))
+
+    return superstep
+
+
+def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
+                              *, eval_fn=None, impl="auto"):
+    """Compressed (codec-routed) K-round superstep.
+
+    Returns ``superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+    cids, round_idx, round_key[, test_batch, test_mask]) ->
+    (new_global_state, metrics [K], new_ef_all, new_mirror)``.
+
+    ``ef_all`` holds the FULL federation's per-client uplink EF residuals
+    (leaves ``[n_clients, n]``) on device; ``cids [K, C]`` selects each
+    round's rows.  ``round_idx [K]`` feeds ``fold_in(round_key, r)`` inside
+    the scan, reproducing the reference loop's per-round key derivation
+    bit for bit (fold_in is a pure function of the key data and r).
+    """
+    round_fn = make_compressed_round_fn(bundle, fl, mode, uplink, downlink,
+                                        impl=impl)
+
+    def one_round(state, ef_all, mirror, b, n, lr, cids, r, round_key, test):
+        ef_round = jax.tree.map(lambda t: ops.ef_gather(t, cids, impl=impl),
+                                ef_all)
+        key_r = jax.random.fold_in(round_key, r)
+        state, metrics, new_ef, mirror = round_fn(state, b, n, lr, ef_round,
+                                                  mirror, key_r)
+        ef_all = jax.tree.map(
+            lambda t, rows: ops.ef_scatter(t, cids, rows, impl=impl),
+            ef_all, new_ef)
+        if eval_fn is not None:
+            metrics = {**metrics, **eval_fn(state, test[0], test[1])}
+        return state, ef_all, mirror, metrics
+
+    if n_rounds == 1:
+        def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                      cids, round_idx, round_key, *test):
+            b0 = jax.tree.map(lambda a: a[0], batches)
+            state, ef_all, mirror, m = one_round(
+                global_state, ef_all, mirror, b0, sizes[0], lrs[0], cids[0],
+                round_idx[0], round_key, test)
+            return state, _stack1(m), ef_all, mirror
+        return superstep
+
+    def superstep(global_state, ef_all, mirror, batches, sizes, lrs, cids,
+                  round_idx, round_key, *test):
+        def body(carry, xs):
+            state, ef_all, mirror = carry
+            b, n, lr, cid, r = xs
+            state, ef_all, mirror, m = one_round(
+                state, ef_all, mirror, b, n, lr, cid, r, round_key, test)
+            return (state, ef_all, mirror), m
+
+        (state, ef_all, mirror), mstack = jax.lax.scan(
+            body, (global_state, ef_all, mirror),
+            (batches, sizes, lrs, cids, round_idx))
+        return state, mstack, ef_all, mirror
+
+    return superstep

@@ -25,6 +25,20 @@ class CommLog:
     bytes_up: int = 0
     bytes_down: int = 0
     history: List[Dict] = field(default_factory=list)
+    _model_b: int = field(default=None, repr=False)
+    _fusion_b: int = field(default=None, repr=False)
+
+    def bind_sizes(self, global_state) -> "CommLog":
+        """Precompute the model/fusion wire sizes once.
+
+        Parameter shapes are static for a run, but ``tree_bytes`` walks the
+        whole pytree; the superstep engine logs rounds in a deferred batch
+        (``repro.engine.metrics``), so per-round traversal is pure host
+        overhead.  After binding, ``log_round`` accepts
+        ``global_state=None``."""
+        self._model_b = tree_bytes(global_state["model"])
+        self._fusion_b = tree_bytes(global_state.get("fusion", ()))
+        return self
 
     def log_round(self, global_state, n_clients: int, metrics: Dict, *,
                   wire_up: int = None, wire_down: int = None,
@@ -45,8 +59,13 @@ class CommLog:
         only needed by the round's participants, so its raw bytes are
         charged to ``n_clients`` receivers in both directions.
         """
-        model_b = tree_bytes(global_state["model"])
-        fusion_b = tree_bytes(global_state.get("fusion", ()))
+        if global_state is None:
+            assert self._model_b is not None, "log_round(None) needs " \
+                "bind_sizes(global_state) first"
+            model_b, fusion_b = self._model_b, self._fusion_b
+        else:
+            model_b = tree_bytes(global_state["model"])
+            fusion_b = tree_bytes(global_state.get("fusion", ()))
         n_down = n_clients if n_down is None else n_down
         down = (n_down * (model_b if wire_down is None else wire_down)
                 + n_clients * fusion_b)

@@ -1,14 +1,17 @@
 """Federated server loop (paper Alg. 1 / Alg. 2) for CPU-scale experiments.
 
-The per-round step (local training on the sampled clients + aggregation) is
-a single jit'd function from ``repro.core.rounds``; this loop adds client
-sampling, the lr schedule, evaluation and communication accounting.  The
-pod-scale counterpart (pjit on the production mesh) lives in
+``run_federated`` is backed by the device-resident engine
+(``repro.engine``): a jitted K-round superstep scans the per-round step on
+device with donated buffers and on-device error-feedback scatter, a
+prefetch thread stages the next chunk's batches, and metrics come back as
+futures.  The pre-engine one-round-at-a-time loop is preserved verbatim as
+``run_federated_reference`` — it is the equivalence oracle for the engine
+tests and the baseline ``benchmarks/bench_engine.py`` measures speedups
+against.  The pod-scale counterpart (pjit on the production mesh) lives in
 ``repro.launch.train``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
 import jax
@@ -21,25 +24,51 @@ from repro.core import accuracy, cross_entropy, init_global_state, make_round_fn
 from repro.core.fusion import fusion_apply
 from repro.core.rounds import make_compressed_round_fn
 from repro.data.federated import FederatedDataset
+from repro.engine import (ServerResult, make_eval_fn, pad_eval_batch,
+                          run_federated_engine)
 from repro.fl.comm import CommLog
 from repro.models.registry import ModelBundle
 from repro.optim import exp_decay_per_round
 
+__all__ = ["ServerResult", "evaluate", "run_federated",
+           "run_federated_reference"]
 
-@dataclass
-class ServerResult:
-    global_state: Dict
-    comm: CommLog
+# jitted evaluators, keyed by (bundle identity, algorithm, fusion_op); the
+# value keeps a strong ref to the bundle so the id() key stays valid.
+_EVAL_CACHE: Dict = {}
+
+
+def _jitted_eval(bundle: ModelBundle, fl: FLConfig):
+    key = (id(bundle), fl.algorithm, fl.fusion_op)
+    hit = _EVAL_CACHE.get(key)
+    if hit is None or hit[0] is not bundle:
+        while len(_EVAL_CACHE) >= 64:    # evict oldest, keep the hot set
+            _EVAL_CACHE.pop(next(iter(_EVAL_CACHE)))
+        hit = (bundle, jax.jit(make_eval_fn(bundle, fl)))
+        _EVAL_CACHE[key] = hit
+    return hit[1]
 
 
 def evaluate(bundle: ModelBundle, fl: FLConfig, global_state, batch,
              max_examples: int = 2048) -> Dict[str, float]:
-    """Test accuracy of the *global* model (paper's y-axis).
+    """Test accuracy of the *global* model (paper's y-axis) — compiled.
 
+    The batch is padded to a fixed power-of-two bucket with a validity
+    mask (``repro.engine.pad_eval_batch``) so one jitted evaluator serves
+    any test-set size; masked means equal the unpadded metrics exactly.
     For FedFusion the deployed global model fuses its own features with
-    itself through the aggregated fusion module (E_g = E_l = global), which
-    reduces to the identity for multi/single gates and to W_g+W_l for conv.
+    itself through the aggregated fusion module (E_g = E_l = global).
     """
+    padded, mask = pad_eval_batch(batch, max_examples)
+    out = _jitted_eval(bundle, fl)(global_state, padded, mask)
+    return {k: float(v) for k, v in out.items()}
+
+
+def _evaluate_eager(bundle: ModelBundle, fl: FLConfig, global_state, batch,
+                    max_examples: int = 2048) -> Dict[str, float]:
+    """The pre-engine evaluator: uncompiled ``bundle.apply`` on the raw
+    batch.  Kept as the op-by-op oracle for the jitted path and as the
+    faithful baseline cost model in ``benchmarks/bench_engine.py``."""
     key = "x" if "x" in batch else "tokens"
     n = min(len(batch[key]), max_examples)
     batch = {k: jnp.asarray(v[:n]) for k, v in batch.items()}
@@ -60,15 +89,52 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   verbose: bool = False,
                   checkpoint_dir: Optional[str] = None,
                   checkpoint_every: int = 10,
-                  callback: Optional[Callable] = None) -> ServerResult:
-    """Server loop.  With ``checkpoint_dir``, the server state is saved
-    every ``checkpoint_every`` rounds and training RESUMES from the last
-    checkpoint if one exists (round-resumable, paper Alg. 1 line 1 is
-    only executed on a cold start)."""
+                  callback: Optional[Callable] = None,
+                  superstep_rounds: int = 8,
+                  prefetch: bool = True) -> ServerResult:
+    """Server loop, engine-backed (see ``repro.engine``).
+
+    With ``checkpoint_dir``, the server state is saved every
+    ``checkpoint_every`` rounds and training RESUMES from the last
+    checkpoint if one exists (round-resumable, paper Alg. 1 line 1 is only
+    executed on a cold start).  ``superstep_rounds`` caps how many rounds
+    one jitted chunk scans on device; ``prefetch`` stages the next chunk's
+    batches on a background thread.  Identical results to
+    :func:`run_federated_reference` on the same seed/config.
+    """
+    return run_federated_engine(
+        bundle, fl, data, rounds=rounds, seed=seed, mode=mode,
+        eval_every=eval_every, eval_examples=eval_examples, verbose=verbose,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        callback=callback, superstep_rounds=superstep_rounds,
+        prefetch=prefetch)
+
+
+def run_federated_reference(bundle: ModelBundle, fl: FLConfig,
+                            data: FederatedDataset, *, rounds: int,
+                            seed: int = 0, mode: str = "client_parallel",
+                            eval_every: int = 1, eval_examples: int = 2048,
+                            verbose: bool = False,
+                            checkpoint_dir: Optional[str] = None,
+                            checkpoint_every: int = 10,
+                            callback: Optional[Callable] = None,
+                            eval_fn: Callable = None) -> ServerResult:
+    """The pre-engine server loop, one Python-dispatched round at a time.
+
+    Preserved as (a) the equivalence oracle the engine is tested against —
+    same rng streams, same per-round math, bitwise-equal final model at
+    chunk size 1 — and (b) the baseline ``benchmarks/bench_engine.py``
+    times (pass ``eval_fn=_evaluate_eager`` there to reproduce the
+    pre-engine cost model, uncompiled eval included).  ``eval_fn`` defaults
+    to the jitted :func:`evaluate` so reference and engine histories match
+    exactly.
+    """
     import os
     from repro.checkpoint.io import (load_tree, restore_server_state,
                                      save_server_state, save_tree)
 
+    if eval_fn is None:
+        eval_fn = evaluate
     key = jax.random.PRNGKey(seed)
     global_state = init_global_state(bundle, fl, key)
     start_round = 0
@@ -129,8 +195,8 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                                              jnp.asarray(sizes), lr_at(r))
         metrics = {k: float(v) for k, v in metrics.items()}
         if (r + 1) % eval_every == 0:
-            metrics.update(evaluate(bundle, fl, global_state, test,
-                                    eval_examples))
+            metrics.update(eval_fn(bundle, fl, global_state, test,
+                                   eval_examples))
         comm.log_round(global_state, len(cids), metrics,
                        wire_up=wire_up, wire_down=wire_down,
                        n_down=(data.n_clients

@@ -11,6 +11,13 @@ Three kernels back the codec subsystem (oracles in ``kernels/ref.py``):
 * ``topk_select``  — magnitude threshold select ``x * (|x| >= t)``: the
   dense decode∘encode of top-k sparsification, used to form the error-
   feedback residual without materialising gather/scatter indices.
+* ``ef_gather`` / ``ef_scatter`` — row gather/scatter for the device-
+  resident per-client error-feedback table (``repro.engine``): the full-
+  federation EF tree lives flattened as [n_clients, n] and each round
+  pulls/pushes only the sampled clients' rows.  ``ef_scatter`` aliases the
+  table input to its output (``input_output_aliases``) so the update is
+  in-place — no [n_clients, n]-sized copy per round, which is the whole
+  point of keeping EF on device.
 
 All kernels view the flat tensor as [rows, 128] lanes and run a 1-D grid
 over row blocks; wrappers pad to tile multiples and slice the result back,
@@ -140,6 +147,85 @@ def _topk_select_kernel(x_ref, thresh_ref, out_ref):
     x = x_ref[...]
     keep = jnp.abs(x) >= thresh_ref[0]
     out_ref[...] = jnp.where(keep, x, jnp.zeros_like(x))
+
+
+def _ef_cols(table):
+    """[N, ...] -> ([N, cols] fp32 lane-padded view, n, trailing shape)."""
+    N = table.shape[0]
+    trail = table.shape[1:]
+    flat = table.reshape(N, -1)
+    n = flat.shape[1]
+    pad = (-n) % LANES
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    return flat, n, trail
+
+
+def _ef_gather_kernel(idx_ref, table_ref, out_ref):
+    i = pl.program_id(0)
+    row = idx_ref[i]
+    out_ref[...] = pl.load(
+        table_ref, (pl.dslice(row, 1), pl.dslice(0, out_ref.shape[1])))
+
+
+def ef_gather(table, idx, *, interpret=True):
+    """table [N, ...], idx [k] int -> the idx rows as [k, ...].
+
+    Grid over the k sampled clients; each step dynamic-slices one full row
+    out of the table (which stays in ``ANY`` memory — on TPU the row moves
+    HBM->VMEM exactly once)."""
+    flat, n, trail = _ef_cols(table)
+    cols = flat.shape[1]
+    k = idx.shape[0]
+    out = pl.pallas_call(
+        _ef_gather_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, cols), flat.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), flat)
+    return out[:, :n].reshape((k,) + trail)
+
+
+def _ef_scatter_kernel(idx_ref, rows_ref, table_ref, out_ref):
+    del table_ref  # aliased to out_ref; written, never read
+    i = pl.program_id(0)
+    row = idx_ref[i]
+    pl.store(out_ref, (pl.dslice(row, 1), pl.dslice(0, out_ref.shape[1])),
+             rows_ref[...])
+
+
+def ef_scatter(table, idx, rows, *, interpret=True):
+    """Write rows [k, ...] into table [N, ...] at idx — in place.
+
+    The table is donated into the kernel via ``input_output_aliases``, so
+    the untouched N-k rows are never copied.  ``idx`` must be unique (the
+    federated sampler asserts this); duplicate rows would race.
+    """
+    flat, n, trail = _ef_cols(table)
+    cols = flat.shape[1]
+    k = idx.shape[0]
+    rflat = rows.reshape(k, -1).astype(flat.dtype)
+    if cols != rflat.shape[1]:
+        rflat = jnp.pad(rflat, ((0, 0), (0, cols - rflat.shape[1])))
+    out = pl.pallas_call(
+        _ef_scatter_kernel,
+        grid=(k,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, cols), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(idx.astype(jnp.int32), rflat, flat)
+    return out[:, :n].reshape(table.shape)
 
 
 def topk_select(x, thresh, *, interpret=True):

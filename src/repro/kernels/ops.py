@@ -91,6 +91,39 @@ def topk_threshold_select(x, thresh, *, impl="auto"):
                                      interpret=(impl == "pallas_interpret"))
 
 
+def ef_gather(table, idx, *, impl="auto"):
+    """Pull the sampled clients' rows [k, ...] out of a device-resident
+    per-client table [N, ...] (error-feedback residuals, ``repro.engine``).
+
+    ``auto`` resolves to jnp on every backend for now: the Pallas kernel
+    reads the row index from an ANY-memory ref, which needs the scalar-
+    prefetch rework (ROADMAP) before it can compile TPU-native.  Explicit
+    ``impl="pallas"``/``"pallas_interpret"`` still select the kernel."""
+    if impl == "auto":
+        impl = "jnp"
+    if impl == "jnp":
+        return ref.ef_gather_ref(table, idx)
+    return compress_pack.ef_gather(table, idx,
+                                   interpret=(impl == "pallas_interpret"))
+
+
+def ef_scatter(table, idx, rows, *, impl="auto"):
+    """Write rows [k, ...] back into table [N, ...] at the (unique) idx.
+
+    The jnp path is ``table.at[idx].set(rows)`` — under jit with the table
+    donated, XLA performs this in place; the Pallas path aliases the table
+    buffer explicitly.  Either way the full-federation EF tree is updated
+    without a device->host round-trip.  ``auto`` -> jnp on every backend
+    until the kernel's index read moves to scalar prefetch (see
+    :func:`ef_gather`)."""
+    if impl == "auto":
+        impl = "jnp"
+    if impl == "jnp":
+        return ref.ef_scatter_ref(table, idx, rows)
+    return compress_pack.ef_scatter(table, idx, rows,
+                                    interpret=(impl == "pallas_interpret"))
+
+
 def gqa_flash_decode(q, k_cache, v_cache, valid_len=None, *, impl="auto"):
     """One-token GQA decode attention against a KV cache."""
     impl = _resolve(impl)

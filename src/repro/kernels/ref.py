@@ -90,6 +90,27 @@ def topk_select_ref(x, thresh):
     return jnp.where(jnp.abs(x) >= thresh, x, jnp.zeros_like(x))
 
 
+def ef_gather_ref(table, idx):
+    """Row gather of the device-resident error-feedback table.
+
+    table [N, ...] (one row per federation client), idx [k] int32 — the
+    round's sampled client ids.  Returns the [k, ...] rows the round fn
+    threads as per-client EF state.
+    """
+    return jnp.take(table, idx, axis=0)
+
+
+def ef_scatter_ref(table, idx, rows):
+    """Row scatter: write rows [k, ...] back into table [N, ...] at idx.
+
+    ``idx`` must be unique (``FederatedDataset.sample_clients`` asserts
+    it); with duplicates ``.at[].set`` keeps the last write, silently
+    dropping the other client's residual — the exact hazard the sampler
+    guard exists for.
+    """
+    return table.at[idx].set(rows)
+
+
 def decode_attn_ref(q, k_cache, v_cache, valid_len):
     """GQA flash-decode oracle.
 

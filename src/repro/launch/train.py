@@ -86,7 +86,7 @@ def main() -> None:
         rng = np.random.default_rng(0)
         lr_at = exp_decay_per_round(fl.lr, 0.995)
 
-        for r in range(args.rounds):
+        def make_batch():
             per = []
             for c in range(plan.n_clients):
                 pool = parts[c]["tokens"]
@@ -94,14 +94,31 @@ def main() -> None:
                                  (plan.local_steps, plan.client_batch))
                 per.append(pool[idx])
             arr = np.stack(per)                      # [C, steps, B, S+1]
-            batch = {"tokens": jnp.asarray(arr[..., :-1]),
-                     "labels": jnp.asarray(arr[..., 1:])}
-            nex = jnp.ones((plan.n_clients,), jnp.float32)
-            t0 = time.perf_counter()
+            return {"tokens": jnp.asarray(arr[..., :-1]),
+                    "labels": jnp.asarray(arr[..., 1:])}
+
+        # Pipelined round loop (repro.engine style): dispatch round r, then
+        # assemble round r+1's batch on the host while the device trains,
+        # and only force round r-1's metrics — the `float()` sync that used
+        # to serialize host and device every round now trails by one round.
+        nex = jnp.ones((plan.n_clients,), jnp.float32)
+        batch = make_batch()
+        pending = None
+        t0 = time.perf_counter()
+        for r in range(args.rounds):
             state, metrics = step(state, batch, nex, lr_at(r))
-            loss = float(metrics["local_loss"])
-            print(f"round {r+1:3d}  loss={loss:.4f}  "
-                  f"{(time.perf_counter()-t0)*1e3:.0f} ms")
+            if r + 1 < args.rounds:
+                batch = make_batch()                 # overlaps device work
+            if pending is not None:
+                pr, pm, pt = pending
+                print(f"round {pr+1:3d}  loss={float(pm['local_loss']):.4f}"
+                      f"  {(time.perf_counter()-pt)*1e3:.0f} ms")
+                t0 = time.perf_counter()
+            pending = (r, metrics, t0)
+        if pending is not None:
+            pr, pm, pt = pending
+            print(f"round {pr+1:3d}  loss={float(pm['local_loss']):.4f}  "
+                  f"{(time.perf_counter()-pt)*1e3:.0f} ms")
     print("done")
 
 

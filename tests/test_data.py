@@ -127,3 +127,41 @@ def test_federated_dataset_lm_batches_shift_labels():
     assert batches["labels"].shape == (2, 1, 4, 16)
     np.testing.assert_array_equal(batches["labels"][..., :-1],
                                   batches["tokens"][..., 1:])
+
+
+def test_sample_clients_unique_and_guarded():
+    """EF state is scattered back by cid (``table.at[cids].set``): a
+    duplicated cid would silently drop one client's residual, so the
+    sampler must (a) never produce duplicates and (b) assert if a broken
+    rng ever does."""
+    x, y = class_images(6, n_classes=4, shape=(6, 6, 1), seed=0)
+    data = FederatedDataset(iid_partition(x, y, 6), {"x": x, "y": y}, seed=0)
+    for _ in range(50):
+        cids = data.sample_clients(4)
+        assert len(np.unique(cids)) == len(cids)
+    assert len(data.sample_clients(100)) == 6  # capped at n_clients, unique
+
+    class DupRng:
+        def choice(self, n, size, replace):
+            return np.zeros(size, np.int64)   # a buggy rng: all duplicates
+
+    data._rng = DupRng()
+    with pytest.raises(AssertionError, match="duplicate"):
+        data.sample_clients(3)
+
+
+def test_round_chunk_matches_per_round_stream():
+    """round_chunk(K) consumes the rng stream exactly like K iterations of
+    sample_clients + round_batch — the bitwise contract the superstep
+    engine's prefetcher relies on."""
+    x, y = class_images(6, n_classes=4, shape=(6, 6, 1), seed=0)
+    a = FederatedDataset(iid_partition(x, y, 4), {"x": x, "y": y}, seed=5)
+    b = FederatedDataset(iid_partition(x, y, 4), {"x": x, "y": y}, seed=5)
+    cids, batches, sizes = a.round_chunk(3, 2, 2, 4)
+    for k in range(3):
+        want_cids = b.sample_clients(2)
+        want_b, want_s = b.round_batch(want_cids, 2, 4)
+        np.testing.assert_array_equal(cids[k], want_cids)
+        np.testing.assert_array_equal(sizes[k], want_s)
+        for key in want_b:
+            np.testing.assert_array_equal(batches[key][k], want_b[key])

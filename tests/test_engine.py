@@ -1,0 +1,227 @@
+"""Engine equivalence: the superstep loop IS the reference loop.
+
+The contract pinned here is the repo's strongest: for every execution mode
+x codec combination, the chunked engine (``run_federated``) reproduces the
+preserved pre-engine loop (``run_federated_reference``) *exactly* — final
+global model bitwise-equal, CommLog history equal as Python objects
+(bytes, local_loss and eval metrics included), and identical
+checkpoint-resume behaviour.  K=1 bypasses ``lax.scan`` entirely; K=4
+exercises the scan carry (global state + EF tree + mirror threading).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CNN_CONFIGS
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedDataset
+from repro.data.partition import iid_partition
+from repro.data.synth import class_images
+from repro.engine import chunk_schedule
+from repro.fl.server import (_evaluate_eager, evaluate, run_federated,
+                             run_federated_reference)
+from repro.models.registry import make_bundle
+
+
+_BUNDLE = None
+
+
+def _bundle():
+    global _BUNDLE
+    if _BUNDLE is None:
+        cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"],
+                                  input_shape=(8, 8, 1), conv_channels=(4,),
+                                  fc_units=(8,), dropout=0.0)
+        _BUNDLE = make_bundle(cfg)
+    return _BUNDLE
+
+
+def _data(seed=3):
+    x, y = class_images(12, n_classes=4, shape=(8, 8, 1), seed=0)
+    return FederatedDataset(iid_partition(x, y, 4),
+                            {"x": x[:16], "y": y[:16]}, seed=seed)
+
+
+def _assert_same(ref, eng):
+    for a, b in zip(jax.tree.leaves(ref.global_state),
+                    jax.tree.leaves(eng.global_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.comm.history == eng.comm.history
+    assert ref.comm.bytes_up == eng.comm.bytes_up
+    assert ref.comm.bytes_down == eng.comm.bytes_down
+
+
+FL_CASES = {
+    "plain": dict(),
+    "topk": dict(uplink_codec="topk", topk_frac=0.1),
+    "quant+downtopk": dict(uplink_codec="int8", downlink_codec="topk",
+                           topk_frac=0.1),
+    "fusion-topk": dict(algorithm="fedfusion", fusion_op="conv",
+                        uplink_codec="topk", topk_frac=0.1),
+}
+
+
+_REF_CACHE = {}
+
+
+def _fl_for(case):
+    kw = dict(FL_CASES[case])
+    algo = kw.pop("algorithm", "fedavg")
+    return FLConfig(algorithm=algo, clients_per_round=2, local_steps=2,
+                    local_batch=4, lr=0.05, **kw)
+
+
+def _reference(bundle, mode, case):
+    if (mode, case) not in _REF_CACHE:
+        _REF_CACHE[mode, case] = run_federated_reference(
+            bundle, _fl_for(case), _data(), rounds=6, seed=1, eval_every=2,
+            mode=mode)
+    return _REF_CACHE[mode, case]
+
+
+@pytest.mark.parametrize("mode", ["client_parallel", "client_sequential"])
+@pytest.mark.parametrize("case", sorted(FL_CASES))
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_engine_reproduces_reference(mode, case, chunk):
+    """Chunked superstep == seed loop: model bitwise, history exactly."""
+    bundle = _bundle()
+    ref = _reference(bundle, mode, case)
+    eng = run_federated(bundle, _fl_for(case), _data(), rounds=6, seed=1,
+                        eval_every=2, mode=mode, superstep_rounds=chunk)
+    _assert_same(ref, eng)
+
+
+def test_engine_eval_every_round_in_scan():
+    """eval_every=1 folds evaluation into the scan body; the per-round
+    acc/loss trajectory still matches the reference exactly."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=2,
+                  local_batch=4, lr=0.05)
+    ref = run_federated_reference(bundle, fl, _data(), rounds=5, seed=1,
+                                  eval_every=1)
+    eng = run_federated(bundle, fl, _data(), rounds=5, seed=1, eval_every=1,
+                        superstep_rounds=4)
+    _assert_same(ref, eng)
+    assert all("acc" in h for h in eng.comm.history)
+
+
+@pytest.mark.parametrize("codec", ["identity", "topk"])
+def test_engine_checkpoint_resume_matches_reference(tmp_path, codec):
+    """Interrupt at round 4, resume to 8 — both loops land on the same
+    state, and the engine restores the device-side EF tree from ef.npz."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=2,
+                  local_batch=4, lr=0.05, uplink_codec=codec, topk_frac=0.1)
+    dr = _data()
+    run_federated_reference(bundle, fl, dr, rounds=4, seed=1, eval_every=4,
+                            checkpoint_dir=str(tmp_path / "ref"),
+                            checkpoint_every=2)
+    ref = run_federated_reference(bundle, fl, dr, rounds=8, seed=1,
+                                  eval_every=4,
+                                  checkpoint_dir=str(tmp_path / "ref"),
+                                  checkpoint_every=2)
+    de = _data()
+    run_federated(bundle, fl, de, rounds=4, seed=1, eval_every=4,
+                  checkpoint_dir=str(tmp_path / "eng"), checkpoint_every=2,
+                  superstep_rounds=3)
+    eng = run_federated(bundle, fl, de, rounds=8, seed=1, eval_every=4,
+                        checkpoint_dir=str(tmp_path / "eng"),
+                        checkpoint_every=2, superstep_rounds=3)
+    _assert_same(ref, eng)
+    assert ref.comm.rounds == eng.comm.rounds == 4  # only rounds 5..8 ran
+
+
+def test_engine_callback_gets_per_round_state():
+    """A callback forces one-round chunks and sees the same (round,
+    metrics) sequence as the reference loop."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=1,
+                  local_batch=4, lr=0.05)
+
+    def make_cb(store):
+        def cb(r, state, metrics):
+            store[r] = dict(metrics)
+        return cb
+
+    ref_seen, eng_seen = {}, {}
+    run_federated_reference(bundle, fl, _data(), rounds=3, seed=1,
+                            eval_every=1, callback=make_cb(ref_seen))
+    run_federated(bundle, fl, _data(), rounds=3, seed=1, eval_every=1,
+                  callback=make_cb(eng_seen), superstep_rounds=4)
+    assert ref_seen == eng_seen
+    assert sorted(ref_seen) == [0, 1, 2]
+
+
+def test_engine_prefetch_off_identical():
+    """prefetch=False (synchronous staging) changes nothing numerically."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=1,
+                  local_batch=4, lr=0.05)
+    a = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                      superstep_rounds=2, prefetch=True)
+    b = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                      superstep_rounds=2, prefetch=False)
+    _assert_same(a, b)
+
+
+def test_chunk_schedule_boundaries():
+    """Chunks never cross eval or checkpoint boundaries."""
+    sched = chunk_schedule(0, 20, 8, eval_every=5, ckpt_every=4)
+    assert sched[0] == (0, 4)
+    flat = [b for _, b in sched]
+    assert all(b % 5 == 0 or b % 4 == 0 or b == 20 for b in flat)
+    assert sched[-1][1] == 20
+    # contiguous, in order
+    assert all(sched[i][1] == sched[i + 1][0] for i in range(len(sched) - 1))
+    # per-round mode (callback) degenerates to K=1
+    assert chunk_schedule(2, 5, 8, per_round=True) == [(2, 3), (3, 4),
+                                                       (4, 5)]
+    # eval folded into the scan imposes no boundary
+    assert chunk_schedule(0, 16, 8, eval_every=None) == [(0, 8), (8, 16)]
+
+
+def test_jitted_evaluate_matches_eager():
+    """The pad-and-mask jitted evaluator equals the uncompiled original."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg")
+    from repro.core.rounds import init_global_state
+    state = init_global_state(bundle, fl, jax.random.PRNGKey(0))
+    batch = _data().test_batch()
+    fast = evaluate(bundle, fl, state, batch)
+    slow = _evaluate_eager(bundle, fl, state, batch)
+    assert fast.keys() == slow.keys()
+    for k in fast:
+        np.testing.assert_allclose(fast[k], slow[k], rtol=1e-5, atol=1e-6)
+
+
+def test_jitted_evaluate_respects_max_examples():
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg")
+    from repro.core.rounds import init_global_state
+    state = init_global_state(bundle, fl, jax.random.PRNGKey(0))
+    batch = _data().test_batch()
+    fast = evaluate(bundle, fl, state, batch, max_examples=8)
+    slow = _evaluate_eager(bundle, fl, state, batch, max_examples=8)
+    for k in fast:
+        np.testing.assert_allclose(fast[k], slow[k], rtol=1e-5, atol=1e-6)
+
+
+def test_masked_metrics_ignore_padding():
+    """Masked accuracy/CE on a padded batch == plain metrics unpadded."""
+    import jax.numpy as jnp
+    from repro.core import (accuracy, cross_entropy, masked_accuracy,
+                            masked_cross_entropy)
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (6, 5))
+    labels = jax.random.randint(key, (6,), 0, 5)
+    pad_logits = jnp.concatenate([logits, 100 * jnp.ones((2, 5))])
+    pad_labels = jnp.concatenate([labels, jnp.zeros((2,), labels.dtype)])
+    mask = jnp.arange(8) < 6
+    np.testing.assert_allclose(
+        float(masked_accuracy(pad_logits, pad_labels, mask)),
+        float(accuracy(logits, labels)), rtol=1e-6)
+    np.testing.assert_allclose(
+        float(masked_cross_entropy(pad_logits, pad_labels, mask)),
+        float(cross_entropy(logits, labels)), rtol=1e-5)

@@ -229,3 +229,43 @@ def test_gqa_flash_decode_wrapper_paths_agree():
     a = ops.gqa_flash_decode(q, k, v, 80, impl="jnp")
     b = ops.gqa_flash_decode(q, k, v, 80, impl="pallas_interpret")
     np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# EF gather / scatter (repro.engine's device-resident error-feedback table)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("N,n,k", [(6, 256, 3), (5, 100, 5), (16, 384, 4),
+                                   (3, 7, 2)])
+def test_ef_gather_matches_ref(N, n, k):
+    key = jax.random.PRNGKey(N * n)
+    table = jax.random.normal(key, (N, n))
+    idx = jax.random.permutation(key, N)[:k].astype(jnp.int32)
+    want = ops.ef_gather(table, idx, impl="jnp")
+    got = ops.ef_gather(table, idx, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("N,n,k", [(6, 256, 3), (5, 100, 5), (16, 384, 4)])
+def test_ef_scatter_matches_ref(N, n, k):
+    ks = jax.random.split(jax.random.PRNGKey(N + n), 3)
+    table = jax.random.normal(ks[0], (N, n))
+    idx = jax.random.permutation(ks[1], N)[:k].astype(jnp.int32)
+    rows = jax.random.normal(ks[2], (k, n))
+    want = ops.ef_scatter(table, idx, rows, impl="jnp")
+    got = ops.ef_scatter(table, idx, rows, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # untouched rows preserved, selected rows replaced
+    np.testing.assert_array_equal(np.asarray(want[np.asarray(idx)]),
+                                  np.asarray(rows))
+
+
+def test_ef_scatter_gather_roundtrip_multidim():
+    """Trailing dims beyond 2-D flatten transparently in the wrappers."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    table = jax.random.normal(ks[0], (4, 3, 10))
+    rows = jax.random.normal(ks[1], (2, 3, 10))
+    idx = jnp.array([2, 0], jnp.int32)
+    out = ops.ef_scatter(table, idx, rows, impl="pallas_interpret")
+    back = ops.ef_gather(out, idx, impl="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(rows))
