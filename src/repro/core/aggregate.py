@@ -1,20 +1,91 @@
-"""Server-side aggregation (paper Alg. 1 / Alg. 2 line 7)."""
+"""Server-side aggregation (paper Alg. 1 / Alg. 2 line 7).
+
+All aggregations take an optional ``shard`` — a :class:`ClientSharding`
+describing how the round's client axis is split over mesh axes inside a
+``shard_map`` body.  With ``shard=None`` (the default, and the only mode
+exercised on a single device) every function is exactly the pre-sharding
+code path: a pure in-shard reduction with no collectives, so single-device
+results stay bitwise-identical.  With a shard, each function reduces its
+local clients in-shard and finishes with one ``psum`` over the client mesh
+axes — the only cross-device communication FedAvg actually requires.
+"""
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def normalize_weights(n_examples):
+@dataclass(frozen=True)
+class ClientSharding:
+    """How the round's client axis maps onto mesh axes (``shard_map`` body).
+
+    ``axes``/``sizes``: the mesh axis names the client dimension is split
+    over (in major-to-minor order, e.g. ``("pod", "data")``) and their
+    static sizes.  Instances only make sense inside a ``shard_map`` over
+    those axes; the factories in ``repro.core.rounds`` treat ``None`` as
+    "unsharded".
+    """
+
+    axes: Tuple[str, ...]
+    sizes: Tuple[int, ...]
+
+    @property
+    def axis_name(self):
+        """The axis-name argument collectives take (str or tuple)."""
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+    @property
+    def n_shards(self) -> int:
+        n = 1
+        for s in self.sizes:
+            n *= s
+        return n
+
+    def position(self):
+        """This shard's row-major position along the client axis (traced)."""
+        pos = jnp.zeros((), jnp.int32)
+        for a, s in zip(self.axes, self.sizes):
+            pos = pos * s + jax.lax.axis_index(a)
+        return pos
+
+
+def psum_tree(tree, shard: ClientSharding):
+    """``psum`` every leaf over the client axes (identity when unsharded)."""
+    if shard is None:
+        return tree
+    return jax.lax.psum(tree, shard.axis_name)
+
+
+def normalize_weights(n_examples, shard: ClientSharding = None):
     n = jnp.asarray(n_examples, jnp.float32)
-    return n / jnp.sum(n)
+    total = jnp.sum(n)
+    if shard is not None:
+        total = jax.lax.psum(total, shard.axis_name)
+    return n / total
 
 
-def weighted_mean(stacked_tree, weights):
-    """stacked_tree: pytree with leading client axis; weights [n_clients]."""
-    return jax.tree.map(
+def weighted_mean(stacked_tree, weights, shard: ClientSharding = None):
+    """stacked_tree: pytree with leading client axis; weights [n_clients].
+
+    Sharded: the tensordot reduces this shard's clients, the trailing
+    ``psum`` completes the sum over the full round (weights are globally
+    normalized by :func:`normalize_weights`).
+    """
+    local = jax.tree.map(
         lambda x: jnp.tensordot(weights.astype(x.dtype), x, axes=1),
         stacked_tree)
+    return psum_tree(local, shard)
+
+
+def mean_over_clients(values, shard: ClientSharding = None):
+    """Mean of a per-client [C_local] array over the FULL round's clients."""
+    m = jnp.mean(values)
+    if shard is None:
+        return m
+    return jax.lax.pmean(m, shard.axis_name)
 
 
 def running_update(acc_tree, tree, weight):

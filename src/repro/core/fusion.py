@@ -43,16 +43,24 @@ def fusion_apply(op: str, params, f_g, f_l, *, impl="auto"):
     return lam * f_g + (1.0 - lam) * f_l
 
 
-def fusion_aggregate(op: str, old_global, client_fusions, weights, ema_beta):
+def fusion_aggregate(op: str, old_global, client_fusions, weights, ema_beta,
+                     shard=None):
     """Aggregate per-client fusion params returned after local training.
 
     ``client_fusions``: pytree with a leading client axis.
     ``weights``: [n_clients], sums to 1 (n_t-weighted).
     conv -> weighted average; multi/single -> EMA between the old global
     gate and the weighted client average (paper: EMA smoothing).
+
+    ``shard`` (:class:`repro.core.aggregate.ClientSharding`): inside a
+    ``shard_map`` body the client axis holds only this shard's clients;
+    the weighted average is completed with one ``psum`` over the client
+    mesh axes BEFORE the EMA (the gate statistic is a round-global
+    quantity, the EMA must see the full-round average exactly once).
     """
-    avg = jax.tree.map(
-        lambda x: jnp.tensordot(weights, x, axes=1), client_fusions)
+    from repro.core.aggregate import psum_tree
+    avg = psum_tree(jax.tree.map(
+        lambda x: jnp.tensordot(weights, x, axes=1), client_fusions), shard)
     if op == "conv":
         return avg
     return jax.tree.map(

@@ -24,28 +24,60 @@ returned broadcast (4th output) IS the clients' next downlink mirror; the
 engine threads it and the per-client EF rows through the scan carry and
 scatters the EF rows back into the device-resident full-federation table
 (``ops.ef_scatter``).
+
+Sharding contract (``repro.engine.sharded``): with ``shard`` — a
+:class:`repro.core.aggregate.ClientSharding` — the round fn is a
+``shard_map`` BODY: its client axis holds only this shard's slice of the
+round's clients (positional split: shard s trains sampled positions
+``[s*C_loc, (s+1)*C_loc)``), every per-client quantity (local training,
+codec encode/decode, EF rows) stays shard-local, and the only collectives
+are the in-shard-reduce + single ``psum`` aggregations in
+``repro.core.aggregate`` / ``fusion_aggregate``.  Replicated inputs
+(global model, mirror, round key, lr) produce bitwise-identical replicated
+outputs on every shard because the psum results agree everywhere.  With
+``shard=None`` the code path is exactly the pre-sharding one — no
+collectives — which is what keeps the single-device engine
+bitwise-equal to the reference loop.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core.aggregate import (normalize_weights, running_update,
-                                  weighted_mean, zeros_like_tree)
+from repro.core.aggregate import (ClientSharding, mean_over_clients,
+                                  normalize_weights, psum_tree,
+                                  running_update, weighted_mean,
+                                  zeros_like_tree)
 from repro.core.fusion import fusion_aggregate
 from repro.core.local import make_local_trainer
 from repro.models.registry import ModelBundle
 
 
+def _local_client_keys(key, n_local: int, shard: Optional[ClientSharding]):
+    """Per-client rng keys for THIS shard's clients.
+
+    The reference loop splits the round key over the full C sampled
+    clients in positional order; a shard must use the identical keys for
+    its positional slice, so the full split is computed (replicated — it
+    is a few dozen uint32s) and dynamically sliced at the shard offset.
+    """
+    if shard is None:
+        return jax.random.split(key, n_local)
+    full = jax.random.split(key, n_local * shard.n_shards)
+    start = (shard.position() * n_local).astype(jnp.int32)
+    return jax.lax.dynamic_slice_in_dim(full, start, n_local, axis=0)
+
+
 def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
-                  impl="auto"):
+                  impl="auto", shard: Optional[ClientSharding] = None):
     """Returns round_fn(global_state, client_batches, n_examples, lr).
 
     ``client_batches``: pytree with leading dims [n_clients, local_steps, ...].
     ``n_examples``: [n_clients] float (n_t weighting).
+    Under ``shard`` both carry only this shard's clients.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     trainer = make_local_trainer(bundle, fl, impl=impl)
@@ -53,17 +85,17 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 
     def _finalize(global_state, stacked_models, stacked_fusions, weights,
                   losses):
-        new_model = weighted_mean(stacked_models, weights)
+        new_model = weighted_mean(stacked_models, weights, shard)
         new_state: Dict[str, Any] = {"model": new_model}
         if is_fusion:
             new_state["fusion"] = fusion_aggregate(
                 fl.fusion_op, global_state["fusion"], stacked_fusions,
-                weights, fl.ema_beta)
-        return new_state, {"local_loss": jnp.mean(losses)}
+                weights, fl.ema_beta, shard=shard)
+        return new_state, {"local_loss": mean_over_clients(losses, shard)}
 
     if mode == "client_parallel":
         def round_fn(global_state, client_batches, n_examples, lr):
-            weights = normalize_weights(n_examples)
+            weights = normalize_weights(n_examples, shard)
             gm = global_state["model"]
             gf = global_state.get("fusion")
 
@@ -77,7 +109,7 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
         return round_fn
 
     def round_fn(global_state, client_batches, n_examples, lr):
-        weights = normalize_weights(n_examples)
+        weights = normalize_weights(n_examples, shard)
         gm = global_state["model"]
         gf = global_state.get("fusion")
         acc0 = {"model": zeros_like_tree(gm)}
@@ -96,6 +128,9 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
             return acc, loss
 
         acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
+        # the running sums covered this shard's clients; one psum per tree
+        # completes them over the round (no-op when unsharded)
+        acc = psum_tree(acc, shard)
         new_state: Dict[str, Any] = {"model": acc["model"]}
         if is_fusion:
             if fl.fusion_op == "conv":
@@ -104,13 +139,14 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
                 new_state["fusion"] = jax.tree.map(
                     lambda old, new: fl.ema_beta * old + (1 - fl.ema_beta) * new,
                     gf, acc["fusion"])
-        return new_state, {"local_loss": jnp.mean(losses)}
+        return new_state, {"local_loss": mean_over_clients(losses, shard)}
 
     return round_fn
 
 
 def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
-                             uplink, downlink, *, impl="auto"):
+                             uplink, downlink, *, impl="auto",
+                             shard: Optional[ClientSharding] = None):
     """A federated round with the wire path routed through codecs.
 
     Returns round_fn(global_state, client_batches, n_examples, lr,
@@ -141,6 +177,13 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
 
     Fusion-module parameters (FedFusion) ride along uncompressed, exactly
     as before — their raw bytes stay accounted in ``CommLog``.
+
+    Under ``shard`` (see module docstring) ``ef_state`` carries the EF
+    rows of THIS shard's positional clients only; steps 1 and the
+    server-side model update run replicated (their inputs are replicated
+    and the aggregate arrives via psum, so every shard applies the exact
+    same update), and the per-client rng keys are the positional slice of
+    the reference loop's full split.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     trainer = make_local_trainer(bundle, fl, impl=impl)
@@ -148,7 +191,7 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
 
     def round_fn(global_state, client_batches, n_examples, lr, ef_state,
                  down_mirror, key):
-        weights = normalize_weights(n_examples)
+        weights = normalize_weights(n_examples, shard)
         n_clients = weights.shape[0]
         kd, ku = jax.random.split(key)
         down_update = jax.tree.map(lambda m, w: m - w,
@@ -159,7 +202,7 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
         bcast = jax.tree.map(lambda w, d: w + d.astype(w.dtype),
                              down_mirror, downlink.decode(down_payload))
         gf = global_state.get("fusion")
-        client_keys = jax.random.split(ku, n_clients)
+        client_keys = _local_client_keys(ku, n_clients, shard)
 
         def client_step(batches, ef, ck):
             trainable, loss = trainer(bcast, gf, batches, lr)
@@ -176,7 +219,7 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
         if mode == "client_parallel":
             outs = jax.vmap(client_step)(client_batches, ef_state,
                                          client_keys)
-            agg_delta = weighted_mean(outs["delta"], weights)
+            agg_delta = weighted_mean(outs["delta"], weights, shard)
             new_ef = outs["ef"]
             stacked_fusions = outs.get("fusion")
             losses = outs["loss"]
@@ -197,6 +240,7 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
 
             acc, (new_ef, losses) = jax.lax.scan(
                 body, acc0, (client_batches, weights, ef_state, client_keys))
+            acc = psum_tree(acc, shard)
             if is_fusion:
                 agg_delta, fusion_sum = acc
                 stacked_fusions = None
@@ -214,14 +258,15 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
             if mode == "client_parallel":
                 new_state["fusion"] = fusion_aggregate(
                     fl.fusion_op, global_state["fusion"], stacked_fusions,
-                    weights, fl.ema_beta)
+                    weights, fl.ema_beta, shard=shard)
             elif fl.fusion_op == "conv":
                 new_state["fusion"] = fusion_sum
             else:
                 new_state["fusion"] = jax.tree.map(
                     lambda old, new: fl.ema_beta * old
                     + (1 - fl.ema_beta) * new, gf, fusion_sum)
-        return (new_state, {"local_loss": jnp.mean(losses)}, new_ef, bcast)
+        return (new_state, {"local_loss": mean_over_clients(losses, shard)},
+                new_ef, bcast)
 
     return round_fn
 

@@ -59,7 +59,7 @@ class FederatedDataset:
         return _to_batch(stacked), sizes
 
     def round_chunk(self, n_rounds: int, clients_per_round: int,
-                    local_steps: int, batch: int):
+                    local_steps: int, batch: int, *, pool=None):
         """Sample ``n_rounds`` consecutive rounds for the superstep engine.
 
         Returns (cids [K, C], batches {k: [K, C, steps, B, ...]},
@@ -67,6 +67,13 @@ class FederatedDataset:
         round_batch) is IDENTICAL to the one-round-at-a-time server loop,
         so the rng stream — and therefore every sampled batch — matches the
         reference loop bit for bit.
+
+        ``pool`` (a ``repro.engine.pipeline.StagingPool``): the stacked
+        output arrays are written into reusable staging buffers instead of
+        freshly allocated memory — steady-state chunk staging then touches
+        no new host pages.  The caller must not re-enter with the same
+        pool while the previous chunk's buffers are still being
+        transferred.
         """
         cids_l, batch_l, size_l = [], [], []
         for _ in range(n_rounds):
@@ -75,9 +82,20 @@ class FederatedDataset:
             cids_l.append(cids)
             batch_l.append(b)
             size_l.append(s)
-        stacked = {k: np.stack([b[k] for b in batch_l]) for k in batch_l[0]}
-        return (np.stack(cids_l).astype(np.int32), stacked,
-                np.stack(size_l).astype(np.float32))
+
+        def _stack(name, parts, dtype=None):
+            dtype = dtype or parts[0].dtype
+            shape = (len(parts),) + parts[0].shape
+            out = pool.take(name, shape, dtype) if pool is not None else \
+                np.empty(shape, dtype)
+            for i, p in enumerate(parts):
+                out[i] = p
+            return out
+
+        stacked = {k: _stack(f"batch/{k}", [b[k] for b in batch_l])
+                   for k in batch_l[0]}
+        return (_stack("cids", cids_l, np.int32), stacked,
+                _stack("sizes", size_l, np.float32))
 
     def test_batch(self, n: Optional[int] = None) -> Dict[str, np.ndarray]:
         if n is None:

@@ -3,11 +3,16 @@
 Replaces the Python-per-round server loop with a jitted K-round superstep
 (``lax.scan`` over the round fn, donated buffers, on-device error-feedback
 scatter), a double-buffered host prefetch pipeline, and deferred metrics
-so the host never blocks except at eval/checkpoint boundaries.
+so the host never blocks except at checkpoint boundaries — boundary
+evaluation dispatches on a state snapshot and overlaps the next chunk.
+On a mesh whose ``pod``/``data`` axes multiply past 1 the superstep runs
+client-parallel under ``shard_map`` with the EF table row-sharded by
+client id (``repro.engine.sharded``).
 
     run_federated_engine   — drop-in engine behind ``repro.fl.server``
     make_plain_superstep / make_compressed_superstep — jit-able supersteps
-    HostPrefetcher         — background chunk staging thread
+    make_sharded_superstep / client_sharding — shard_map-wrapped variants
+    HostPrefetcher / StagingPool — background chunk staging
     MetricsPump            — async device->host metric fetch + CommLog
     make_eval_fn / pad_eval_batch — fixed-shape jit-able evaluation
 """
@@ -15,6 +20,8 @@ from repro.engine.engine import (ServerResult,  # noqa: F401
                                  chunk_schedule, run_federated_engine)
 from repro.engine.evaljit import make_eval_fn, pad_eval_batch  # noqa: F401
 from repro.engine.metrics import MetricsPump  # noqa: F401
-from repro.engine.pipeline import HostPrefetcher  # noqa: F401
+from repro.engine.pipeline import HostPrefetcher, StagingPool  # noqa: F401
+from repro.engine.sharded import (client_sharding,  # noqa: F401
+                                  make_sharded_superstep)
 from repro.engine.superstep import (make_compressed_superstep,  # noqa: F401
                                     make_plain_superstep)

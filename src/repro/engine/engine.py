@@ -7,18 +7,35 @@ supersteps instead of one Python-dispatched round at a time:
   (host-visible state is only needed there) and otherwise into
   ``superstep_rounds``-sized chunks; when evaluation happens every round
   it is folded into the scan so the chunk size survives;
+  ``superstep_rounds="auto"`` picks the chunk size from measured dispatch
+  overhead (see :func:`_auto_chunk_rounds`);
 * buffers — ``global_state`` (and for compressed runs the full-federation
-  EF tree + broadcast mirror) are donated into every superstep call, so
-  steady-state chunks mutate device buffers in place;
+  EF tree + broadcast mirror) are donated into every superstep call, and
+  so are the staged chunk arrays (batches/sizes/lrs/cids), so steady-state
+  chunks mutate device buffers in place and staging never leaks buffers;
 * host pipeline — a prefetch thread stages the next chunk's client sample,
   batches and lr slice to device while the current chunk trains
-  (``HostPrefetcher``), and metrics come back through ``MetricsPump``
-  futures, so the host blocks only at eval/checkpoint boundaries and at
-  the end of the run;
+  (``HostPrefetcher``, re-filling a ``StagingPool`` of pinned host
+  buffers), and metrics come back through ``MetricsPump`` futures, so the
+  host blocks only at checkpoint boundaries and at the end of the run;
+* eval overlap — at an eval boundary the evaluator is dispatched on a
+  device-side SNAPSHOT of the post-chunk state (``jnp.copy`` under jit),
+  taken before that state is donated into the next chunk: chunk r+1
+  starts while eval(r) runs, and the ``MetricsPump`` merges the eval
+  future into the chunk's last round when it resolves (metrics therefore
+  lag the training front by up to one chunk — same contract as every
+  other engine metric);
+* mesh — with ``mesh`` whose client axes (``pod``/``data``) multiply to
+  S > 1, the superstep runs under ``shard_map`` (``repro.engine.sharded``):
+  the chunk's client axis is split positionally over the S shards and the
+  full-federation EF table is row-sharded by client id.  The results are
+  allclose (not bitwise: aggregation order changes) to the single-device
+  engine; ``mesh=None`` or S == 1 keeps the exact single-device program;
 * equivalence — the rng streams (data sampling on the host, per-round
   ``fold_in`` on device) and the per-round math are exactly those of the
   preserved reference loop (``repro.fl.server.run_federated_reference``);
-  at chunk size 1 the final model is bitwise-identical to it.
+  at chunk size 1 the single-device final model is bitwise-identical to
+  it.
 
 Semantics (checkpoint/resume layout, CommLog history, callback contract)
 match the reference loop; a non-None ``callback`` forces one-round chunks
@@ -26,8 +43,10 @@ since it observes per-round state by contract.
 """
 from __future__ import annotations
 
+import copy
 import os
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -39,7 +58,9 @@ from repro.configs.base import FLConfig
 from repro.core.rounds import init_global_state
 from repro.engine.evaljit import make_eval_fn, pad_eval_batch
 from repro.engine.metrics import MetricsPump
-from repro.engine.pipeline import HostPrefetcher
+from repro.engine.pipeline import HostPrefetcher, StagingPool
+from repro.engine.sharded import (client_sharding, chunk_shardings,
+                                  ef_table_sharding, make_sharded_superstep)
 from repro.engine.superstep import (make_compressed_superstep,
                                     make_plain_superstep)
 from repro.models.registry import ModelBundle
@@ -51,11 +72,17 @@ from repro.optim import exp_decay_per_round
 _NON_METRIC_KEYS = frozenset(
     ("round", "bytes_up", "bytes_down", "bytes_up_ideal", "cum_bytes_up"))
 
+# adaptive chunk sizing: pick K so the per-chunk dispatch overhead is at
+# most this fraction of the chunk's device time, within [lo, hi]
+_AUTO_TARGET_OVERHEAD = 0.05
+_AUTO_BOUNDS = (8, 256)
+
 
 @dataclass
 class ServerResult:
     global_state: Dict
     comm: "repro.fl.comm.CommLog"  # noqa: F821 — lazy import, see above
+    stats: Optional[Dict] = field(default=None, compare=False)
 
 
 def chunk_schedule(start: int, rounds: int, chunk: int, *,
@@ -85,6 +112,44 @@ def chunk_schedule(start: int, rounds: int, chunk: int, *,
     return bounds
 
 
+def _calibration_source(data, seed: int):
+    """A shallow clone of ``data`` with an independent rng stream.
+
+    Adaptive chunk sizing times real supersteps on real-shaped chunks —
+    but drawing those from ``data`` itself would advance the sampling rng
+    and break bit-equivalence with the reference loop.  The clone shares
+    the (read-only) client arrays and replaces only the stream.
+    """
+    clone = copy.copy(data)
+    clone._rng = np.random.default_rng(seed ^ 0xCA11B)
+    return clone
+
+
+def _auto_chunk_rounds(get_step, build_calib, run_step, *,
+                       target=_AUTO_TARGET_OVERHEAD, bounds=_AUTO_BOUNDS):
+    """Pick the superstep chunk size from measured dispatch overhead.
+
+    Times a compiled 1-round and an 8-round chunk on throwaway state
+    (donation-safe: every measurement rebuilds its arguments).  With
+    ``t_K ≈ overhead + K * per_round``, the two lengths identify both
+    terms, and K is chosen so overhead amortizes below ``target`` of the
+    chunk's device time.  The returned K is a throughput knob only —
+    results are chunk-size-invariant (pinned by tests/test_engine.py).
+    """
+    def timed(n_rounds):
+        step = get_step(n_rounds)
+        jax.block_until_ready(run_step(step, build_calib(n_rounds)))
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_step(step, build_calib(n_rounds)))
+        return time.perf_counter() - t0
+
+    t1, t8 = timed(1), timed(8)
+    per_round = max((t8 - t1) / 7.0, 1e-7)
+    overhead = max(t1 - per_round, 0.0)
+    lo, hi = bounds
+    return int(np.clip(round(overhead / (per_round * target)), lo, hi))
+
+
 def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                          rounds: int, seed: int = 0,
                          mode: str = "client_parallel",
@@ -93,18 +158,41 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                          checkpoint_dir: Optional[str] = None,
                          checkpoint_every: int = 10,
                          callback: Optional[Callable] = None,
-                         superstep_rounds: int = 8, prefetch: bool = True,
-                         impl: str = "auto") -> ServerResult:
+                         superstep_rounds=8, prefetch: bool = True,
+                         impl: str = "auto", mesh=None,
+                         overlap_eval: bool = True) -> ServerResult:
     """Engine-backed server loop (see module docstring).
 
     Drop-in for the reference loop: same arguments, same ServerResult,
     same checkpoint layout and resume behaviour, plus ``superstep_rounds``
-    (max rounds per jitted chunk), ``prefetch`` (background host staging)
-    and ``impl`` (kernel dispatch for the EF gather/scatter and codecs).
+    (max rounds per jitted chunk, or ``"auto"`` to calibrate),
+    ``prefetch`` (background host staging), ``impl`` (kernel dispatch for
+    the EF gather/scatter and codecs), ``mesh`` (client-parallel
+    ``shard_map`` execution when its pod/data axes multiply past 1) and
+    ``overlap_eval`` (snapshot-based eval dispatch; False reproduces the
+    pre-overlap behaviour of evaluating the to-be-donated state).
     """
     from repro.checkpoint.io import (load_tree, restore_server_state,
                                      save_server_state, save_tree)
     from repro.fl.comm import CommLog
+
+    shard = client_sharding(mesh) if mesh is not None else None
+    n_sampled = min(fl.clients_per_round, data.n_clients)
+    if shard is not None:
+        if n_sampled % shard.n_shards:
+            raise ValueError(
+                f"clients_per_round={n_sampled} must divide over the mesh's "
+                f"{shard.n_shards} client shards {shard.axes}")
+        if fl.compressed and data.n_clients % shard.n_shards:
+            raise ValueError(
+                f"n_clients={data.n_clients} must divide over the mesh's "
+                f"{shard.n_shards} client shards (row-sharded EF table)")
+        shard_batch, shard_repl = chunk_shardings(mesh)
+
+    def _stage(x, sharded_like=False):
+        if shard is None:
+            return jax.device_put(x)
+        return jax.device_put(x, shard_batch if sharded_like else shard_repl)
 
     key = jax.random.PRNGKey(seed)
     global_state = init_global_state(bundle, fl, key)
@@ -113,10 +201,10 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             os.path.join(checkpoint_dir, "meta.json")):
         global_state, start_round = restore_server_state(checkpoint_dir,
                                                          global_state)
-        global_state = jax.tree.map(jnp.asarray, global_state)
+    global_state = jax.tree.map(lambda x: _stage(jnp.asarray(x)),
+                                global_state)
     lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)
     comm = CommLog().bind_sizes(global_state)
-    n_sampled = min(fl.clients_per_round, data.n_clients)
 
     # --- wire codecs: device-resident EF + mirror --------------------------
     compressed = fl.compressed
@@ -135,49 +223,64 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         wire_down = downlink.wire_bytes()
         ef_template = uplink.init_state()
         ef_all = jax.tree.map(
-            lambda z: jnp.zeros((data.n_clients,) + z.shape, z.dtype),
-            ef_template)
+            lambda z: np.zeros((data.n_clients,) + z.shape,
+                               np.dtype(z.dtype)), ef_template)
         # a copy, not an alias: the model and the mirror are both donated
         # into the superstep, and a shared buffer cannot be donated twice.
-        down_mirror = jax.tree.map(jnp.array, global_state["model"])
+        down_mirror = jax.tree.map(np.asarray, global_state["model"])
         ef_path = (os.path.join(checkpoint_dir, "ef.npz")
                    if checkpoint_dir else None)
         if start_round and ef_path and os.path.exists(ef_path):
-            ef_all, down_mirror = jax.tree.map(
-                jnp.asarray, load_tree(ef_path, (ef_all, down_mirror)))
+            ef_all, down_mirror = load_tree(ef_path, (ef_all, down_mirror))
+        ef_sh = ef_table_sharding(mesh) if shard is not None else None
+        ef_all = jax.tree.map(
+            lambda z: (jax.device_put(z, ef_sh) if shard is not None
+                       else jnp.asarray(z)), ef_all)
+        down_mirror = jax.tree.map(lambda z: _stage(jnp.asarray(z)),
+                                   down_mirror)
         round_key = jax.random.fold_in(key, 0x636f6d70)  # "comp"
 
     # --- fixed-shape evaluation -------------------------------------------
-    test_batch, test_mask = pad_eval_batch(data.test_batch(), eval_examples)
+    test_batch, test_mask = pad_eval_batch(
+        data.test_batch(), eval_examples,
+        sharding=shard_repl if shard is not None else None)
     eval_fn = make_eval_fn(bundle, fl)
     eval_in_scan = eval_every == 1 and callback is None
     jit_eval = None if eval_in_scan else jax.jit(eval_fn)
+    # eval overlap: the evaluator reads a device-side copy, never the
+    # buffers the next chunk is about to consume by donation
+    snap = (jax.jit(lambda t: jax.tree.map(jnp.copy, t))
+            if (jit_eval is not None and overlap_eval) else None)
 
-    # --- chunk schedule + prefetch pipeline -------------------------------
-    schedule = chunk_schedule(
-        start_round, rounds, superstep_rounds,
-        eval_every=None if eval_in_scan else eval_every,
-        ckpt_every=checkpoint_every if checkpoint_dir else None,
-        per_round=callback is not None)
+    # --- chunk staging -----------------------------------------------------
+    # pinned-buffer reuse is an accelerator optimization: there device_put
+    # is a real host->device DMA and block_until_ready fences it.  The CPU
+    # backend may alias or lazily read the numpy buffer past that fence
+    # (the "device" IS the host), so reuse would corrupt staged chunks —
+    # CPU stages into fresh arrays, exactly the pre-pool behaviour.
+    pool = StagingPool() if jax.default_backend() != "cpu" else None
 
-    def build_chunk(r0, r1):
-        cids, batches, sizes = data.round_chunk(
-            r1 - r0, fl.clients_per_round, fl.local_steps, fl.local_batch)
+    def build_chunk(r0, r1, src=None, staging_pool=None):
+        cids, batches, sizes = (src or data).round_chunk(
+            r1 - r0, fl.clients_per_round, fl.local_steps, fl.local_batch,
+            pool=staging_pool)
         staged = {
-            "batches": {k: jax.device_put(v) for k, v in batches.items()},
-            "sizes": jax.device_put(sizes),
+            "batches": {k: _stage(v, sharded_like=True)
+                        for k, v in batches.items()},
+            "sizes": _stage(sizes, sharded_like=True),
             # one vectorized schedule op, not K scalar dispatches — the
             # elementwise pow gives the same float32 values as the
             # reference loop's per-round lr_at(r)
             "lrs": lr_at(jnp.arange(r0, r1)),
         }
         if compressed:   # only the compressed superstep consumes these
-            staged["cids"] = jax.device_put(cids)
-            staged["ridx"] = jax.device_put(
-                np.arange(r0, r1, dtype=np.int32))
+            staged["cids"] = _stage(cids)
+            staged["ridx"] = _stage(np.arange(r0, r1, dtype=np.int32))
+        if staging_pool is not None:
+            # free the pool's host buffers for the next chunk: the wait
+            # lands on the PREFETCH thread, never the dispatch thread
+            jax.block_until_ready(staged)
         return staged
-
-    prefetcher = HostPrefetcher(build_chunk, schedule, enabled=prefetch)
 
     # --- jitted supersteps, cached per chunk length -----------------------
     steps: Dict[int, Callable] = {}
@@ -185,39 +288,87 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     def get_step(n_rounds):
         if n_rounds not in steps:
             in_scan = eval_fn if eval_in_scan else None
-            if compressed:
+            if shard is not None:
+                fn = make_sharded_superstep(
+                    bundle, fl, mode, n_rounds, mesh, uplink=uplink,
+                    downlink=downlink, eval_fn=in_scan, impl=impl)
+            elif compressed:
                 fn = make_compressed_superstep(
                     bundle, fl, mode, n_rounds, uplink, downlink,
                     eval_fn=in_scan, impl=impl)
-                steps[n_rounds] = jax.jit(fn, donate_argnums=(0, 1, 2))
             else:
                 fn = make_plain_superstep(bundle, fl, mode, n_rounds,
                                           eval_fn=in_scan, impl=impl)
-                steps[n_rounds] = jax.jit(fn, donate_argnums=(0,))
+            # donate the carried state AND the staged chunk — batches /
+            # sizes / lrs (/cids/ridx) are consumed exactly once.  The
+            # host-staged arrays are only donatable on accelerator
+            # backends (on CPU their buffers alias host numpy memory and
+            # XLA refuses, warning on every dispatch); the lr slice is
+            # device-native and always donates.
+            host_staged = jax.default_backend() != "cpu"
+            if compressed:
+                donate = (0, 1, 2, 5) + ((3, 4, 6, 7) if host_staged else ())
+            else:
+                donate = (0, 3) + ((1, 2) if host_staged else ())
+            steps[n_rounds] = jax.jit(fn, donate_argnums=donate)
         return steps[n_rounds]
+
+    test_args = (test_batch, test_mask) if eval_in_scan else ()
+
+    def run_step(step, staged, state=None, ef=None, mirror=None):
+        """Dispatch one superstep on (state, staged); None -> throwaway
+        zero trees (calibration — the real carries must not be donated)."""
+        state = jax.tree.map(jnp.zeros_like, global_state) \
+            if state is None else state
+        if compressed:
+            ef = jax.tree.map(jnp.zeros_like, ef_all) if ef is None else ef
+            mirror = jax.tree.map(jnp.zeros_like, down_mirror) \
+                if mirror is None else mirror
+            return step(state, ef, mirror, staged["batches"],
+                        staged["sizes"], staged["lrs"], staged["cids"],
+                        staged["ridx"], round_key, *test_args)
+        return step(state, staged["batches"], staged["sizes"],
+                    staged["lrs"], *test_args)
+
+    # --- chunk size: fixed or calibrated ----------------------------------
+    chunk_rounds = superstep_rounds
+    if superstep_rounds == "auto":
+        calib = _calibration_source(data, seed)
+        chunk_rounds = _auto_chunk_rounds(
+            get_step, lambda n: build_chunk(0, n, src=calib), run_step)
+        if verbose:
+            print(f"engine: auto chunk size -> {chunk_rounds} rounds")
+
+    # --- schedule + prefetch pipeline -------------------------------------
+    schedule = chunk_schedule(
+        start_round, rounds, chunk_rounds,
+        eval_every=None if eval_in_scan else eval_every,
+        ckpt_every=checkpoint_every if checkpoint_dir else None,
+        per_round=callback is not None)
+
+    prefetcher = HostPrefetcher(
+        lambda r0, r1: build_chunk(r0, r1, staging_pool=pool),
+        schedule, enabled=prefetch)
 
     pump = MetricsPump(comm, n_sampled, wire_up=wire_up,
                        wire_down=wire_down,
                        n_down=(data.n_clients
                                if fl.downlink_codec != "identity" else None),
                        verbose=verbose)
-    test_args = (test_batch, test_mask) if eval_in_scan else ()
 
     try:
         for r0, r1, staged in prefetcher:
             step = get_step(r1 - r0)
             if compressed:
-                global_state, mstack, ef_all, down_mirror = step(
-                    global_state, ef_all, down_mirror, staged["batches"],
-                    staged["sizes"], staged["lrs"], staged["cids"],
-                    staged["ridx"], round_key, *test_args)
+                global_state, mstack, ef_all, down_mirror = run_step(
+                    step, staged, global_state, ef_all, down_mirror)
             else:
-                global_state, mstack = step(
-                    global_state, staged["batches"], staged["sizes"],
-                    staged["lrs"], *test_args)
+                global_state, mstack = run_step(step, staged, global_state)
             eval_metrics = None
             if jit_eval is not None and eval_every and r1 % eval_every == 0:
-                eval_metrics = jit_eval(global_state, test_batch, test_mask)
+                eval_state = snap(global_state) if snap is not None \
+                    else global_state
+                eval_metrics = jit_eval(eval_state, test_batch, test_mask)
             pump.submit(mstack, eval_metrics)
             if callback is not None:        # per-round chunks by contract
                 pump.drain()
@@ -238,4 +389,11 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                           extra={"algorithm": fl.algorithm})
         if compressed:
             save_tree(ef_path, (ef_all, down_mirror))
-    return ServerResult(global_state=global_state, comm=comm)
+    stats = {
+        "chunk_rounds": chunk_rounds,
+        "client_shards": shard.n_shards if shard is not None else 1,
+        "eval_overlap": snap is not None,
+        "host_wait_s": round(prefetcher.wait_s, 4),
+        "metrics_wait_s": round(pump.wait_s, 4),
+    }
+    return ServerResult(global_state=global_state, comm=comm, stats=stats)

@@ -11,6 +11,7 @@ long run cannot pile up unfetched device buffers.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
@@ -44,21 +45,35 @@ class MetricsPump:
         self._max_pending = max_pending
         self._pool = ThreadPoolExecutor(1, thread_name_prefix="engine-metrics")
         self._pending: deque = deque()
+        self.wait_s = 0.0    # dispatch-thread time blocked on metric sync
 
     def submit(self, metrics_stack, eval_metrics=None):
         """Queue one chunk: ``metrics_stack`` leaves are [K] device arrays;
         ``eval_metrics`` (scalar device dict or None) merges into the
         chunk's LAST round — chunk boundaries are aligned to eval rounds
-        by the engine's schedule."""
+        by the engine's schedule.
+
+        ``eval_metrics`` may still be executing when submitted (the
+        engine's eval-overlap path dispatches it on a snapshot and moves
+        straight on to the next chunk); the worker's ``device_get`` is
+        what waits for the future, so the merge happens when it resolves
+        and the dispatch thread never blocks here unless ``max_pending``
+        chunks have piled up (accounted in ``wait_s``).
+        """
         self._pending.append(self._pool.submit(
             jax.device_get, (metrics_stack, eval_metrics)))
         while len(self._pending) > self._max_pending:
-            self._log(self._pending.popleft().result())
+            t0 = time.perf_counter()
+            fetched = self._pending.popleft().result()
+            self.wait_s += time.perf_counter() - t0
+            self._log(fetched)
 
     def drain(self):
         """Resolve every pending chunk into the CommLog (host blocks)."""
+        t0 = time.perf_counter()
         while self._pending:
             self._log(self._pending.popleft().result())
+        self.wait_s += time.perf_counter() - t0
 
     def close(self):
         self.drain()

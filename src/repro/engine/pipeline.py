@@ -9,15 +9,57 @@ batches to match it bit for bit — and hands staged, device-resident chunks
 to the consumer through a bounded queue (default depth 2: one chunk being
 consumed, one in flight).
 
+``StagingPool`` keeps the big stacked host arrays a chunk builder fills
+(batches/cids/sizes) alive across chunks: steady-state staging re-fills
+the same buffers instead of re-allocating tens of MB per chunk, which is
+what makes them pinnable on accelerator backends.  The builder must
+guarantee the previous transfer out of a buffer has completed before
+re-filling it — the engine does so by blocking the PREFETCH thread (never
+the dispatch thread) on the staged device arrays before handing the chunk
+over.
+
 Exceptions raised inside the builder are re-raised at the consuming
 ``__iter__`` site; ``close()`` unblocks and retires the worker if the
-consumer stops early.
+consumer stops early.  ``wait_s`` accumulates the time the CONSUMER spent
+blocked on the queue — the host-side stall the pipeline exists to remove;
+the engine surfaces it in ``ServerResult.stats``.
 """
 from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterable, Iterator, Tuple
+import time
+from typing import Callable, Dict, Iterable, Iterator, Tuple
+
+import numpy as np
+
+
+class StagingPool:
+    """Reusable host staging buffers, keyed by name, matched on shape/dtype.
+
+    ``take(name, shape, dtype)`` returns a writable ndarray; the same name
+    returns the SAME memory as long as shape/dtype are stable (chunk
+    shapes only change at schedule tails).  Callers own the discipline of
+    not re-taking a name while its previous contents are still being
+    transferred.
+
+    Accelerator backends only: ``jax.device_put`` there is a real
+    host->device DMA and ``block_until_ready`` fences it, after which the
+    buffer is refillable.  The CPU backend may alias or lazily read the
+    numpy buffer PAST that fence (the "device" is the host), so the engine
+    disables reuse on CPU — refilling would corrupt in-flight chunks.
+    """
+
+    def __init__(self):
+        self._bufs: Dict[str, np.ndarray] = {}
+
+    def take(self, name: str, shape, dtype) -> np.ndarray:
+        buf = self._bufs.get(name)
+        if buf is None or buf.shape != tuple(shape) \
+                or buf.dtype != np.dtype(dtype):
+            buf = np.empty(shape, dtype)
+            self._bufs[name] = buf
+        return buf
 
 
 class HostPrefetcher:
@@ -33,6 +75,7 @@ class HostPrefetcher:
         self._build = build_chunk
         self._schedule = list(schedule)
         self._enabled = enabled
+        self.wait_s = 0.0       # consumer time blocked on staging
         if enabled:
             self._q: queue.Queue = queue.Queue(maxsize=depth)
             self._stop = threading.Event()
@@ -64,10 +107,15 @@ class HostPrefetcher:
     def __iter__(self) -> Iterator:
         if not self._enabled:
             for r0, r1 in self._schedule:
-                yield r0, r1, self._build(r0, r1)
+                t0 = time.perf_counter()
+                staged = self._build(r0, r1)
+                self.wait_s += time.perf_counter() - t0
+                yield r0, r1, staged
             return
         while True:
+            t0 = time.perf_counter()
             item = self._q.get()
+            self.wait_s += time.perf_counter() - t0
             if item is None:
                 return
             if isinstance(item, BaseException):

@@ -1,0 +1,101 @@
+"""Client-parallel ``shard_map`` wrapper for the K-round superstep.
+
+``repro.engine`` runs one jitted superstep per chunk; this module maps
+that superstep over the launch mesh so the chunk's client axis — the
+embarrassingly-parallel dimension of federated learning — actually runs
+in parallel across devices:
+
+* ``batches [K, C, ...]`` / ``sizes [K, C]`` are sharded over the client
+  mesh axes (``pod`` then ``data``): shard ``s`` trains sampled positions
+  ``[s*C_loc, (s+1)*C_loc)`` of every round in the chunk;
+* the full-federation EF table is row-sharded by client id (shard ``s``
+  owns rows ``[s*N_loc, (s+1)*N_loc)``); the per-round row movement is
+  the compact psum exchange in ``repro.engine.superstep``;
+* global state, broadcast mirror, lr schedule, round keys, ``cids`` and
+  the eval batch are replicated — every shard computes the identical
+  server-side update from the psum'd aggregate, so the replicated outputs
+  agree bitwise across shards;
+* the only cross-device traffic per round is the aggregation psum (plus
+  the [C, n] EF exchange on compressed runs) — exactly the communication
+  FedAvg counts on the wire.
+
+The mesh's ``model`` axis (if any) is treated as replicated: the engine's
+CNN-scale federated workloads are client-bound, and tensor parallelism
+inside a client step remains the territory of ``repro.launch.steps``.
+
+Everything here is layout only — the math lives in the shard-aware round
+fns (``repro.core.rounds``) and superstep bodies.  A mesh whose client
+axes multiply to 1 must NOT go through this wrapper: the engine keeps the
+plain superstep there so single-device runs stay bitwise-equal to the
+reference loop.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.core.aggregate import ClientSharding
+from repro.engine.superstep import (make_compressed_superstep,
+                                    make_plain_superstep)
+from repro.launch.mesh import client_axes
+from repro.launch.sharding import (chunk_shardings,  # noqa: F401 (re-export)
+                                   ef_table_sharding)
+
+if hasattr(jax, "shard_map"):          # jax >= 0.6
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+else:                                  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def client_sharding(mesh) -> Optional[ClientSharding]:
+    """The mesh's client-axis split, or None when it degenerates to 1."""
+    axes = client_axes(mesh)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    n = 1
+    for s in sizes:
+        n *= s
+    if n <= 1:
+        return None
+    return ClientSharding(axes=axes, sizes=sizes)
+
+
+def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
+                           uplink=None, downlink=None, eval_fn=None,
+                           impl="auto"):
+    """``shard_map``-wrapped superstep on ``mesh`` (client axes size > 1).
+
+    Same call signature as the unsharded supersteps; the plain variant is
+    built when ``uplink`` is None, the codec-routed one otherwise.  The
+    caller stages batches/sizes with
+    :func:`repro.launch.sharding.chunk_shardings` and the EF table with
+    :func:`repro.launch.sharding.ef_table_sharding`; jit with the same
+    donations as the unsharded path.
+    """
+    shard = client_sharding(mesh)
+    assert shard is not None, "use the plain superstep on a 1-shard mesh"
+    ax = shard.axis_name
+    n_test = 2 if eval_fn is not None else 0
+
+    if uplink is None:
+        inner = make_plain_superstep(bundle, fl, mode, n_rounds,
+                                     eval_fn=eval_fn, impl=impl, shard=shard)
+        in_specs = (P(), P(None, ax), P(None, ax), P()) + (P(),) * n_test
+        out_specs = (P(), P())
+    else:
+        inner = make_compressed_superstep(bundle, fl, mode, n_rounds,
+                                          uplink, downlink, eval_fn=eval_fn,
+                                          impl=impl, shard=shard)
+        in_specs = (P(), P(ax), P(), P(None, ax), P(None, ax),
+                    P(), P(), P(), P()) + (P(),) * n_test
+        out_specs = (P(), P(), P(ax), P())
+
+    # check_rep/check_vma off: outputs marked replicated are made identical
+    # on every shard by construction (they are functions of replicated
+    # inputs and psum results), which the static replication checker
+    # cannot see through the scan carry.
+    return _shard_map(inner, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})

@@ -24,6 +24,18 @@ computation as the reference loop — that is what makes the K=1 final model
 bitwise-equal to the pre-engine loop (the equivalence contract
 ``tests/test_engine.py`` pins down).
 
+Sharded mode (``shard`` = a :class:`repro.core.aggregate.ClientSharding`):
+the superstep becomes a ``shard_map`` BODY (see ``repro.engine.sharded``).
+Batches/sizes then carry only this shard's positional client slice, the
+EF table argument is this shard's row block (rows ``[pos*N_loc,
+(pos+1)*N_loc)`` of the full federation, sharded by client id), and
+``cids`` stays the FULL round sample (replicated — ownership of an EF row
+is decided by cid, not by which shard trains the client).  Each round the
+sampled rows cross shards through one compact ``psum`` exchange in each
+direction (``[C, n]`` — the same order as the FedAvg delta psum); the
+``ef_gather``/``ef_scatter`` kernels themselves only ever index the LOCAL
+row block.  With ``shard=None`` nothing changes.
+
 The caller jits the returned function; donate ``global_state`` (and for
 the compressed path ``ef_all`` + ``mirror``) so steady-state chunks update
 those buffers in place instead of reallocating them every call.
@@ -43,16 +55,18 @@ def _stack1(tree):
 
 
 def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
-                         impl="auto"):
+                         impl="auto", shard=None):
     """Uncompressed K-round superstep.
 
     Returns ``superstep(global_state, batches, sizes, lrs[, test_batch,
     test_mask]) -> (new_global_state, metrics stacked [K])`` with leading
     dims ``batches [K, C, steps, B, ...]``, ``sizes [K, C]``, ``lrs [K]``.
     ``eval_fn`` (traceable, from :func:`repro.engine.make_eval_fn`) folds
-    per-round evaluation of the post-round state into the scan.
+    per-round evaluation of the post-round state into the scan.  Under
+    ``shard`` the batch/size client axis is this shard's slice; evaluation
+    runs replicated on the (replicated) post-round state.
     """
-    round_fn = make_round_fn(bundle, fl, mode, impl=impl)
+    round_fn = make_round_fn(bundle, fl, mode, impl=impl, shard=shard)
 
     def one_round(state, b, n, lr, test):
         state, metrics = round_fn(state, b, n, lr)
@@ -77,8 +91,62 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
     return superstep
 
 
+# ---------------------------------------------------------------------------
+# Row-sharded EF exchange (shard_map body helpers)
+# ---------------------------------------------------------------------------
+
+def ef_gather_exchange(table, cids, shard, *, impl="auto"):
+    """Assemble the round's full [C, ...] EF rows from row-sharded blocks.
+
+    ``table`` is this shard's LOCAL row block [N_loc, ...] of the
+    federation table (shard ``s`` owns client ids ``[s*N_loc,
+    (s+1)*N_loc)``); ``cids [C]`` is the full round sample (replicated).
+    Each shard gathers the sampled rows it owns — a shard-local
+    ``ops.ef_gather`` with clipped indices — masks the rest to zero, and
+    one ``psum`` over the client axes gives every shard the complete
+    [C, ...] matrix.  Rows are disjointly owned, so the sum is exact.
+    """
+    n_loc = table.shape[0]
+    lo = shard.position() * n_loc
+    owned = (cids >= lo) & (cids < lo + n_loc)
+    local_idx = jnp.clip(cids - lo, 0, n_loc - 1).astype(jnp.int32)
+    rows = ops.ef_gather(table, local_idx, impl=impl)
+    mask = owned.reshape((-1,) + (1,) * (rows.ndim - 1))
+    contrib = jnp.where(mask, rows, jnp.zeros_like(rows))
+    return jax.lax.psum(contrib, shard.axis_name)
+
+
+def ef_scatter_exchange(table, cids, new_rows, shard, *, impl="auto"):
+    """Write this shard's freshly-trained EF rows back to their owners.
+
+    ``new_rows [C_loc, ...]`` are the residuals of this shard's POSITIONAL
+    clients; their cids may be owned by any shard.  The rows are placed at
+    their positional offset in a zero [C, ...] buffer, one ``psum``
+    broadcasts the complete set, and each shard scatters the rows it owns
+    into its local block.  Non-owned rows are routed to a scratch row
+    appended past the block (row ``N_loc``) so the in-place
+    ``ops.ef_scatter`` never sees a colliding index — a clipped index
+    could alias a genuinely-owned row and ``.at[].set`` with duplicate
+    indices keeps an arbitrary write.
+    """
+    n_loc = table.shape[0]
+    c_loc = new_rows.shape[0]
+    pos = shard.position()
+    full = jnp.zeros((c_loc * shard.n_shards,) + new_rows.shape[1:],
+                     new_rows.dtype)
+    full = jax.lax.dynamic_update_slice_in_dim(
+        full, new_rows, (pos * c_loc).astype(jnp.int32), axis=0)
+    full = jax.lax.psum(full, shard.axis_name)
+    lo = pos * n_loc
+    owned = (cids >= lo) & (cids < lo + n_loc)
+    safe_idx = jnp.where(owned, cids - lo, n_loc).astype(jnp.int32)
+    scratch = jnp.concatenate(
+        [table, jnp.zeros((1,) + table.shape[1:], table.dtype)], axis=0)
+    return ops.ef_scatter(scratch, safe_idx, full, impl=impl)[:n_loc]
+
+
 def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
-                              *, eval_fn=None, impl="auto"):
+                              *, eval_fn=None, impl="auto", shard=None):
     """Compressed (codec-routed) K-round superstep.
 
     Returns ``superstep(global_state, ef_all, mirror, batches, sizes, lrs,
@@ -90,19 +158,41 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
     round's rows.  ``round_idx [K]`` feeds ``fold_in(round_key, r)`` inside
     the scan, reproducing the reference loop's per-round key derivation
     bit for bit (fold_in is a pure function of the key data and r).
+
+    Under ``shard``, ``ef_all`` is this shard's row block and the row
+    movement goes through :func:`ef_gather_exchange` /
+    :func:`ef_scatter_exchange`; ``cids`` stays the full round sample.
     """
     round_fn = make_compressed_round_fn(bundle, fl, mode, uplink, downlink,
-                                        impl=impl)
+                                        impl=impl, shard=shard)
+
+    def gather_rows(ef_all, cids, c_loc):
+        if shard is None:
+            return jax.tree.map(
+                lambda t: ops.ef_gather(t, cids, impl=impl), ef_all)
+        start = (shard.position() * c_loc).astype(jnp.int32)
+        return jax.tree.map(
+            lambda t: jax.lax.dynamic_slice_in_dim(
+                ef_gather_exchange(t, cids, shard, impl=impl),
+                start, c_loc, axis=0),
+            ef_all)
+
+    def scatter_rows(ef_all, cids, new_ef):
+        if shard is None:
+            return jax.tree.map(
+                lambda t, rows: ops.ef_scatter(t, cids, rows, impl=impl),
+                ef_all, new_ef)
+        return jax.tree.map(
+            lambda t, rows: ef_scatter_exchange(t, cids, rows, shard,
+                                                impl=impl),
+            ef_all, new_ef)
 
     def one_round(state, ef_all, mirror, b, n, lr, cids, r, round_key, test):
-        ef_round = jax.tree.map(lambda t: ops.ef_gather(t, cids, impl=impl),
-                                ef_all)
+        ef_round = gather_rows(ef_all, cids, n.shape[0])
         key_r = jax.random.fold_in(round_key, r)
         state, metrics, new_ef, mirror = round_fn(state, b, n, lr, ef_round,
                                                   mirror, key_r)
-        ef_all = jax.tree.map(
-            lambda t, rows: ops.ef_scatter(t, cids, rows, impl=impl),
-            ef_all, new_ef)
+        ef_all = scatter_rows(ef_all, cids, new_ef)
         if eval_fn is not None:
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, ef_all, mirror, metrics

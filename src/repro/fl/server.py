@@ -90,16 +90,23 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   checkpoint_dir: Optional[str] = None,
                   checkpoint_every: int = 10,
                   callback: Optional[Callable] = None,
-                  superstep_rounds: int = 8,
-                  prefetch: bool = True) -> ServerResult:
+                  superstep_rounds=8,
+                  prefetch: bool = True, mesh=None,
+                  overlap_eval: bool = True) -> ServerResult:
     """Server loop, engine-backed (see ``repro.engine``).
 
     With ``checkpoint_dir``, the server state is saved every
     ``checkpoint_every`` rounds and training RESUMES from the last
     checkpoint if one exists (round-resumable, paper Alg. 1 line 1 is only
     executed on a cold start).  ``superstep_rounds`` caps how many rounds
-    one jitted chunk scans on device; ``prefetch`` stages the next chunk's
-    batches on a background thread.  Identical results to
+    one jitted chunk scans on device (``"auto"`` calibrates it from
+    measured dispatch overhead); ``prefetch`` stages the next chunk's
+    batches on a background thread.  ``mesh`` runs the superstep
+    client-parallel under ``shard_map`` when its pod/data axes multiply
+    past 1 (results allclose to single-device; see
+    ``repro.engine.sharded``); ``overlap_eval`` dispatches boundary
+    evaluation on a state snapshot so the next chunk starts immediately.
+    On a single device the results are identical to
     :func:`run_federated_reference` on the same seed/config.
     """
     return run_federated_engine(
@@ -107,7 +114,7 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
         eval_every=eval_every, eval_examples=eval_examples, verbose=verbose,
         checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
         callback=callback, superstep_rounds=superstep_rounds,
-        prefetch=prefetch)
+        prefetch=prefetch, mesh=mesh, overlap_eval=overlap_eval)
 
 
 def run_federated_reference(bundle: ModelBundle, fl: FLConfig,

@@ -14,10 +14,17 @@ Three kernels back the codec subsystem (oracles in ``kernels/ref.py``):
 * ``ef_gather`` / ``ef_scatter`` — row gather/scatter for the device-
   resident per-client error-feedback table (``repro.engine``): the full-
   federation EF tree lives flattened as [n_clients, n] and each round
-  pulls/pushes only the sampled clients' rows.  ``ef_scatter`` aliases the
-  table input to its output (``input_output_aliases``) so the update is
-  in-place — no [n_clients, n]-sized copy per round, which is the whole
-  point of keeping EF on device.
+  pulls/pushes only the sampled clients' rows.  The sampled client ids are
+  SCALAR-PREFETCH operands (``pltpu.PrefetchScalarGridSpec``): the block
+  index maps read ``cids[i]`` before the kernel body runs, so the row
+  index feeds the DMA engine directly — each grid step is one HBM<->VMEM
+  row copy with no in-kernel address computation, which is what lets the
+  kernels compile TPU-native (the pre-prefetch version read the index
+  from an ANY-memory ref inside the body and could only interpret).
+  ``ef_scatter`` aliases the table input to its output
+  (``input_output_aliases``) so the update is in-place — no
+  [n_clients, n]-sized copy per round, which is the whole point of
+  keeping EF on device.
 
 All kernels view the flat tensor as [rows, 128] lanes and run a 1-D grid
 over row blocks; wrappers pad to tile multiples and slice the result back,
@@ -31,6 +38,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANES = 128
 BLOCK_ROWS = 8          # 8 x 128 fp32 tile per grid step
@@ -162,29 +170,29 @@ def _ef_cols(table):
 
 
 def _ef_gather_kernel(idx_ref, table_ref, out_ref):
-    i = pl.program_id(0)
-    row = idx_ref[i]
-    out_ref[...] = pl.load(
-        table_ref, (pl.dslice(row, 1), pl.dslice(0, out_ref.shape[1])))
+    del idx_ref    # consumed by the index maps (scalar prefetch)
+    out_ref[...] = table_ref[...]
 
 
 def ef_gather(table, idx, *, interpret=True):
     """table [N, ...], idx [k] int -> the idx rows as [k, ...].
 
-    Grid over the k sampled clients; each step dynamic-slices one full row
-    out of the table (which stays in ``ANY`` memory — on TPU the row moves
-    HBM->VMEM exactly once)."""
+    Grid over the k sampled clients with ``idx`` scalar-prefetched: the
+    input index map selects table row ``idx[i]`` for grid step i, so the
+    DMA engine streams exactly the sampled rows HBM->VMEM and the body is
+    a pure row copy."""
     flat, n, trail = _ef_cols(table)
     cols = flat.shape[1]
     k = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, cols), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, cols), lambda i, idx_ref: (i, 0)),
+    )
     out = pl.pallas_call(
         _ef_gather_kernel,
-        grid=(k,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec(memory_space=pl.ANY),
-        ],
-        out_specs=pl.BlockSpec((1, cols), lambda i: (i, 0)),
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((k, cols), flat.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), flat)
@@ -192,19 +200,19 @@ def ef_gather(table, idx, *, interpret=True):
 
 
 def _ef_scatter_kernel(idx_ref, rows_ref, table_ref, out_ref):
-    del table_ref  # aliased to out_ref; written, never read
-    i = pl.program_id(0)
-    row = idx_ref[i]
-    pl.store(out_ref, (pl.dslice(row, 1), pl.dslice(0, out_ref.shape[1])),
-             rows_ref[...])
+    del idx_ref, table_ref   # idx: index maps; table: aliased, never read
+    out_ref[...] = rows_ref[...]
 
 
 def ef_scatter(table, idx, rows, *, interpret=True):
     """Write rows [k, ...] into table [N, ...] at idx — in place.
 
-    The table is donated into the kernel via ``input_output_aliases``, so
-    the untouched N-k rows are never copied.  ``idx`` must be unique (the
-    federated sampler asserts this); duplicate rows would race.
+    The table is donated into the kernel via ``input_output_aliases`` (the
+    aliased operand never enters the body — untouched N-k rows are never
+    copied) and ``idx`` is scalar-prefetched: the OUTPUT index map routes
+    grid step i's row block to table row ``idx[i]``, so the writeback is
+    a direct VMEM->HBM row DMA.  ``idx`` must be unique (the federated
+    sampler asserts this); duplicate rows would race.
     """
     flat, n, trail = _ef_cols(table)
     cols = flat.shape[1]
@@ -212,15 +220,18 @@ def ef_scatter(table, idx, rows, *, interpret=True):
     rflat = rows.reshape(k, -1).astype(flat.dtype)
     if cols != rflat.shape[1]:
         rflat = jnp.pad(rflat, ((0, 0), (0, cols - rflat.shape[1])))
-    out = pl.pallas_call(
-        _ef_scatter_kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(k,),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),
-            pl.BlockSpec((1, cols), lambda i: (i, 0)),
+            pl.BlockSpec((1, cols), lambda i, idx_ref: (i, 0)),
             pl.BlockSpec(memory_space=pl.ANY),
         ],
-        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        out_specs=pl.BlockSpec((1, cols), lambda i, idx_ref: (idx_ref[i], 0)),
+    )
+    out = pl.pallas_call(
+        _ef_scatter_kernel,
+        grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct(flat.shape, flat.dtype),
         input_output_aliases={2: 0},
         interpret=interpret,

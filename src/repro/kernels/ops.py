@@ -95,12 +95,11 @@ def ef_gather(table, idx, *, impl="auto"):
     """Pull the sampled clients' rows [k, ...] out of a device-resident
     per-client table [N, ...] (error-feedback residuals, ``repro.engine``).
 
-    ``auto`` resolves to jnp on every backend for now: the Pallas kernel
-    reads the row index from an ANY-memory ref, which needs the scalar-
-    prefetch rework (ROADMAP) before it can compile TPU-native.  Explicit
-    ``impl="pallas"``/``"pallas_interpret"`` still select the kernel."""
-    if impl == "auto":
-        impl = "jnp"
+    The Pallas kernel scalar-prefetches ``idx`` (``PrefetchScalarGridSpec``)
+    so the row index feeds the DMA engine directly — it compiles TPU-native
+    and ``auto`` selects it there; on CPU ``auto`` stays on the jnp
+    ``take`` oracle (interpret mode is for the correctness tests)."""
+    impl = _resolve(impl)
     if impl == "jnp":
         return ref.ef_gather_ref(table, idx)
     return compress_pack.ef_gather(table, idx,
@@ -112,12 +111,11 @@ def ef_scatter(table, idx, rows, *, impl="auto"):
 
     The jnp path is ``table.at[idx].set(rows)`` — under jit with the table
     donated, XLA performs this in place; the Pallas path aliases the table
-    buffer explicitly.  Either way the full-federation EF tree is updated
-    without a device->host round-trip.  ``auto`` -> jnp on every backend
-    until the kernel's index read moves to scalar prefetch (see
-    :func:`ef_gather`)."""
-    if impl == "auto":
-        impl = "jnp"
+    buffer explicitly (``input_output_aliases``) and scalar-prefetches
+    ``idx`` so each row writes back as one direct VMEM->HBM DMA.  Either
+    way the full-federation EF tree is updated without a device->host
+    round-trip.  ``auto`` -> pallas on TPU, jnp elsewhere."""
+    impl = _resolve(impl)
     if impl == "jnp":
         return ref.ef_scatter_ref(table, idx, rows)
     return compress_pack.ef_scatter(table, idx, rows,

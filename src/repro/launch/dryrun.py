@@ -101,6 +101,96 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     return _save(rec) if save else rec
 
 
+def run_superstep(multi_pod: bool, compressed: bool = True,
+                  save: bool = True, n_rounds: int = 8) -> dict:
+    """Dry-run the SHARDED federated superstep on a production mesh.
+
+    Lowers (never compiles — no real devices needed beyond the forced
+    host placeholders) the ``shard_map``-wrapped K-round superstep with
+    abstract chunk arguments: the client axis over ``data``/``pod``, the
+    full-federation EF table row-sharded by client id.  Catches sharding
+    -spec and shape regressions of ``repro.engine.sharded`` against the
+    16x16 / 2x16x16 meshes on a CPU box.
+    """
+    import dataclasses
+    import jax.numpy as jnp
+    from repro.compress import make_codec
+    from repro.configs import CNN_CONFIGS
+    from repro.core.rounds import init_global_state
+    from repro.engine.sharded import client_sharding, make_sharded_superstep
+    from repro.launch.sharding import chunk_shardings, ef_table_sharding
+    from repro.models.registry import make_bundle
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {"arch": "cnn_mnist", "shape": "superstep", "mesh": mesh_name,
+           "tag": "topk" if compressed else "plain"}
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        shard = client_sharding(mesh)
+        n_clients_round = 32          # divides 16 (data) and 32 (pod*data)
+        n_federation = 64
+        cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"], dropout=0.0)
+        fl = FLConfig(algorithm="fedavg", clients_per_round=n_clients_round,
+                      local_steps=2, local_batch=8,
+                      uplink_codec="topk" if compressed else "identity",
+                      topk_frac=0.05)
+        bundle = make_bundle(cfg)
+        state = jax.eval_shape(lambda k: init_global_state(bundle, fl, k),
+                               jax.random.PRNGKey(0))
+        K, C, S, B = n_rounds, n_clients_round, fl.local_steps, fl.local_batch
+        H, W, Ch = cfg.input_shape
+        batches = {
+            "x": jax.ShapeDtypeStruct((K, C, S, B, H, W, Ch), jnp.float32),
+            "y": jax.ShapeDtypeStruct((K, C, S, B), jnp.int32),
+        }
+        sizes = jax.ShapeDtypeStruct((K, C), jnp.float32)
+        lrs = jax.ShapeDtypeStruct((K,), jnp.float32)
+        sh_batch, sh_repl = chunk_shardings(mesh)
+
+        if compressed:
+            uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac)
+            downlink = make_codec(fl.downlink_codec)
+            uplink.bind(state["model"])
+            downlink.bind(state["model"])
+            ef = [jax.ShapeDtypeStruct((n_federation,) + z.shape, z.dtype)
+                  for z in jax.eval_shape(uplink.init_state)]
+            fn = make_sharded_superstep(bundle, fl, "client_parallel", K,
+                                        mesh, uplink=uplink,
+                                        downlink=downlink)
+            args = (state, ef, state["model"], batches, sizes, lrs,
+                    jax.ShapeDtypeStruct((K, C), jnp.int32),
+                    jax.ShapeDtypeStruct((K,), jnp.int32),
+                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+            ef_sh = ef_table_sharding(mesh)
+            in_sh = (sh_repl, ef_sh, sh_repl, sh_batch, sh_batch, sh_repl,
+                     sh_repl, sh_repl, sh_repl)
+        else:
+            fn = make_sharded_superstep(bundle, fl, "client_parallel", K,
+                                        mesh)
+            args = (state, batches, sizes, lrs)
+            in_sh = (sh_repl, sh_batch, sh_batch, sh_repl)
+
+        with mesh_context(mesh):
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+        out = jax.eval_shape(fn, *args)
+        rec.update(
+            status="ok",
+            t_lower_s=round(time.time() - t0, 1),
+            client_shards=shard.n_shards,
+            clients_per_shard=n_clients_round // shard.n_shards,
+            ef_rows_per_shard=(n_federation // shard.n_shards
+                               if compressed else 0),
+            out_avals=[str(x.shape) for x in jax.tree_util.tree_leaves(out)
+                       ][:4],
+            hlo_ops=len(lowered.as_text()) > 0,
+        )
+    except Exception as e:  # noqa: BLE001 — a dry-run failure is a finding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return _save(rec) if save else rec
+
+
 def _save(rec: dict) -> dict:
     os.makedirs(ART_DIR, exist_ok=True)
     suffix = f"__{rec['tag']}" if rec.get("tag") else ""
@@ -136,9 +226,29 @@ def main() -> None:
                     help="shard_map all-to-all expert dispatch (perf knob)")
     ap.add_argument("--tag", default="",
                     help="suffix for the artifact filename (perf variants)")
+    ap.add_argument("--superstep", action="store_true",
+                    help="dry-run the sharded federated superstep "
+                         "(repro.engine.sharded) on the production meshes "
+                         "instead of a model step")
     args = ap.parse_args()
     fl = FLConfig(algorithm=args.algorithm, fusion_op=args.fusion_op,
                   local_steps=2)
+
+    if args.superstep:
+        pods = [True] if args.multi_pod else [False, True]
+        for mp in pods:
+            for compressed in (False, True):
+                rec = run_superstep(mp, compressed=compressed)
+                tag = f"{rec['mesh']:8s} {rec['tag']:6s}"
+                if rec["status"] == "ok":
+                    print(f"superstep {tag} ok  lower={rec['t_lower_s']}s "
+                          f"shards={rec['client_shards']} "
+                          f"C/shard={rec['clients_per_shard']} "
+                          f"ef-rows/shard={rec['ef_rows_per_shard']}")
+                else:
+                    print(f"superstep {tag} ERROR {rec['error']}")
+                    print(rec.get("traceback", ""))
+        return
 
     if args.all:
         pods = [False, True]

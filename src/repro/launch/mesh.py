@@ -58,6 +58,32 @@ def batch_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
+def client_axes(mesh) -> tuple:
+    """Mesh axes the federated CLIENT axis shards over (major to minor).
+
+    Same axes a batch dimension uses — one sampled client per data-group —
+    but returned only for axes present on the mesh, in the fixed
+    ``("pod", "data")`` order the engine's positional client split relies
+    on (shard position = row-major index over these axes).
+    """
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_engine_mesh(n_client_shards: int = None):
+    """Mesh for the client-parallel engine on the locally visible devices.
+
+    Factors ``n_client_shards`` devices (default: all of them) into
+    ``(data, model=1)`` — the engine shards the client axis over ``data``
+    and treats ``model`` as replicated.  Raising the device count is done
+    by the launcher (``XLA_FLAGS=--xla_force_host_platform_device_count``
+    for CPU simulation), never here.
+    """
+    n = n_client_shards or len(jax.devices())
+    assert n <= len(jax.devices()), \
+        f"engine mesh wants {n} devices, only {len(jax.devices())} visible"
+    return _mesh((n, 1), ("data", "model"))
+
+
 def axis_size(mesh, *names) -> int:
     s = 1
     for n in names:

@@ -196,3 +196,30 @@ def cache_shardings(mesh, cache_struct):
 
 def replicated(mesh, struct):
     return jax.tree.map(lambda x: NamedSharding(mesh, P()), struct)
+
+
+# ---------------------------------------------------------------------------
+# Engine chunk layout (repro.engine.sharded)
+# ---------------------------------------------------------------------------
+
+def client_axis_entry(mesh):
+    """The PartitionSpec entry a client-sharded dim uses on ``mesh``."""
+    from repro.launch.mesh import client_axes
+    axes = client_axes(mesh)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def chunk_shardings(mesh):
+    """(client-sharded, replicated) NamedShardings for a staged chunk.
+
+    The client-sharded one targets ``batches [K, C, ...]`` / ``sizes
+    [K, C]`` (dim 1 = the round's client axis, split over pod/data); lrs,
+    cids and round indices stage replicated.
+    """
+    ax = client_axis_entry(mesh)
+    return (NamedSharding(mesh, P(None, ax)), NamedSharding(mesh, P()))
+
+
+def ef_table_sharding(mesh):
+    """Row sharding (by client id) for the full-federation EF table."""
+    return NamedSharding(mesh, P(client_axis_entry(mesh)))

@@ -42,6 +42,51 @@ def mesh_from_devices():
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def run_engine(args, cfg, fl) -> None:
+    """Drive the same workload through the client-parallel engine.
+
+    Instead of the hand-rolled pjit round loop below, build a federated
+    token dataset and hand it to ``repro.engine`` on a mesh whose whole
+    device count backs the CLIENT axis (``launch.mesh.make_engine_mesh``):
+    the K-round superstep runs under ``shard_map``, clients split over
+    ``data``, chunk staging/eval overlap/adaptive chunk sizing included.
+    On one device this degenerates to the single-device engine.
+    """
+    from repro.data.federated import FederatedDataset
+    from repro.engine import run_federated_engine
+    from repro.launch.mesh import client_axes, make_engine_mesh
+
+    mesh = make_engine_mesh()
+    shards = 1
+    for a in client_axes(mesh):
+        shards *= mesh.shape[a]
+    # the sampled-client axis must split evenly over the mesh
+    fl = dataclasses.replace(
+        fl, clients_per_round=max(fl.clients_per_round, shards)
+        // shards * shards)
+    n_clients = 2 * fl.clients_per_round
+    bundle = make_bundle(cfg, jnp.float32)
+
+    toks, src = token_stream(
+        max(n_clients * fl.local_batch * 8, 128), args.seq_len,
+        vocab=cfg.vocab_size, n_sources=n_clients)
+    test_toks, _ = token_stream(64, args.seq_len, vocab=cfg.vocab_size,
+                                n_sources=n_clients, seed=1)
+    data = FederatedDataset(source_partition(toks, src, n_clients),
+                            {"tokens": test_toks}, seed=0)
+    print(f"engine mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"clients/round={fl.clients_per_round} federation={n_clients}")
+    t0 = time.perf_counter()
+    res = run_federated_engine(
+        bundle, fl, data, rounds=args.rounds, seed=0,
+        eval_every=max(args.rounds // 2, 1), eval_examples=64,
+        verbose=True, superstep_rounds="auto",
+        mesh=mesh if shards > 1 else None)
+    dt = time.perf_counter() - t0
+    print(f"done: {args.rounds} rounds in {dt:.1f}s "
+          f"({args.rounds / dt:.2f} r/s)  stats={res.stats}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m",
@@ -54,6 +99,9 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--engine", action="store_true",
+                    help="run via the client-parallel shard_map engine "
+                         "(repro.engine) instead of the pjit round loop")
     args = ap.parse_args()
 
     cfg = ARCH_CONFIGS[args.arch]
@@ -61,6 +109,11 @@ def main() -> None:
         cfg = dataclasses.replace(cfg.reduced(), vocab_size=256)
     fl = FLConfig(algorithm=args.algorithm, fusion_op=args.fusion_op,
                   local_steps=2, lr=args.lr)
+
+    if args.engine:
+        run_engine(args, cfg, dataclasses.replace(
+            fl, clients_per_round=4, local_batch=args.global_batch))
+        return
     shape = InputShape("custom_train", args.seq_len, args.global_batch,
                        "train")
 

@@ -7,8 +7,21 @@ global model bitwise-equal, CommLog history equal as Python objects
 (bytes, local_loss and eval metrics included), and identical
 checkpoint-resume behaviour.  K=1 bypasses ``lax.scan`` entirely; K=4
 exercises the scan carry (global state + EF tree + mirror threading).
+
+The SHARDED contract is one notch weaker by construction: the
+client-parallel ``shard_map`` engine (client axis split over the mesh,
+EF table row-sharded by cid) must be allclose to the single-device engine
+— aggregation order changes, bits may not — with CommLog byte accounting
+identical and metric trajectories equal to float tolerance.  It is pinned
+two ways: in-process tests that run whenever the host is a forced
+multi-device CPU (CI's forced-4-device job), and a subprocess grid that
+forces 2- and 4-device hosts from inside a normal tier-1 run.
 """
 import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import numpy as np
@@ -180,6 +193,186 @@ def test_chunk_schedule_boundaries():
                                                        (4, 5)]
     # eval folded into the scan imposes no boundary
     assert chunk_schedule(0, 16, 8, eval_every=None) == [(0, 8), (8, 16)]
+
+
+def test_engine_auto_chunk_rounds_identical():
+    """superstep_rounds='auto' calibrates K on a cloned rng stream — the
+    results must stay bitwise-equal to a fixed-K run and the choice lands
+    in ServerResult.stats."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=1,
+                  local_batch=4, lr=0.05)
+    fixed = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                          eval_every=4, superstep_rounds=4)
+    auto = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                         eval_every=4, superstep_rounds="auto")
+    _assert_same(fixed, auto)
+    assert isinstance(auto.stats["chunk_rounds"], int)
+    assert auto.stats["chunk_rounds"] >= 8
+
+
+def test_engine_eval_overlap_identical():
+    """Snapshot-based eval dispatch (overlap_eval) changes scheduling
+    only: histories and final models match the non-overlapped run
+    bitwise."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=1,
+                  local_batch=4, lr=0.05)
+    a = run_federated(bundle, fl, _data(), rounds=6, seed=1, eval_every=2,
+                      superstep_rounds=2, overlap_eval=True)
+    b = run_federated(bundle, fl, _data(), rounds=6, seed=1, eval_every=2,
+                      superstep_rounds=2, overlap_eval=False)
+    _assert_same(a, b)
+    assert a.stats["eval_overlap"] and not b.stats["eval_overlap"]
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine: client-parallel shard_map over a forced host mesh
+# ---------------------------------------------------------------------------
+
+SHARDED_CASES = {
+    "plain": ("client_parallel", dict()),
+    "topk": ("client_parallel", dict(uplink_codec="topk", topk_frac=0.1)),
+    "quant+downtopk": ("client_parallel",
+                       dict(uplink_codec="int8", downlink_codec="topk",
+                            topk_frac=0.1)),
+    "fusion-topk": ("client_parallel",
+                    dict(algorithm="fedfusion", fusion_op="conv",
+                         uplink_codec="topk", topk_frac=0.1)),
+    "topk-seq": ("client_sequential",
+                 dict(uplink_codec="topk", topk_frac=0.1)),
+}
+
+
+def _sharded_fl(case):
+    mode, kw = SHARDED_CASES[case]
+    kw = dict(kw)
+    algo = kw.pop("algorithm", "fedavg")
+    return mode, FLConfig(algorithm=algo, clients_per_round=4,
+                          local_steps=2, local_batch=4, lr=0.05, **kw)
+
+
+def _sharded_data(seed=3):
+    x, y = class_images(12, n_classes=4, shape=(8, 8, 1), seed=0)
+    return FederatedDataset(iid_partition(x, y, 8),
+                            {"x": x[:16], "y": y[:16]}, seed=seed)
+
+
+def assert_results_close(single, sharded, rtol=2e-5, atol=1e-6):
+    """Sharded-vs-single contract: model allclose, byte accounting exact,
+    metric trajectory equal to float tolerance."""
+    for a, b in zip(jax.tree.leaves(single.global_state),
+                    jax.tree.leaves(sharded.global_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+    assert len(single.comm.history) == len(sharded.comm.history)
+    assert single.comm.bytes_up == sharded.comm.bytes_up
+    assert single.comm.bytes_down == sharded.comm.bytes_down
+    for h1, h2 in zip(single.comm.history, sharded.comm.history):
+        assert set(h1) == set(h2)
+        for k in h1:
+            if isinstance(h1[k], float):
+                np.testing.assert_allclose(h1[k], h2[k], rtol=1e-4,
+                                           atol=1e-5)
+            else:
+                assert h1[k] == h2[k], k
+
+
+_multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a forced multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=N + "
+           "REPRO_ALLOW_FORCED_DEVICES=1)")
+
+
+@_multidevice
+@pytest.mark.parametrize("case", sorted(SHARDED_CASES))
+def test_sharded_engine_matches_single_device(case):
+    from repro.launch.mesh import make_engine_mesh
+    mode, fl = _sharded_fl(case)
+    bundle = _bundle()
+    mesh = make_engine_mesh()   # all forced devices on the data axis
+    single = run_federated(bundle, fl, _sharded_data(), rounds=4, seed=1,
+                           eval_every=2, mode=mode, superstep_rounds=2)
+    sharded = run_federated(bundle, fl, _sharded_data(), rounds=4, seed=1,
+                            eval_every=2, mode=mode, superstep_rounds=2,
+                            mesh=mesh)
+    assert_results_close(single, sharded)
+    assert sharded.stats["client_shards"] == jax.device_count()
+
+
+@_multidevice
+def test_sharded_checkpoint_resume_row_sharded_ef(tmp_path):
+    """Interrupt + resume with the EF table row-sharded by cid: the saved
+    ef.npz assembles the global table, the resume re-shards it, and the
+    two-phase run matches the single-device two-phase run."""
+    from repro.launch.mesh import make_engine_mesh
+    _, fl = _sharded_fl("topk")
+    bundle = _bundle()
+
+    def two_phase(mesh, d):
+        run_federated(bundle, fl, _sharded_data(), rounds=4, seed=1,
+                      eval_every=4, superstep_rounds=3, mesh=mesh,
+                      checkpoint_dir=str(d), checkpoint_every=2)
+        return run_federated(bundle, fl, _sharded_data(), rounds=8, seed=1,
+                             eval_every=4, superstep_rounds=3, mesh=mesh,
+                             checkpoint_dir=str(d), checkpoint_every=2)
+
+    single = two_phase(None, tmp_path / "single")
+    sharded = two_phase(make_engine_mesh(), tmp_path / "sharded")
+    assert_results_close(single, sharded)
+
+
+_SHARDED_GRID_SCRIPT = textwrap.dedent("""
+    import sys
+    import jax
+    assert jax.device_count() == int(sys.argv[1]), jax.devices()
+    from test_engine import (SHARDED_CASES, _bundle, _sharded_data,
+                             _sharded_fl, assert_results_close)
+    from repro.fl.server import run_federated
+    from repro.launch.mesh import make_engine_mesh
+
+    mesh = make_engine_mesh()
+    for case in sys.argv[2:]:
+        mode, fl = _sharded_fl(case)
+        single = run_federated(_bundle(), fl, _sharded_data(), rounds=4,
+                               seed=1, eval_every=2, mode=mode,
+                               superstep_rounds=2)
+        sharded = run_federated(_bundle(), fl, _sharded_data(), rounds=4,
+                                seed=1, eval_every=2, mode=mode,
+                                superstep_rounds=2, mesh=mesh)
+        assert_results_close(single, sharded)
+        print(f"case {case}: OK")
+    print("SHARDED-OK")
+""")
+
+
+@pytest.mark.parametrize("n_devices,cases", [
+    (2, ["plain", "topk", "topk-seq"]),
+    (4, ["topk", "fusion-topk"]),
+])
+def test_sharded_equivalence_forced_host_mesh(n_devices, cases):
+    """The tier-1-runnable form of the sharded grid: a subprocess forces an
+    N-device CPU host (the flag must be set before jax initializes, hence
+    the subprocess) and checks sharded == single-device per case."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src")
+    env = dict(os.environ)
+    # drop any inherited force flag (e.g. from CI's forced-4-device job)
+    # so the child sees exactly n_devices
+    kept = [t for t in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in t]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n_devices}"])
+    env["REPRO_ALLOW_FORCED_DEVICES"] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_GRID_SCRIPT, str(n_devices)] + cases,
+        capture_output=True, text=True, env=env, timeout=1200)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED-OK" in out.stdout
 
 
 def test_jitted_evaluate_matches_eager():

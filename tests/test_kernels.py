@@ -269,3 +269,20 @@ def test_ef_scatter_gather_roundtrip_multidim():
     out = ops.ef_scatter(table, idx, rows, impl="pallas_interpret")
     back = ops.ef_gather(out, idx, impl="pallas_interpret")
     np.testing.assert_array_equal(np.asarray(back), np.asarray(rows))
+
+
+@pytest.mark.parametrize("impl", ["jnp", "pallas_interpret"])
+def test_ef_scatter_scratch_row_duplicates(impl):
+    """The sharded EF exchange routes not-owned rows to a scratch row
+    appended past the table (``repro.engine.superstep.ef_scatter_exchange``):
+    duplicate writes may only ever land there, owned rows stay exact and
+    the scratch row is discarded.  Pin that contract for both impls."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 2)
+    table = jax.random.normal(ks[0], (5, 40))
+    scratch = jnp.concatenate([table, jnp.zeros((1, 40))], axis=0)
+    rows = jax.random.normal(ks[1], (4, 40))
+    # rows 0 and 2 owned (table rows 3, 1); rows 1, 3 -> scratch row 5
+    safe_idx = jnp.array([3, 5, 1, 5], jnp.int32)
+    out = ops.ef_scatter(scratch, safe_idx, rows, impl=impl)[:5]
+    want = table.at[jnp.array([3, 1])].set(rows[jnp.array([0, 2])])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
