@@ -13,7 +13,7 @@ from repro.configs.base import FLConfig
 from repro.data.federated import FederatedDataset
 from repro.data.partition import artificial_noniid_partition
 from repro.data.synth import class_images
-from repro.fl.server import run_federated
+from repro.fl.api import FederatedTrainer
 from repro.models.registry import make_bundle
 
 ROUNDS, TARGET = 15, 0.5
@@ -32,13 +32,14 @@ xt, yt = class_images(10, n_classes=10, shape=(28, 28, 1), seed=1, noise=0.2,
 clients = artificial_noniid_partition(x, y, 8, shards_per_client=2)
 data = FederatedDataset(clients, {"x": xt, "y": yt})
 
-# 3. Train each algorithm and compare rounds-to-target.
+# 3. Train each algorithm (any repro.fl.api registry name works here —
+#    the trainer resolves the plugin) and compare rounds-to-target.
 results = {}
 for algo, op in [("fedavg", "multi"), ("fedmmd", "multi"),
                  ("fedfusion", "conv")]:
     fl = FLConfig(algorithm=algo, fusion_op=op, clients_per_round=4,
                   local_steps=6, local_batch=16, lr=0.1, mmd_lambda=0.1)
-    res = run_federated(bundle, fl, data, rounds=ROUNDS, verbose=False)
+    res = FederatedTrainer(bundle, fl, data).fit(ROUNDS)
     hist = res.comm.history
     to_target = next((h["round"] for h in hist if h.get("acc", 0) >= TARGET),
                      -1)

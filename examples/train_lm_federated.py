@@ -19,7 +19,8 @@ from repro.configs.base import FLConfig
 from repro.data.federated import FederatedDataset
 from repro.data.partition import source_partition
 from repro.data.synth import token_stream
-from repro.fl.server import run_federated
+from repro.fl.api import (ALGORITHM_NAMES, EvalOptions, FederatedTrainer,
+                          RunOptions)
 from repro.models.registry import make_bundle
 
 
@@ -28,7 +29,7 @@ def main() -> None:
     ap.add_argument("--arch", default="smollm-135m",
                     choices=sorted(ARCH_CONFIGS))
     ap.add_argument("--algorithm", default="fedfusion",
-                    choices=("fedavg", "fedmmd", "fedfusion", "fedl2"))
+                    choices=sorted(ALGORITHM_NAMES))
     ap.add_argument("--fusion-op", default="conv",
                     choices=("conv", "multi", "single"))
     ap.add_argument("--rounds", type=int, default=300)
@@ -61,11 +62,12 @@ def main() -> None:
                   clients_per_round=args.clients_per_round,
                   local_steps=args.local_steps,
                   local_batch=args.local_batch, lr=args.lr, lr_decay=0.995)
-    res = run_federated(bundle, fl, data, rounds=args.rounds,
-                        eval_every=args.eval_every, eval_examples=64,
-                        verbose=True)
+    trainer = FederatedTrainer(bundle, fl, data, RunOptions(
+        verbose=True, eval=EvalOptions(every=args.eval_every, examples=64)))
+    res = trainer.fit(args.rounds)
     print(f"\nuploaded {res.comm.bytes_up/1e6:.1f} MB over "
-          f"{res.comm.rounds} rounds")
+          f"{res.comm.rounds} rounds  "
+          f"final eval: {trainer.evaluate()}")
     if args.save:
         save_server_state(args.save, res.global_state, res.comm.rounds,
                           extra={"algorithm": args.algorithm})

@@ -26,6 +26,12 @@ FL_MODES = ("client_parallel", "client_sequential")
 CODEC_NAMES = ("identity", "quant", "int8", "int4", "topk", "topk_noef",
                "mask", "lowrank")
 
+# Algorithm plugins from repro.fl.api (same literal-mirror pattern:
+# repro.fl.api.ALGORITHM_NAMES is the authoritative registry and
+# test_api asserts the two stay in sync).  Names registered at runtime
+# beyond these are validated against the live registry lazily.
+ALGORITHM_NAMES = ("fedavg", "fedmmd", "fedfusion", "fedl2", "fedprox")
+
 
 @dataclass(frozen=True)
 class ArchConfig:
@@ -237,8 +243,7 @@ class CNNConfig:
     def feature_hw(self) -> Tuple[int, int]:
         h, w, _ = self.input_shape
         for _ in self.conv_channels:
-            h = -(-(h - self.pool_size + 1) // self.pool_stride) if False else (
-                (h - self.pool_size) // self.pool_stride + 1)
+            h = (h - self.pool_size) // self.pool_stride + 1
             w = (w - self.pool_size) // self.pool_stride + 1
         return h, w
 
@@ -247,11 +252,12 @@ class CNNConfig:
 class FLConfig:
     """Federated-learning round configuration (the paper's mechanisms)."""
 
-    algorithm: str = "fedavg"        # fedavg | fedmmd | fedfusion | fedl2
+    algorithm: str = "fedavg"         # an ALGORITHM_NAMES / registry name
     fusion_op: str = "multi"          # conv | multi | single   (fedfusion)
     mmd_lambda: float = 0.1           # λ for L_MMD (paper §4.2)
     mmd_widths: Tuple[float, ...] = (1.0, 2.0, 4.0, 8.0, 16.0)  # RBF multi-width
     l2_lambda: float = 0.01           # two-stream L2 baseline coefficient
+    prox_mu: float = 0.01             # FedProx proximal strength (contrib)
     clients_per_round: int = 16       # C·K in the paper
     local_steps: int = 2              # batches per local epoch
     local_epochs: int = 1             # passes over the round's batches (E)
@@ -272,7 +278,11 @@ class FLConfig:
     quant_bits: int = 8               # the "quant" codec's bit width
 
     def __post_init__(self):
-        assert self.algorithm in ("fedavg", "fedmmd", "fedfusion", "fedl2")
+        if self.algorithm not in ALGORITHM_NAMES:
+            # runtime-registered plugin?  consult the registry lazily so
+            # out-of-tree algorithms validate without editing this file
+            from repro.fl.api import registered_algorithms
+            assert self.algorithm in registered_algorithms(), self.algorithm
         assert self.fusion_op in ("conv", "multi", "single")
         assert self.uplink_codec in CODEC_NAMES, self.uplink_codec
         assert self.downlink_codec in CODEC_NAMES, self.downlink_codec

@@ -1,0 +1,5 @@
+"""Out-of-core algorithm plugins built purely on the ``repro.fl.api``
+hook interface — nothing here is imported by ``repro.core`` /
+``repro.engine``; each module registers itself with
+:func:`repro.fl.api.register_algorithm` exactly the way a third-party
+package would."""

@@ -1,0 +1,37 @@
+"""FedProx (Li et al., arXiv:1812.06127) as an OUT-OF-CORE plugin.
+
+The point of this module is the demonstration, not the mechanism: a
+proximal-term variant of the paper's client-side objective,
+
+    L = L_cls(theta_L) + (mu / 2) * ||Theta_L - Theta_G||^2,
+
+built purely from the public :class:`repro.fl.api.Algorithm` hook API —
+no edits to ``repro.core``, ``repro.engine`` or the round functions.  It
+composes with every wire codec, both execution modes, the K-round
+superstep and the client-parallel ``shard_map`` engine for free, because
+those layers only ever talk to the hook interface.  RingFed-style
+partial averaging or a CFedAvg variant would register the same way.
+"""
+from __future__ import annotations
+
+from repro.core.losses import l2_tree_distance
+from repro.fl.api.algorithm import Algorithm, register_algorithm
+from repro.fl.api.plugins import classify_loss
+
+__all__ = ["FedProx"]
+
+
+class FedProx(Algorithm):
+    """Proximal local objective; strength via ``FLConfig.prox_mu``."""
+
+    name = "fedprox"
+
+    def local_loss(self, bundle, fl, trainable, global_model, batch,
+                   cached_feats_g=None, *, impl="auto"):
+        cls, _, _ = classify_loss(bundle, trainable["model"], batch)
+        prox = 0.5 * fl.prox_mu * l2_tree_distance(trainable["model"],
+                                                   global_model)
+        return cls + prox, {"cls": cls, "prox": prox}
+
+
+register_algorithm(FedProx())

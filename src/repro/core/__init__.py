@@ -5,6 +5,11 @@ Public API:
     init_global_state(bundle, fl_config, key)
     fusion_init / fusion_apply / fusion_aggregate
     mmd_loss
+
+The algorithm-specific math (the per-mechanism local objectives,
+extra-state aggregation and deploy-time logits) lives in
+``repro.fl.api`` plugins; the factories here resolve the plugin from
+``fl_config.algorithm`` and stay mechanism-agnostic.
 """
 from repro.core.fusion import (FUSION_OPS, fusion_aggregate, fusion_apply,
                                fusion_init)  # noqa: F401

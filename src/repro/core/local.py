@@ -1,92 +1,72 @@
 """On-device (client-side) training — the paper's additional mechanisms.
 
-A client receives the global model, builds its *trainable* state
-(local model copy + fusion module for FedFusion), and runs
-``fl.local_steps`` SGD steps with the algorithm's two-stream objective:
-
-  fedavg    L = L_cls(theta_L)
-  fedmmd    L = L_cls(theta_L) + lam * MMD^2(theta_G(X), theta_L(X))
-  fedl2     L = L_cls(theta_L) + lam2 * ||Theta_L - Theta_G||^2
-  fedfusion L = L_cls(C_L(F(E_l(X), E_g(X))))   with E_g frozen
+A client receives the global model, builds its *trainable* state (local
+model copy + whatever extra state the algorithm plugin carries — the
+fusion module for FedFusion), and runs ``fl.local_steps`` SGD steps with
+the algorithm's objective.  The objective itself lives in the
+:class:`repro.fl.api.Algorithm` plugin (``local_loss`` hook); this module
+supplies the mechanism-independent machinery: the optimizer loop, the
+epoch/step ``lax.scan`` nesting, and the paper-§3.3 frozen-stream feature
+cache that two-stream algorithms (FedMMD, FedFusion) opt into via
+``Algorithm.two_stream``.
 
 The frozen global stream is closed over and NEVER updated during local
-training (paper Fig. 1: "the global model is fixed while the local model is
-trained through back propagation").
+training (paper Fig. 1: "the global model is fixed while the local model
+is trained through back propagation").
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core.fusion import fusion_apply
-from repro.core.losses import cross_entropy, l2_tree_distance
-from repro.core.mmd import mmd_loss
 from repro.models.registry import ModelBundle
 from repro.optim import make_optimizer
 
-AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+def _algorithm(fl: FLConfig):
+    # lazy: repro.fl.api sits above repro.core in the package graph
+    # (repro.fl/__init__ pulls in modules that import repro.core), so the
+    # plugin is resolved at factory-call time, never at module import.
+    from repro.fl.api import make_algorithm
+    return make_algorithm(fl.algorithm)
 
 
 def make_local_loss(bundle: ModelBundle, fl: FLConfig, *, impl="auto"):
+    algo = _algorithm(fl)
+
     def loss_fn(trainable, global_model, batch, cached_feats_g=None):
         """``cached_feats_g``: precomputed frozen-stream features for this
         batch (paper §3.3 — E_g's maps can be recorded once per round);
         None recomputes them (the E=1 / uncached path)."""
-        labels = bundle.labels(batch)
-        local = trainable["model"]
-        if fl.algorithm == "fedfusion":
-            feats_l, aux = bundle.extract(local, batch)
-            if cached_feats_g is None:
-                cached_feats_g, _ = bundle.extract(
-                    jax.lax.stop_gradient(global_model), batch)
-            feats_g = jax.lax.stop_gradient(cached_feats_g)
-            fused = fusion_apply(fl.fusion_op, trainable["fusion"],
-                                 feats_g, feats_l, impl=impl)
-            logits = bundle.head(local, fused)
-            loss = cross_entropy(logits, labels) + AUX_WEIGHT * aux
-            return loss, {"cls": loss}
-        out = bundle.apply(local, batch)
-        cls = cross_entropy(out["logits"], labels) + AUX_WEIGHT * out["aux"]
-        if fl.algorithm == "fedavg":
-            return cls, {"cls": cls}
-        if fl.algorithm == "fedmmd":
-            if cached_feats_g is None:
-                cached_feats_g, _ = bundle.extract(
-                    jax.lax.stop_gradient(global_model), batch)
-            reg = mmd_loss(bundle.pool(out["features"]),
-                           jax.lax.stop_gradient(
-                               bundle.pool(cached_feats_g)),
-                           fl.mmd_widths, fl.mmd_lambda, impl=impl)
-            return cls + reg, {"cls": cls, "mmd": reg}
-        if fl.algorithm == "fedl2":
-            reg = fl.l2_lambda * l2_tree_distance(local, global_model)
-            return cls + reg, {"cls": cls, "l2": reg}
-        raise ValueError(fl.algorithm)
+        return algo.local_loss(bundle, fl, trainable, global_model, batch,
+                               cached_feats_g, impl=impl)
 
     return loss_fn
 
 
 def make_local_trainer(bundle: ModelBundle, fl: FLConfig, *, impl="auto"):
-    """Returns local_train(global_model, global_fusion, batches, lr) ->
+    """Returns local_train(global_model, global_extra, batches, lr) ->
     (trainable, mean_loss).
 
+    ``global_extra`` is the algorithm's extra global state
+    (``Algorithm.extra_from_state`` — the fusion params for FedFusion,
+    None for single-stream algorithms).
     ``batches``: pytree whose leaves have leading dim ``fl.local_steps``
     (one local SGD step per slice).
     """
+    algo = _algorithm(fl)
     opt_init, opt_update = make_optimizer(fl.optimizer, fl.momentum)
     loss_fn = make_local_loss(bundle, fl, impl=impl)
 
-    two_stream = fl.algorithm in ("fedfusion", "fedmmd")
-    cache = (fl.cache_global_features and two_stream
+    cache = (fl.cache_global_features and algo.two_stream
              and fl.local_epochs > 1)
 
-    def local_train(global_model, global_fusion, batches, lr):
-        trainable: Dict[str, Any] = {"model": global_model}
-        if fl.algorithm == "fedfusion":
-            trainable["fusion"] = global_fusion
+    def local_train(global_model, global_extra, batches, lr):
+        trainable: Dict[str, Any] = algo.init_trainable(fl, global_model,
+                                                        global_extra)
         state = opt_init(trainable)
 
         cached = None

@@ -12,7 +12,13 @@ Two execution modes map the round onto the device mesh (DESIGN.md §4):
   time, and the batch *within* a client is sharded over ``data``.
 
 Both return (new_global_state, metrics).  ``global_state`` is
-``{'model': params, 'fusion': fusion_params_or_absent}``.
+``{'model': params, **extras}`` where ``extras`` are the algorithm
+plugin's ``Algorithm.extra_state`` entries (FedFusion's fusion params;
+empty for single-stream algorithms).  The round fns thread and
+accumulate those extras generically — what they *mean* lives in the
+plugin's ``aggregate_extras`` / ``finalize_extra_sums`` hooks, so a new
+mechanism registers with ``repro.fl.api`` and rides through here without
+edits.
 
 Engine contract (``repro.engine``): the superstep ``lax.scan``s these
 round fns over a chunk of pre-staged rounds, so they must stay *pure*
@@ -32,12 +38,12 @@ round's clients (positional split: shard s trains sampled positions
 ``[s*C_loc, (s+1)*C_loc)``), every per-client quantity (local training,
 codec encode/decode, EF rows) stays shard-local, and the only collectives
 are the in-shard-reduce + single ``psum`` aggregations in
-``repro.core.aggregate`` / ``fusion_aggregate``.  Replicated inputs
-(global model, mirror, round key, lr) produce bitwise-identical replicated
-outputs on every shard because the psum results agree everywhere.  With
-``shard=None`` the code path is exactly the pre-sharding one — no
-collectives — which is what keeps the single-device engine
-bitwise-equal to the reference loop.
+``repro.core.aggregate`` / the plugin's ``aggregate_extras``.  Replicated
+inputs (global model, mirror, round key, lr) produce bitwise-identical
+replicated outputs on every shard because the psum results agree
+everywhere.  With ``shard=None`` the code path is exactly the
+pre-sharding one — no collectives — which is what keeps the
+single-device engine bitwise-equal to the reference loop.
 """
 from __future__ import annotations
 
@@ -51,8 +57,7 @@ from repro.core.aggregate import (ClientSharding, mean_over_clients,
                                   normalize_weights, psum_tree,
                                   running_update, weighted_mean,
                                   zeros_like_tree)
-from repro.core.fusion import fusion_aggregate
-from repro.core.local import make_local_trainer
+from repro.core.local import _algorithm, make_local_trainer
 from repro.models.registry import ModelBundle
 
 
@@ -80,51 +85,49 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     Under ``shard`` both carry only this shard's clients.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
+    algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
-    is_fusion = fl.algorithm == "fedfusion"
+    extra_keys = algo.extra_state
 
-    def _finalize(global_state, stacked_models, stacked_fusions, weights,
+    def _finalize(global_state, stacked_models, stacked_extras, weights,
                   losses):
         new_model = weighted_mean(stacked_models, weights, shard)
         new_state: Dict[str, Any] = {"model": new_model}
-        if is_fusion:
-            new_state["fusion"] = fusion_aggregate(
-                fl.fusion_op, global_state["fusion"], stacked_fusions,
-                weights, fl.ema_beta, shard=shard)
+        new_state.update(algo.aggregate_extras(fl, global_state,
+                                               stacked_extras, weights,
+                                               shard=shard))
         return new_state, {"local_loss": mean_over_clients(losses, shard)}
 
     if mode == "client_parallel":
         def round_fn(global_state, client_batches, n_examples, lr):
             weights = normalize_weights(n_examples, shard)
             gm = global_state["model"]
-            gf = global_state.get("fusion")
+            gx = algo.extra_from_state(global_state)
 
             def train_one(batches):
-                return trainer(gm, gf, batches, lr)
+                return trainer(gm, gx, batches, lr)
 
             trainables, losses = jax.vmap(train_one)(client_batches)
             return _finalize(global_state, trainables["model"],
-                             trainables.get("fusion"), weights, losses)
+                             {k: trainables[k] for k in extra_keys},
+                             weights, losses)
 
         return round_fn
 
     def round_fn(global_state, client_batches, n_examples, lr):
         weights = normalize_weights(n_examples, shard)
         gm = global_state["model"]
-        gf = global_state.get("fusion")
+        gx = algo.extra_from_state(global_state)
         acc0 = {"model": zeros_like_tree(gm)}
-        if is_fusion:
-            acc0["fusion"] = zeros_like_tree(gf)
+        for k in extra_keys:
+            acc0[k] = zeros_like_tree(global_state[k])
 
         def body(acc, xs):
             batches, w = xs
-            trainable, loss = trainer(gm, gf, batches, lr)
-            acc = dict(acc)
-            acc["model"] = running_update(acc["model"], trainable["model"], w)
-            if is_fusion:
-                # accumulate the weighted client gates; EMA applied after
-                acc["fusion"] = running_update(acc["fusion"],
-                                               trainable["fusion"], w)
+            trainable, loss = trainer(gm, gx, batches, lr)
+            # accumulate the weighted client params (and extras — e.g.
+            # fusion gates; the plugin's EMA etc. applies after the sum)
+            acc = {k: running_update(acc[k], trainable[k], w) for k in acc}
             return acc, loss
 
         acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
@@ -132,13 +135,8 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
         # completes them over the round (no-op when unsharded)
         acc = psum_tree(acc, shard)
         new_state: Dict[str, Any] = {"model": acc["model"]}
-        if is_fusion:
-            if fl.fusion_op == "conv":
-                new_state["fusion"] = acc["fusion"]
-            else:
-                new_state["fusion"] = jax.tree.map(
-                    lambda old, new: fl.ema_beta * old + (1 - fl.ema_beta) * new,
-                    gf, acc["fusion"])
+        new_state.update(algo.finalize_extra_sums(
+            fl, global_state, {k: acc[k] for k in extra_keys}))
         return new_state, {"local_loss": mean_over_clients(losses, shard)}
 
     return round_fn
@@ -175,8 +173,9 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
          state (clients see it through the mirror only).  Identical to
          FedAvg's weighted model average when both codecs are identity.
 
-    Fusion-module parameters (FedFusion) ride along uncompressed, exactly
-    as before — their raw bytes stay accounted in ``CommLog``.
+    The algorithm's extra state (FedFusion's fusion module) rides along
+    uncompressed, exactly as before — its raw bytes stay accounted in
+    ``CommLog``.
 
     Under ``shard`` (see module docstring) ``ef_state`` carries the EF
     rows of THIS shard's positional clients only; steps 1 and the
@@ -186,8 +185,9 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
     the reference loop's full split.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
+    algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
-    is_fusion = fl.algorithm == "fedfusion"
+    extra_keys = algo.extra_state
 
     def round_fn(global_state, client_batches, n_examples, lr, ef_state,
                  down_mirror, key):
@@ -201,19 +201,19 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
             kd if downlink.uses_key else None)
         bcast = jax.tree.map(lambda w, d: w + d.astype(w.dtype),
                              down_mirror, downlink.decode(down_payload))
-        gf = global_state.get("fusion")
+        gx = algo.extra_from_state(global_state)
         client_keys = _local_client_keys(ku, n_clients, shard)
 
         def client_step(batches, ef, ck):
-            trainable, loss = trainer(bcast, gf, batches, lr)
+            trainable, loss = trainer(bcast, gx, batches, lr)
             delta = jax.tree.map(lambda a, b: a - b, trainable["model"],
                                  bcast)
             payload, new_ef = uplink.encode(
                 delta, ef, ck if uplink.uses_key else None)
             decoded = uplink.decode(payload)
             out = {"delta": decoded, "ef": new_ef, "loss": loss}
-            if is_fusion:
-                out["fusion"] = trainable["fusion"]
+            for k in extra_keys:
+                out[k] = trainable[k]
             return out
 
         if mode == "client_parallel":
@@ -221,31 +221,23 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
                                          client_keys)
             agg_delta = weighted_mean(outs["delta"], weights, shard)
             new_ef = outs["ef"]
-            stacked_fusions = outs.get("fusion")
-            losses = outs["loss"]
+            stacked_extras = {k: outs[k] for k in extra_keys}
         else:
-            acc0 = zeros_like_tree(global_state["model"])
-            if is_fusion:
-                acc0 = (acc0, zeros_like_tree(gf))
+            acc0 = {"delta": zeros_like_tree(global_state["model"])}
+            for k in extra_keys:
+                acc0[k] = zeros_like_tree(global_state[k])
 
             def body(acc, xs):
                 batches, w, ef, ck = xs
                 out = client_step(batches, ef, ck)
-                if is_fusion:
-                    acc = (running_update(acc[0], out["delta"], w),
-                           running_update(acc[1], out["fusion"], w))
-                else:
-                    acc = running_update(acc, out["delta"], w)
+                acc = {k: running_update(acc[k], out[k], w) for k in acc}
                 return acc, (out["ef"], out["loss"])
 
             acc, (new_ef, losses) = jax.lax.scan(
                 body, acc0, (client_batches, weights, ef_state, client_keys))
             acc = psum_tree(acc, shard)
-            if is_fusion:
-                agg_delta, fusion_sum = acc
-                stacked_fusions = None
-            else:
-                agg_delta = acc
+            agg_delta = acc["delta"]
+            extra_sums = {k: acc[k] for k in extra_keys}
 
         # apply the aggregate update to the FULL-PRECISION server model;
         # the aggregate of the client models themselves is bcast+Σw·Δ, but
@@ -254,17 +246,13 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
         new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
                                  global_state["model"], agg_delta)
         new_state: Dict[str, Any] = {"model": new_model}
-        if is_fusion:
-            if mode == "client_parallel":
-                new_state["fusion"] = fusion_aggregate(
-                    fl.fusion_op, global_state["fusion"], stacked_fusions,
-                    weights, fl.ema_beta, shard=shard)
-            elif fl.fusion_op == "conv":
-                new_state["fusion"] = fusion_sum
-            else:
-                new_state["fusion"] = jax.tree.map(
-                    lambda old, new: fl.ema_beta * old
-                    + (1 - fl.ema_beta) * new, gf, fusion_sum)
+        if mode == "client_parallel":
+            losses = outs["loss"]
+            new_state.update(algo.aggregate_extras(
+                fl, global_state, stacked_extras, weights, shard=shard))
+        else:
+            new_state.update(algo.finalize_extra_sums(
+                fl, global_state, extra_sums))
         return (new_state, {"local_loss": mean_over_clients(losses, shard)},
                 new_ef, bcast)
 
@@ -272,11 +260,10 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
 
 
 def init_global_state(bundle: ModelBundle, fl: FLConfig, key):
-    """Server line 1: initialise the global model (+ fusion module)."""
-    from repro.core.fusion import fusion_init
+    """Server line 1: initialise the global model (+ the algorithm's
+    extra state — FedFusion's fusion module)."""
+    algo = _algorithm(fl)
     k1, k2 = jax.random.split(key)
     state: Dict[str, Any] = {"model": bundle.init(k1)}
-    if fl.algorithm == "fedfusion":
-        state["fusion"] = fusion_init(fl.fusion_op, bundle.feature_channels,
-                                      k2)
+    state.update(algo.init_extra_state(bundle, fl, k2))
     return state

@@ -14,6 +14,7 @@ class FederatedDataset:
                  test: Dict[str, np.ndarray], *, seed: int = 0):
         self.clients = clients
         self.test = test
+        self._seed = seed
         self._rng = np.random.default_rng(seed)
 
     @property
@@ -96,6 +97,32 @@ class FederatedDataset:
                    for k in batch_l[0]}
         return (_stack("cids", cids_l, np.int32), stacked,
                 _stack("sizes", size_l, np.float32))
+
+    def skip_round_sampling(self, n_rounds: int, clients_per_round: int,
+                            local_steps: int, batch: int) -> None:
+        """Re-seed the sampling rng and consume exactly the draws the
+        first ``n_rounds`` rounds make (``sample_clients`` +
+        ``round_batch``, same order) WITHOUT materializing batches.
+
+        Resume-from-checkpoint replays the stream with this, so a resumed
+        run samples for round r exactly what an uninterrupted run would
+        have — ``fit`` interrupted + resumed lands bitwise on the
+        uninterrupted result (pinned by tests/test_api.py).  Re-seeding
+        (rather than advancing in place) makes that hold from a fresh
+        dataset AND from the same in-process instance, whose rng may
+        already sit past the checkpointed round (the prefetcher stages
+        chunks ahead of the training front).  Only round sampling is
+        replayed: interleave explicit ``test_batch(n)`` draws and the
+        stream diverges — the server loops never do.
+        """
+        self._rng = np.random.default_rng(self._seed)
+        key = "x" if "x" in self.clients[0] else "tokens"
+        for _ in range(n_rounds):
+            cids = self.sample_clients(clients_per_round)
+            for cid in cids:
+                size = len(self.clients[cid][key])
+                for _ in range(local_steps):
+                    self._rng.choice(size, size=batch, replace=size < batch)
 
     def test_batch(self, n: Optional[int] = None) -> Dict[str, np.ndarray]:
         if n is None:

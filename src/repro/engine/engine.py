@@ -201,6 +201,10 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             os.path.join(checkpoint_dir, "meta.json")):
         global_state, start_round = restore_server_state(checkpoint_dir,
                                                          global_state)
+        # replay the consumed sampling stream so resumed rounds draw the
+        # exact clients/batches an uninterrupted run would have
+        data.skip_round_sampling(start_round, fl.clients_per_round,
+                                 fl.local_steps, fl.local_batch)
     global_state = jax.tree.map(lambda x: _stage(jnp.asarray(x)),
                                 global_state)
     lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)

@@ -21,26 +21,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fusion import fusion_apply
 from repro.core.losses import masked_accuracy, masked_cross_entropy
 
 
 def make_eval_fn(bundle, fl):
     """Traceable ``eval_metrics(global_state, batch, mask) -> {acc, loss}``.
 
-    For FedFusion the deployed global model fuses its own features with
-    itself through the aggregated fusion module (E_g = E_l = global),
-    exactly as the pre-engine evaluator did.
+    Deployment-time logits come from the algorithm plugin's
+    ``deploy_logits`` hook — for FedFusion the deployed global model
+    fuses its own features with itself through the aggregated fusion
+    module (E_g = E_l = global), exactly as the pre-engine evaluator did.
     """
-    is_fusion = fl.algorithm == "fedfusion"
+    from repro.fl.api import make_algorithm   # lazy: fl sits above engine
+    algo = make_algorithm(fl.algorithm)
 
     def eval_metrics(global_state, batch, mask) -> Dict:
         out = bundle.apply(global_state["model"], batch)
-        logits = out["logits"]
-        if is_fusion:
-            fused = fusion_apply(fl.fusion_op, global_state["fusion"],
-                                 out["features"], out["features"])
-            logits = bundle.head(global_state["model"], fused)
+        logits = algo.deploy_logits(bundle, fl, global_state, out)
         labels = bundle.labels(batch)
         return {"acc": masked_accuracy(logits, labels, mask),
                 "loss": masked_cross_entropy(logits, labels, mask)}

@@ -1,3 +1,6 @@
+from repro.fl.api import (Algorithm, ALGORITHM_NAMES,  # noqa: F401
+                          FederatedTrainer, RunOptions, make_algorithm,
+                          register_algorithm)
 from repro.fl.comm import CommLog, tree_bytes  # noqa: F401
 from repro.fl.newclient import newclient_convergence  # noqa: F401
 from repro.fl.server import ServerResult, evaluate, run_federated  # noqa: F401

@@ -1,0 +1,29 @@
+"""``repro.fl.api`` — pluggable algorithms + the ``FederatedTrainer`` facade.
+
+    Algorithm / register_algorithm / make_algorithm — plugin interface
+        and registry (mirrors ``repro.compress.make_codec``); built-in
+        plugins live in ``repro.fl.api.plugins``, the out-of-core
+        demonstration in ``repro.contrib.fedprox``
+    ALGORITHM_NAMES — the default-registered names (the authoritative
+        set; ``repro.configs.base.ALGORITHM_NAMES`` mirrors it literally
+        and a sync test keeps the two from drifting)
+    FederatedTrainer / RunOptions (+ Eval/Checkpoint/EngineOptions) —
+        the unified engine-backed entry point; ``repro.fl.server.
+        run_federated`` is a thin back-compat wrapper over it
+"""
+from repro.fl.api.algorithm import (Algorithm, make_algorithm,  # noqa: F401
+                                    register_algorithm,
+                                    registered_algorithms)
+from repro.fl.api.trainer import (CheckpointOptions, EngineOptions,  # noqa: F401
+                                  EvalOptions, FederatedTrainer,
+                                  RunOptions)
+
+
+def __getattr__(name):  # PEP 562
+    # computed on access, not at import: always the LIVE registry — this
+    # stays correct when a plugin module (e.g. repro.contrib.fedprox) is
+    # itself mid-import while this package initializes, and it reflects
+    # algorithms registered later at runtime.
+    if name == "ALGORITHM_NAMES":
+        return registered_algorithms()
+    raise AttributeError(name)

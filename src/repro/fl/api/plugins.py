@@ -1,0 +1,136 @@
+"""The paper's four mechanisms as :class:`Algorithm` plugins.
+
+Each plugin is the verbatim math that used to live behind
+``fl.algorithm ==`` branches in ``core/local.py`` / ``core/rounds.py`` /
+``engine/evaljit.py`` / ``fl/server.py`` / ``fl/newclient.py``:
+
+  fedavg    L = L_cls(theta_L)
+  fedmmd    L = L_cls(theta_L) + lam * MMD^2(theta_G(X), theta_L(X))
+  fedl2     L = L_cls(theta_L) + lam2 * ||Theta_L - Theta_G||^2
+  fedfusion L = L_cls(C_L(F(E_l(X), E_g(X))))   with E_g frozen
+
+The frozen global stream is closed over and NEVER updated during local
+training (paper Fig. 1: "the global model is fixed while the local model
+is trained through back propagation").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import (fusion_aggregate, fusion_apply, fusion_init)
+from repro.core.losses import cross_entropy, l2_tree_distance
+from repro.core.mmd import mmd_loss
+from repro.fl.api.algorithm import Algorithm, register_algorithm
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+__all__ = ["AUX_WEIGHT", "classify_loss", "FedAvg", "FedMMD", "FedL2",
+           "FedFusion"]
+
+
+def classify_loss(bundle, local, batch):
+    """Plain single-stream forward: (cls_loss, labels, out).  Public so
+    out-of-core plugins (repro.contrib) build on the same classify path
+    instead of re-deriving it."""
+    labels = bundle.labels(batch)
+    out = bundle.apply(local, batch)
+    cls = cross_entropy(out["logits"], labels) + AUX_WEIGHT * out["aux"]
+    return cls, labels, out
+
+
+def _frozen_features(bundle, global_model, batch, cached):
+    """The frozen stream's features: the per-round cache when the trainer
+    recorded one (paper §3.3), recomputed under stop_gradient otherwise."""
+    if cached is None:
+        cached, _ = bundle.extract(jax.lax.stop_gradient(global_model),
+                                   batch)
+    return jax.lax.stop_gradient(cached)
+
+
+class FedAvg(Algorithm):
+    name = "fedavg"
+
+    def local_loss(self, bundle, fl, trainable, global_model, batch,
+                   cached_feats_g=None, *, impl="auto"):
+        cls, _, _ = classify_loss(bundle, trainable["model"], batch)
+        return cls, {"cls": cls}
+
+
+class FedMMD(Algorithm):
+    name = "fedmmd"
+    two_stream = True
+
+    def local_loss(self, bundle, fl, trainable, global_model, batch,
+                   cached_feats_g=None, *, impl="auto"):
+        cls, _, out = classify_loss(bundle, trainable["model"], batch)
+        feats_g = _frozen_features(bundle, global_model, batch,
+                                   cached_feats_g)
+        reg = mmd_loss(bundle.pool(out["features"]), bundle.pool(feats_g),
+                       fl.mmd_widths, fl.mmd_lambda, impl=impl)
+        return cls + reg, {"cls": cls, "mmd": reg}
+
+
+class FedL2(Algorithm):
+    name = "fedl2"
+
+    def local_loss(self, bundle, fl, trainable, global_model, batch,
+                   cached_feats_g=None, *, impl="auto"):
+        cls, _, _ = classify_loss(bundle, trainable["model"], batch)
+        reg = fl.l2_lambda * l2_tree_distance(trainable["model"],
+                                              global_model)
+        return cls + reg, {"cls": cls, "l2": reg}
+
+
+class FedFusion(Algorithm):
+    name = "fedfusion"
+    two_stream = True
+    extra_state = ("fusion",)
+
+    def init_extra_state(self, bundle, fl, key):
+        return {"fusion": fusion_init(fl.fusion_op, bundle.feature_channels,
+                                      key)}
+
+    def init_trainable(self, fl, global_model, extra):
+        return {"model": global_model, "fusion": extra}
+
+    def local_loss(self, bundle, fl, trainable, global_model, batch,
+                   cached_feats_g=None, *, impl="auto"):
+        labels = bundle.labels(batch)
+        feats_l, aux = bundle.extract(trainable["model"], batch)
+        feats_g = _frozen_features(bundle, global_model, batch,
+                                   cached_feats_g)
+        fused = fusion_apply(fl.fusion_op, trainable["fusion"],
+                             feats_g, feats_l, impl=impl)
+        logits = bundle.head(trainable["model"], fused)
+        loss = cross_entropy(logits, labels) + AUX_WEIGHT * aux
+        return loss, {"cls": loss}
+
+    def aggregate_extras(self, fl, global_state, stacked, weights,
+                         shard=None):
+        return {"fusion": fusion_aggregate(
+            fl.fusion_op, global_state["fusion"], stacked["fusion"],
+            weights, fl.ema_beta, shard=shard)}
+
+    def finalize_extra_sums(self, fl, global_state, sums):
+        # the running sums already carry the n_t weighting; conv weights
+        # average like any parameter, multi/single gates EMA-smooth
+        # against the previous global gate (paper §3.3)
+        if fl.fusion_op == "conv":
+            return {"fusion": sums["fusion"]}
+        return {"fusion": jax.tree.map(
+            lambda old, new: fl.ema_beta * old + (1 - fl.ema_beta) * new,
+            global_state["fusion"], sums["fusion"])}
+
+    def deploy_logits(self, bundle, fl, global_state, out, *, impl="auto"):
+        # the deployed global model fuses its own features with itself
+        # through the aggregated fusion module (E_g = E_l = global)
+        fused = fusion_apply(fl.fusion_op, global_state["fusion"],
+                             out["features"], out["features"], impl=impl)
+        return bundle.head(global_state["model"], fused)
+
+
+register_algorithm(FedAvg())
+register_algorithm(FedMMD())
+register_algorithm(FedL2())
+register_algorithm(FedFusion())

@@ -1,0 +1,145 @@
+"""``FederatedTrainer``: the unified entry point over the engine.
+
+``run_federated`` had accreted a 13-kwarg signature across PRs 1-3; the
+facade groups those knobs into a :class:`RunOptions` dataclass (eval /
+checkpoint / engine sub-groups) and owns the run lifecycle:
+
+    trainer = FederatedTrainer(bundle, fl, data, RunOptions(...))
+    trainer.fit(rounds)              # engine-backed, checkpoint-resumable
+    trainer.evaluate()               # jitted pad-and-mask eval
+    trainer.newclient_probe(data_c)  # paper Fig. 6 generalization probe
+
+``fit`` is resumable two ways: with ``options.checkpoint.dir`` set it
+restores the last checkpoint exactly like the engine always has (an
+interrupted ``fit(N)`` re-invoked lands on the same state as one
+uninterrupted call), and the trainer keeps the last result so
+``evaluate``/``newclient_probe`` read the trained state without
+re-plumbing it.  ``repro.fl.server.run_federated`` remains as a thin
+back-compat wrapper that builds a ``RunOptions`` from the old kwargs.
+
+Engine/server/newclient imports happen inside the methods: this module
+sits below ``repro.core`` in the import graph (the round factories
+resolve their plugin through ``repro.fl.api``), so the heavy reverse
+edges must stay lazy — same pattern as ``repro.engine.engine``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Union
+
+from repro.fl.api.algorithm import Algorithm, make_algorithm
+
+__all__ = ["EvalOptions", "CheckpointOptions", "EngineOptions",
+           "RunOptions", "FederatedTrainer"]
+
+
+@dataclass(frozen=True)
+class EvalOptions:
+    """Global-model evaluation cadence (the paper's per-round curves)."""
+
+    every: int = 1            # rounds between evals (folded into the scan at 1)
+    examples: int = 2048      # pad-and-mask bucket cap
+
+
+@dataclass(frozen=True)
+class CheckpointOptions:
+    """Server-state persistence; ``dir=None`` disables checkpointing."""
+
+    dir: Optional[str] = None
+    every: int = 10           # rounds between saves
+
+
+@dataclass(frozen=True)
+class EngineOptions:
+    """Execution knobs of ``repro.engine`` (throughput only — results are
+    invariant to every field except ``mesh``, which is allclose)."""
+
+    superstep_rounds: Union[int, str] = 8   # rounds per jitted chunk | "auto"
+    prefetch: bool = True                   # background host staging
+    mesh: Any = None                        # client-parallel shard_map mesh
+    overlap_eval: bool = True               # snapshot-dispatched boundary eval
+    impl: str = "auto"                      # kernel dispatch (jnp | pallas)
+
+
+@dataclass(frozen=True)
+class RunOptions:
+    """Everything a federated run needs beyond (bundle, fl, data, rounds)."""
+
+    mode: str = "client_parallel"           # mesh execution mode
+    seed: int = 0
+    verbose: bool = False
+    eval: EvalOptions = field(default_factory=EvalOptions)
+    checkpoint: CheckpointOptions = field(default_factory=CheckpointOptions)
+    engine: EngineOptions = field(default_factory=EngineOptions)
+
+
+class FederatedTrainer:
+    """Facade owning one (bundle, fl, data, options) federated workload."""
+
+    def __init__(self, bundle, fl, data, options: Optional[RunOptions] = None):
+        self.bundle = bundle
+        self.fl = fl
+        self.data = data
+        self.options = options if options is not None else RunOptions()
+        self.algorithm: Algorithm = make_algorithm(fl.algorithm)
+        self._result = None
+
+    # ------------------------------------------------------------------
+    @property
+    def result(self):
+        """The last ``fit`` result (ServerResult), or None before any fit."""
+        return self._result
+
+    @property
+    def global_state(self) -> Dict[str, Any]:
+        if self._result is None:
+            raise RuntimeError("no trained state yet — call fit() first "
+                               "(or pass global_state= explicitly)")
+        return self._result.global_state
+
+    # ------------------------------------------------------------------
+    def fit(self, rounds: int, *, callback: Optional[Callable] = None):
+        """Train to ``rounds`` total rounds through the engine.
+
+        With ``options.checkpoint.dir`` set, training RESUMES from the
+        last checkpoint if one exists (paper Alg. 1 line 1 only runs on a
+        cold start), so an interrupted fit re-invoked with the same
+        arguments finishes the same run.  Returns the ``ServerResult``
+        (also kept on the trainer for ``evaluate``/``newclient_probe``).
+        """
+        from repro.engine import run_federated_engine
+        o = self.options
+        self._result = run_federated_engine(
+            self.bundle, self.fl, self.data, rounds=rounds, seed=o.seed,
+            mode=o.mode, eval_every=o.eval.every,
+            eval_examples=o.eval.examples, verbose=o.verbose,
+            checkpoint_dir=o.checkpoint.dir,
+            checkpoint_every=o.checkpoint.every, callback=callback,
+            superstep_rounds=o.engine.superstep_rounds,
+            prefetch=o.engine.prefetch, impl=o.engine.impl,
+            mesh=o.engine.mesh, overlap_eval=o.engine.overlap_eval)
+        return self._result
+
+    def evaluate(self, global_state=None, batch=None,
+                 max_examples: Optional[int] = None) -> Dict[str, float]:
+        """Jitted test metrics of the (last-trained) global model."""
+        from repro.fl.server import evaluate
+        state = global_state if global_state is not None else self.global_state
+        if batch is None:
+            batch = self.data.test_batch()
+        return evaluate(self.bundle, self.fl, state, batch,
+                        max_examples if max_examples is not None
+                        else self.options.eval.examples)
+
+    def newclient_probe(self, client_data, *, epochs: int,
+                        batch: Optional[int] = None,
+                        lr: Optional[float] = None, seed: int = 0,
+                        global_state=None):
+        """Paper Fig. 6: per-epoch local accuracy of a fresh client that
+        adapts from the (last-trained) aggregated global state."""
+        from repro.fl.newclient import newclient_convergence
+        state = global_state if global_state is not None else self.global_state
+        return newclient_convergence(
+            self.bundle, self.fl, state, client_data, epochs=epochs,
+            batch=batch if batch is not None else self.fl.local_batch,
+            lr=lr if lr is not None else self.fl.lr, seed=seed)

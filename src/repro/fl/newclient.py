@@ -5,6 +5,11 @@ on its own data, starting from the aggregated global state?  FedFusion's
 fusion module gives the newcomer a ready-made mixer between the global
 features and its soon-to-be-personal features — the paper's claimed
 initialization advantage.
+
+Both the local trainer and the per-epoch evaluation are compiled: the
+eval runs through the algorithm plugin's ``deploy_logits`` hook under one
+``jax.jit`` (the eval batch shape is fixed across epochs), instead of the
+old uncompiled op-by-op ``bundle.apply`` every epoch.
 """
 from __future__ import annotations
 
@@ -16,7 +21,7 @@ import numpy as np
 
 from repro.configs.base import FLConfig
 from repro.core import accuracy, make_local_trainer
-from repro.core.fusion import fusion_apply
+from repro.fl.api import make_algorithm
 from repro.models.registry import ModelBundle
 
 
@@ -26,10 +31,18 @@ def newclient_convergence(bundle: ModelBundle, fl: FLConfig, global_state,
                           seed: int = 0) -> List[float]:
     """Train locally for ``epochs`` epochs; returns per-epoch local accuracy."""
     rng = np.random.default_rng(seed)
+    algo = make_algorithm(fl.algorithm)
     trainer = jax.jit(make_local_trainer(bundle, fl))
     key = "x" if "x" in client_data else "tokens"
     n = len(client_data[key])
     steps = max(n // batch, 1)
+
+    def _epoch_eval(state, eval_batch):
+        out = bundle.apply(state["model"], eval_batch)
+        logits = algo.deploy_logits(bundle, fl, state, out)
+        return accuracy(logits, bundle.labels(eval_batch))
+
+    epoch_eval = jax.jit(_epoch_eval)
 
     state = {k: v for k, v in global_state.items()}
     accs = []
@@ -37,16 +50,8 @@ def newclient_convergence(bundle: ModelBundle, fl: FLConfig, global_state,
     for _ in range(epochs):
         idx = rng.permutation(n)[: steps * batch].reshape(steps, batch)
         batches = {k: jnp.asarray(v[idx]) for k, v in client_data.items()}
-        trainable, _ = trainer(state["model"], state.get("fusion"), batches,
-                               jnp.float32(lr))
-        state = {"model": trainable["model"]}
-        if fl.algorithm == "fedfusion":
-            state["fusion"] = trainable["fusion"]
-        out = bundle.apply(state["model"], eval_batch)
-        logits = out["logits"]
-        if fl.algorithm == "fedfusion":
-            fused = fusion_apply(fl.fusion_op, state["fusion"],
-                                 out["features"], out["features"])
-            logits = bundle.head(state["model"], fused)
-        accs.append(float(accuracy(logits, bundle.labels(eval_batch))))
+        trainable, _ = trainer(state["model"], algo.extra_from_state(state),
+                               batches, jnp.float32(lr))
+        state = {k: trainable[k] for k in ("model",) + algo.extra_state}
+        accs.append(float(epoch_eval(state, eval_batch)))
     return accs

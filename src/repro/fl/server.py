@@ -1,17 +1,19 @@
 """Federated server loop (paper Alg. 1 / Alg. 2) for CPU-scale experiments.
 
-``run_federated`` is backed by the device-resident engine
-(``repro.engine``): a jitted K-round superstep scans the per-round step on
-device with donated buffers and on-device error-feedback scatter, a
-prefetch thread stages the next chunk's batches, and metrics come back as
-futures.  The pre-engine one-round-at-a-time loop is preserved verbatim as
-``run_federated_reference`` — it is the equivalence oracle for the engine
-tests and the baseline ``benchmarks/bench_engine.py`` measures speedups
-against.  The pod-scale counterpart (pjit on the production mesh) lives in
-``repro.launch.train``.
+``run_federated`` is the back-compat flat-kwarg wrapper over
+:class:`repro.fl.api.FederatedTrainer`, which drives the device-resident
+engine (``repro.engine``): a jitted K-round superstep scans the per-round
+step on device with donated buffers and on-device error-feedback scatter,
+a prefetch thread stages the next chunk's batches, and metrics come back
+as futures.  The pre-engine one-round-at-a-time loop is preserved verbatim
+as ``run_federated_reference`` — it is the equivalence oracle for the
+engine tests and the baseline ``benchmarks/bench_engine.py`` measures
+speedups against.  The pod-scale counterpart (pjit on the production mesh)
+lives in ``repro.launch.train``.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Dict, Optional
 
 import jax
@@ -21,11 +23,11 @@ import numpy as np
 from repro.compress import make_codec
 from repro.configs.base import FLConfig
 from repro.core import accuracy, cross_entropy, init_global_state, make_round_fn
-from repro.core.fusion import fusion_apply
 from repro.core.rounds import make_compressed_round_fn
 from repro.data.federated import FederatedDataset
-from repro.engine import (ServerResult, make_eval_fn, pad_eval_batch,
-                          run_federated_engine)
+from repro.engine import ServerResult, make_eval_fn, pad_eval_batch
+from repro.fl.api import (CheckpointOptions, EngineOptions, EvalOptions,
+                          FederatedTrainer, RunOptions, make_algorithm)
 from repro.fl.comm import CommLog
 from repro.models.registry import ModelBundle
 from repro.optim import exp_decay_per_round
@@ -73,11 +75,8 @@ def _evaluate_eager(bundle: ModelBundle, fl: FLConfig, global_state, batch,
     n = min(len(batch[key]), max_examples)
     batch = {k: jnp.asarray(v[:n]) for k, v in batch.items()}
     out = bundle.apply(global_state["model"], batch)
-    logits = out["logits"]
-    if fl.algorithm == "fedfusion":
-        fused = fusion_apply(fl.fusion_op, global_state["fusion"],
-                             out["features"], out["features"])
-        logits = bundle.head(global_state["model"], fused)
+    logits = make_algorithm(fl.algorithm).deploy_logits(
+        bundle, fl, global_state, out)
     labels = bundle.labels(batch)
     return {"acc": float(accuracy(logits, labels)),
             "loss": float(cross_entropy(logits, labels))}
@@ -93,28 +92,27 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   superstep_rounds=8,
                   prefetch: bool = True, mesh=None,
                   overlap_eval: bool = True) -> ServerResult:
-    """Server loop, engine-backed (see ``repro.engine``).
+    """Back-compat wrapper over :class:`repro.fl.api.FederatedTrainer`.
 
-    With ``checkpoint_dir``, the server state is saved every
-    ``checkpoint_every`` rounds and training RESUMES from the last
-    checkpoint if one exists (round-resumable, paper Alg. 1 line 1 is only
-    executed on a cold start).  ``superstep_rounds`` caps how many rounds
-    one jitted chunk scans on device (``"auto"`` calibrates it from
-    measured dispatch overhead); ``prefetch`` stages the next chunk's
-    batches on a background thread.  ``mesh`` runs the superstep
-    client-parallel under ``shard_map`` when its pod/data axes multiply
-    past 1 (results allclose to single-device; see
-    ``repro.engine.sharded``); ``overlap_eval`` dispatches boundary
-    evaluation on a state snapshot so the next chunk starts immediately.
-    On a single device the results are identical to
+    The flat kwargs map 1:1 onto the grouped ``RunOptions`` fields (see
+    the README's migration table); new code should build the options and
+    use the facade directly.  Behaviour is identical — the facade drives
+    the same engine (``repro.engine``): checkpoint-resume, superstep
+    chunking (``"auto"`` calibration), prefetch staging, client-parallel
+    ``shard_map`` under ``mesh``, snapshot-overlapped boundary eval.  On
+    a single device the results are identical to
     :func:`run_federated_reference` on the same seed/config.
     """
-    return run_federated_engine(
-        bundle, fl, data, rounds=rounds, seed=seed, mode=mode,
-        eval_every=eval_every, eval_examples=eval_examples, verbose=verbose,
-        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
-        callback=callback, superstep_rounds=superstep_rounds,
-        prefetch=prefetch, mesh=mesh, overlap_eval=overlap_eval)
+    opts = RunOptions(
+        mode=mode, seed=seed, verbose=verbose,
+        eval=EvalOptions(every=eval_every, examples=eval_examples),
+        checkpoint=CheckpointOptions(dir=checkpoint_dir,
+                                     every=checkpoint_every),
+        engine=EngineOptions(superstep_rounds=superstep_rounds,
+                             prefetch=prefetch, mesh=mesh,
+                             overlap_eval=overlap_eval))
+    return FederatedTrainer(bundle, fl, data, opts).fit(rounds,
+                                                        callback=callback)
 
 
 def run_federated_reference(bundle: ModelBundle, fl: FLConfig,
@@ -136,7 +134,6 @@ def run_federated_reference(bundle: ModelBundle, fl: FLConfig,
     to the jitted :func:`evaluate` so reference and engine histories match
     exactly.
     """
-    import os
     from repro.checkpoint.io import (load_tree, restore_server_state,
                                      save_server_state, save_tree)
 
@@ -150,6 +147,9 @@ def run_federated_reference(bundle: ModelBundle, fl: FLConfig,
         global_state, start_round = restore_server_state(checkpoint_dir,
                                                          global_state)
         global_state = jax.tree.map(jnp.asarray, global_state)
+        # same stream replay as the engine: resumed == uninterrupted
+        data.skip_round_sampling(start_round, fl.clients_per_round,
+                                 fl.local_steps, fl.local_batch)
     lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)
     comm = CommLog()
     test = data.test_batch()

@@ -21,7 +21,7 @@ import traceback     # noqa: E402
 import jax           # noqa: E402
 
 from repro.configs import ARCH_CONFIGS, INPUT_SHAPES  # noqa: E402
-from repro.configs.base import FLConfig               # noqa: E402
+from repro.configs.base import ALGORITHM_NAMES, FLConfig  # noqa: E402
 from repro.launch.mesh import mesh_context, make_production_mesh    # noqa: E402
 from repro.launch.specs import skip_reason            # noqa: E402
 from repro.launch.steps import build_step             # noqa: E402
@@ -68,9 +68,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+        from repro.fl.api import make_algorithm  # noqa: E402 (env-var file)
         chips = mesh.size
         roof = analyze(compiled, cfg, shape, mesh_name, chips, mesh,
-                       two_stream=fl.algorithm != "fedavg")
+                       two_stream=make_algorithm(fl.algorithm).two_stream)
         mem = compiled.memory_analysis()
         rec.update(
             status="ok",
@@ -210,7 +211,7 @@ def main() -> None:
     ap.add_argument("--single-pod-only", action="store_true")
     ap.add_argument("--multi-pod-only", action="store_true")
     ap.add_argument("--algorithm", default="fedfusion",
-                    choices=("fedavg", "fedmmd", "fedfusion", "fedl2"))
+                    choices=sorted(ALGORITHM_NAMES))
     ap.add_argument("--fusion-op", default="conv",
                     choices=("conv", "multi", "single"))
     ap.add_argument("--save-hlo", action="store_true",

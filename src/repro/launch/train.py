@@ -21,6 +21,7 @@ import numpy as np
 from repro.configs import ARCH_CONFIGS, INPUT_SHAPES
 from repro.configs.base import FLConfig, InputShape
 from repro.core.rounds import init_global_state
+from repro.fl.api import ALGORITHM_NAMES
 from repro.data.partition import source_partition
 from repro.data.synth import token_stream
 from repro.launch import sharding as sh
@@ -46,14 +47,16 @@ def run_engine(args, cfg, fl) -> None:
     """Drive the same workload through the client-parallel engine.
 
     Instead of the hand-rolled pjit round loop below, build a federated
-    token dataset and hand it to ``repro.engine`` on a mesh whose whole
-    device count backs the CLIENT axis (``launch.mesh.make_engine_mesh``):
-    the K-round superstep runs under ``shard_map``, clients split over
-    ``data``, chunk staging/eval overlap/adaptive chunk sizing included.
-    On one device this degenerates to the single-device engine.
+    token dataset and hand it to a :class:`repro.fl.api.FederatedTrainer`
+    on a mesh whose whole device count backs the CLIENT axis
+    (``launch.mesh.make_engine_mesh``): the K-round superstep runs under
+    ``shard_map``, clients split over ``data``, chunk staging/eval
+    overlap/adaptive chunk sizing included.  On one device this
+    degenerates to the single-device engine.
     """
     from repro.data.federated import FederatedDataset
-    from repro.engine import run_federated_engine
+    from repro.fl.api import (EngineOptions, EvalOptions, FederatedTrainer,
+                              RunOptions)
     from repro.launch.mesh import client_axes, make_engine_mesh
 
     mesh = make_engine_mesh()
@@ -76,12 +79,13 @@ def run_engine(args, cfg, fl) -> None:
                             {"tokens": test_toks}, seed=0)
     print(f"engine mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
           f"clients/round={fl.clients_per_round} federation={n_clients}")
+    trainer = FederatedTrainer(bundle, fl, data, RunOptions(
+        seed=0, verbose=True,
+        eval=EvalOptions(every=max(args.rounds // 2, 1), examples=64),
+        engine=EngineOptions(superstep_rounds="auto",
+                             mesh=mesh if shards > 1 else None)))
     t0 = time.perf_counter()
-    res = run_federated_engine(
-        bundle, fl, data, rounds=args.rounds, seed=0,
-        eval_every=max(args.rounds // 2, 1), eval_examples=64,
-        verbose=True, superstep_rounds="auto",
-        mesh=mesh if shards > 1 else None)
+    res = trainer.fit(args.rounds)
     dt = time.perf_counter() - t0
     print(f"done: {args.rounds} rounds in {dt:.1f}s "
           f"({args.rounds / dt:.2f} r/s)  stats={res.stats}")
@@ -92,7 +96,7 @@ def main() -> None:
     ap.add_argument("--arch", default="smollm-135m",
                     choices=sorted(ARCH_CONFIGS))
     ap.add_argument("--algorithm", default="fedavg",
-                    choices=("fedavg", "fedmmd", "fedfusion", "fedl2"))
+                    choices=sorted(ALGORITHM_NAMES))
     ap.add_argument("--fusion-op", default="conv")
     ap.add_argument("--rounds", type=int, default=10)
     ap.add_argument("--scale", default="tiny", choices=("tiny", "full"))

@@ -1,0 +1,424 @@
+"""repro.fl.api: the Algorithm registry + FederatedTrainer facade.
+
+Pins the api_redesign contract:
+
+* the configs-layer ``ALGORITHM_NAMES`` literal and the live registry
+  cannot drift (mirror of the ``CODEC_NAMES`` sync test);
+* the equivalence grid is parametrized over the REGISTRY — every
+  registered algorithm (the out-of-core FedProx plugin included)
+  reproduces the reference loop through the engine, with codecs on;
+* the facade is behaviour-preserving: ``FederatedTrainer.fit`` resumed
+  from a checkpoint equals one uninterrupted fit, and the back-compat
+  ``run_federated(**old_kwargs)`` wrapper stays bitwise-equal to the
+  facade on the same seed;
+* the new-client probe's jitted ``deploy_logits`` eval equals the old
+  uncompiled per-epoch evaluation;
+* no ``fl.algorithm ==`` string branch survives outside the plugin
+  modules (the grep gate that keeps the registry honest).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNN_CONFIGS
+from repro.configs.base import ALGORITHM_NAMES as CONFIG_ALGORITHM_NAMES
+from repro.configs.base import FLConfig
+from repro.data.federated import FederatedDataset
+from repro.data.partition import iid_partition
+from repro.data.synth import class_images
+from repro.fl.api import (ALGORITHM_NAMES, Algorithm, CheckpointOptions,
+                          EngineOptions, EvalOptions, FederatedTrainer,
+                          RunOptions, make_algorithm, register_algorithm)
+from repro.fl.server import run_federated, run_federated_reference
+from repro.models.registry import make_bundle
+
+_BUNDLE = None
+
+
+def _bundle():
+    global _BUNDLE
+    if _BUNDLE is None:
+        cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"],
+                                  input_shape=(8, 8, 1), conv_channels=(4,),
+                                  fc_units=(8,), dropout=0.0)
+        _BUNDLE = make_bundle(cfg)
+    return _BUNDLE
+
+
+def _data(seed=3, n_clients=4):
+    x, y = class_images(12, n_classes=4, shape=(8, 8, 1), seed=0)
+    return FederatedDataset(iid_partition(x, y, n_clients),
+                            {"x": x[:16], "y": y[:16]}, seed=seed)
+
+
+def _fl(algo, **kw):
+    return FLConfig(algorithm=algo, clients_per_round=2, local_steps=2,
+                    local_batch=4, lr=0.05, fusion_op="conv", **kw)
+
+
+def _assert_same(a, b):
+    for x, y in zip(jax.tree.leaves(a.global_state),
+                    jax.tree.leaves(b.global_state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert a.comm.history == b.comm.history
+    assert a.comm.bytes_up == b.comm.bytes_up
+    assert a.comm.bytes_down == b.comm.bytes_down
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_algorithm_names_in_sync():
+    """configs/base.py mirrors the registry literally (codec-style)."""
+    assert set(CONFIG_ALGORITHM_NAMES) == set(ALGORITHM_NAMES)
+    with pytest.raises(AssertionError):
+        FLConfig(algorithm="fedsgd")
+
+
+def test_registry_lookup_and_duplicate_guard():
+    assert make_algorithm("fedavg").name == "fedavg"
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        make_algorithm("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_algorithm(make_algorithm("fedavg"))
+
+
+def test_runtime_registered_plugin_validates_in_config():
+    """A plugin registered at runtime — the RingFed/CFedAvg extension
+    path — is accepted by FLConfig without editing the configs layer."""
+
+    class _Probe(Algorithm):
+        name = "x-probe"
+
+        def local_loss(self, bundle, fl, trainable, global_model, batch,
+                       cached_feats_g=None, *, impl="auto"):
+            from repro.fl.api.plugins import FedAvg
+            return FedAvg.local_loss(self, bundle, fl, trainable,
+                                     global_model, batch, cached_feats_g,
+                                     impl=impl)
+
+    register_algorithm(_Probe())
+    try:
+        assert FLConfig(algorithm="x-probe").algorithm == "x-probe"
+    finally:
+        from repro.fl.api import algorithm as _mod
+        _mod._REGISTRY.pop("x-probe")
+
+
+def test_builtin_plugin_shapes():
+    """The hooks describe the state the round fns thread."""
+    fusion = make_algorithm("fedfusion")
+    assert fusion.extra_state == ("fusion",) and fusion.two_stream
+    for name in ("fedavg", "fedl2", "fedprox"):
+        a = make_algorithm(name)
+        assert a.extra_state == () and not a.two_stream
+    assert make_algorithm("fedmmd").two_stream
+
+
+# ---------------------------------------------------------------------------
+# Registry-parametrized equivalence grid (engine == reference loop)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", sorted(ALGORITHM_NAMES))
+def test_registry_engine_reproduces_reference(algo):
+    """Every registered algorithm — fedprox included — goes through the
+    chunked engine bitwise-equal to the reference loop, with an uplink
+    codec enabled (EF threading exercised)."""
+    bundle = _bundle()
+    fl = _fl(algo, uplink_codec="topk", topk_frac=0.1)
+    ref = run_federated_reference(bundle, fl, _data(), rounds=4, seed=1,
+                                  eval_every=2)
+    eng = run_federated(bundle, fl, _data(), rounds=4, seed=1, eval_every=2,
+                        superstep_rounds=2)
+    _assert_same(ref, eng)
+
+
+# ---------------------------------------------------------------------------
+# FederatedTrainer facade
+# ---------------------------------------------------------------------------
+
+def test_run_federated_backcompat_equals_facade():
+    """The old 13-kwarg entry point is a thin wrapper: bitwise-equal to
+    driving the facade directly with the grouped options."""
+    bundle = _bundle()
+    fl = _fl("fedmmd", uplink_codec="int8")
+    old = run_federated(bundle, fl, _data(), rounds=4, seed=1, eval_every=2,
+                        eval_examples=16, superstep_rounds=2)
+    trainer = FederatedTrainer(bundle, fl, _data(), RunOptions(
+        seed=1, eval=EvalOptions(every=2, examples=16),
+        engine=EngineOptions(superstep_rounds=2)))
+    new = trainer.fit(4)
+    _assert_same(old, new)
+    assert trainer.result is new
+    # the facade's evaluate() reads the trained state it owns
+    metrics = trainer.evaluate()
+    assert set(metrics) == {"acc", "loss"}
+    np.testing.assert_allclose(metrics["acc"],
+                               new.comm.history[-1]["acc"], rtol=1e-6)
+
+
+def test_trainer_fit_resume_equals_uninterrupted(tmp_path):
+    """fit(4) interrupted + fit(8) resumed == one uninterrupted fit(8)."""
+    bundle = _bundle()
+    fl = _fl("fedfusion", uplink_codec="topk", topk_frac=0.1)
+
+    def opts(d):
+        return RunOptions(seed=1, eval=EvalOptions(every=4),
+                          checkpoint=CheckpointOptions(dir=str(d), every=2),
+                          engine=EngineOptions(superstep_rounds=3))
+
+    FederatedTrainer(bundle, fl, _data(), opts(tmp_path / "a")).fit(4)
+    resumed = FederatedTrainer(bundle, fl, _data(),
+                               opts(tmp_path / "a")).fit(8)
+    full = FederatedTrainer(bundle, fl, _data(), opts(tmp_path / "b")).fit(8)
+    for x, y in zip(jax.tree.leaves(resumed.global_state),
+                    jax.tree.leaves(full.global_state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert resumed.comm.rounds == 4      # only rounds 5..8 ran
+
+
+def test_trainer_refit_same_instance_resumes(tmp_path):
+    """The in-process interrupt shape: ONE trainer (one dataset instance,
+    rng already advanced — possibly past the checkpoint via prefetch) is
+    re-invoked.  skip_round_sampling re-seeds, so this too equals the
+    uninterrupted run."""
+    bundle = _bundle()
+    fl = _fl("fedavg", uplink_codec="topk", topk_frac=0.1)
+    opts = RunOptions(seed=1, eval=EvalOptions(every=4),
+                      checkpoint=CheckpointOptions(dir=str(tmp_path / "a"),
+                                                   every=2),
+                      engine=EngineOptions(superstep_rounds=3))
+    trainer = FederatedTrainer(bundle, fl, _data(), opts)
+    trainer.fit(4)          # "interrupted" at round 4 (checkpointed)
+    resumed = trainer.fit(8)   # SAME instance: dataset rng is mid-stream
+    full = FederatedTrainer(
+        bundle, fl, _data(),
+        dataclasses.replace(opts, checkpoint=CheckpointOptions(
+            dir=str(tmp_path / "b"), every=2))).fit(8)
+    for x, y in zip(jax.tree.leaves(resumed.global_state),
+                    jax.tree.leaves(full.global_state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_trainer_requires_fit_before_state():
+    trainer = FederatedTrainer(_bundle(), _fl("fedavg"), _data())
+    with pytest.raises(RuntimeError, match="fit"):
+        _ = trainer.global_state
+
+
+def test_trainer_newclient_probe_runs():
+    bundle = _bundle()
+    fl = _fl("fedfusion")
+    trainer = FederatedTrainer(bundle, fl, _data(), RunOptions(
+        seed=1, eval=EvalOptions(every=4),
+        engine=EngineOptions(superstep_rounds=2)))
+    trainer.fit(2)
+    x, y = class_images(6, n_classes=4, shape=(8, 8, 1), seed=9)
+    accs = trainer.newclient_probe({"x": x, "y": y}, epochs=2)
+    assert len(accs) == 2 and all(np.isfinite(a) for a in accs)
+
+
+# ---------------------------------------------------------------------------
+# FedProx: the out-of-core plugin, end to end
+# ---------------------------------------------------------------------------
+
+def test_fedprox_prox_term_penalizes_drift():
+    from repro.core.local import make_local_loss
+    bundle = _bundle()
+    fl = _fl("fedprox", prox_mu=1.0)
+    params = bundle.init(jax.random.PRNGKey(0))
+    drifted = jax.tree.map(lambda x: x + 0.1, params)
+    batch = {"x": jax.random.normal(jax.random.PRNGKey(1), (4, 8, 8, 1)),
+             "y": jax.random.randint(jax.random.PRNGKey(2), (4,), 0, 10)}
+    loss_fn = make_local_loss(bundle, fl)
+    _, aux0 = loss_fn({"model": params}, params, batch)
+    _, aux1 = loss_fn({"model": drifted}, params, batch)
+    assert float(aux0["prox"]) < 1e-6
+    assert float(aux1["prox"]) > 1e-3
+
+
+def test_fedprox_trains_end_to_end_with_codecs():
+    """Acceptance: the plugin built purely from hooks trains through the
+    engine with uplink+downlink codecs enabled and moves the model."""
+    bundle = _bundle()
+    fl = _fl("fedprox", uplink_codec="topk", downlink_codec="int8",
+             topk_frac=0.2)
+    trainer = FederatedTrainer(bundle, fl, _data(), RunOptions(
+        seed=1, eval=EvalOptions(every=2, examples=16),
+        engine=EngineOptions(superstep_rounds=2)))
+    res = trainer.fit(4)
+    from repro.core.rounds import init_global_state
+    init = init_global_state(bundle, fl, jax.random.PRNGKey(1))
+    moved = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree.leaves(res.global_state["model"]),
+        jax.tree.leaves(init["model"])))
+    assert moved > 1e-3
+    assert all(np.isfinite(h["local_loss"]) for h in res.comm.history)
+    assert res.comm.bytes_up < res.comm.bytes_down  # topk uplink compressed
+
+
+_FEDPROX_MESH_SCRIPT = textwrap.dedent("""
+    import sys
+    import jax
+    assert jax.device_count() == 2, jax.devices()
+    import numpy as np
+    from test_api import _bundle, _data, _fl
+    from repro.fl.api import EngineOptions, EvalOptions, FederatedTrainer, \\
+        RunOptions
+    from repro.launch.mesh import make_engine_mesh
+
+    fl = _fl("fedprox", uplink_codec="topk", topk_frac=0.1)
+    def run(mesh):
+        opts = RunOptions(seed=1, eval=EvalOptions(every=2, examples=16),
+                          engine=EngineOptions(superstep_rounds=2,
+                                               mesh=mesh))
+        return FederatedTrainer(_bundle(), fl, _data(), opts).fit(4)
+    single = run(None)
+    sharded = run(make_engine_mesh())
+    for a, b in zip(jax.tree.leaves(single.global_state),
+                    jax.tree.leaves(sharded.global_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+    assert single.comm.bytes_up == sharded.comm.bytes_up
+    print("FEDPROX-MESH-OK")
+""")
+
+
+def test_fedprox_forced_2device_mesh_matches_single():
+    """Acceptance: fedprox through the client-parallel shard_map engine
+    (forced 2-device CPU host) is allclose to single-device."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src")
+    env = dict(os.environ)
+    kept = [t for t in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in t]
+    env["XLA_FLAGS"] = " ".join(
+        kept + ["--xla_force_host_platform_device_count=2"])
+    env["REPRO_ALLOW_FORCED_DEVICES"] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", _FEDPROX_MESH_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "FEDPROX-MESH-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Registry-parametrized sharded smoke (CI's forced-4-device job)
+# ---------------------------------------------------------------------------
+
+_multidevice = pytest.mark.skipif(
+    jax.device_count() < 2,
+    reason="needs a forced multi-device host "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=N + "
+           "REPRO_ALLOW_FORCED_DEVICES=1)")
+
+
+@_multidevice
+@pytest.mark.parametrize("algo", sorted(ALGORITHM_NAMES))
+def test_registry_sharded_smoke(algo):
+    """Every registered algorithm runs client-parallel under shard_map,
+    allclose to the single-device engine (byte accounting identical)."""
+    from repro.launch.mesh import make_engine_mesh
+    from test_engine import assert_results_close
+    bundle = _bundle()
+    fl = FLConfig(algorithm=algo, clients_per_round=4, local_steps=2,
+                  local_batch=4, lr=0.05, fusion_op="conv",
+                  uplink_codec="topk", topk_frac=0.1)
+    single = run_federated(bundle, fl, _data(n_clients=8), rounds=4, seed=1,
+                           eval_every=2, superstep_rounds=2)
+    sharded = run_federated(bundle, fl, _data(n_clients=8), rounds=4, seed=1,
+                            eval_every=2, superstep_rounds=2,
+                            mesh=make_engine_mesh())
+    assert_results_close(single, sharded)
+
+
+# ---------------------------------------------------------------------------
+# New-client probe: jitted deploy_logits eval == the old eager evaluation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedfusion"])
+def test_newclient_jitted_eval_matches_eager(algo):
+    """The per-epoch eval now runs jitted through Algorithm.deploy_logits;
+    the accuracy trajectory must equal the pre-jit op-by-op evaluation
+    (argmax-based accuracy is robust to fusion-order float drift), so
+    benchmarks/fig6_newclient.py output is unchanged."""
+    from repro.core import accuracy, make_local_trainer
+    from repro.core.fusion import fusion_apply
+    from repro.core.rounds import init_global_state
+    from repro.fl.newclient import newclient_convergence
+
+    bundle = _bundle()
+    fl = _fl(algo)
+    state = init_global_state(bundle, fl, jax.random.PRNGKey(0))
+    x, y = class_images(8, n_classes=4, shape=(8, 8, 1), seed=5)
+    client = {"x": x, "y": y}
+    got = newclient_convergence(bundle, fl, state, client, epochs=3,
+                                batch=4, lr=0.05, seed=7)
+
+    # eager replica of the pre-redesign loop (uncompiled eval, string branch)
+    rng = np.random.default_rng(7)
+    trainer = jax.jit(make_local_trainer(bundle, fl))
+    n = len(x)
+    steps = n // 4
+    st = dict(state)
+    want = []
+    eval_batch = {k: jnp.asarray(v) for k, v in client.items()}
+    for _ in range(3):
+        idx = rng.permutation(n)[: steps * 4].reshape(steps, 4)
+        batches = {k: jnp.asarray(v[idx]) for k, v in client.items()}
+        trainable, _ = trainer(st["model"], st.get("fusion"), batches,
+                               jnp.float32(0.05))
+        st = {"model": trainable["model"]}
+        if algo == "fedfusion":
+            st["fusion"] = trainable["fusion"]
+        out = bundle.apply(st["model"], eval_batch)
+        logits = out["logits"]
+        if algo == "fedfusion":
+            fused = fusion_apply(fl.fusion_op, st["fusion"],
+                                 out["features"], out["features"])
+            logits = bundle.head(st["model"], fused)
+        want.append(float(accuracy(logits, bundle.labels(eval_batch))))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Grep gate: the registry stays the only algorithm dispatch
+# ---------------------------------------------------------------------------
+
+def test_no_algorithm_string_branches_outside_plugin_modules():
+    """Zero ``fl.algorithm ==`` (or tuple-membership) branches outside the
+    registered plugin modules (repro/fl/api, repro/contrib) — new
+    mechanisms must come in through the registry, not through core
+    branches."""
+    src_root = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "..", "src", "repro")
+    plugin_prefixes = (os.path.join("fl", "api") + os.sep,
+                       "contrib" + os.sep)
+    offenders = []
+    for dirpath, _, files in os.walk(src_root):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            rel = os.path.relpath(path, src_root)
+            if rel.startswith(plugin_prefixes):
+                continue
+            with open(path) as f:
+                for lineno, line in enumerate(f, 1):
+                    code = line.split("#", 1)[0]
+                    if ("algorithm ==" in code or "algorithm != " in code
+                            or "algorithm in (" in code):
+                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
