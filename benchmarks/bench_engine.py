@@ -40,6 +40,10 @@ N-device host mesh — the flag is translated to
 why the env fixup below precedes every jax import) on a client-bound
 config; ``--mesh-sweep data=1,2,4`` spawns one subprocess per point and
 aggregates rounds/sec scaling into the report's ``mesh_scaling`` section.
+Each multi-device point additionally records the fused-vs-unfused
+collective ratio (the one-psum round vs the three-collective oracle) and
+the sharded-eval eval-every-round ratio; the ``--check`` gate arms on
+those once the committed baseline records them.
 """
 from __future__ import annotations
 
@@ -177,7 +181,22 @@ def _mesh_data(cfg, seed=0):
 
 def run_mesh_point(n_devices: int, r1: int = 10, r2: int = 40) -> dict:
     """Rounds/sec of the (sharded) engine on an ``n_devices``-wide client
-    mesh — run in a process whose host was forced to that device count."""
+    mesh — run in a process whose host was forced to that device count.
+
+    On a real mesh (n > 1) the point also measures the two per-round
+    collective knobs this engine exposes:
+
+    * ``collective_fused_ratio`` — the fused one-psum round vs the
+      three-collective oracle (``fused_collective=False``), compressed
+      workload (topk uplink: the EF exchange is what gets fused away);
+    * ``sharded_eval_ratio`` — eval-every-round (the paper's workload)
+      with the eval batch split over the shards vs replicated eval.
+
+    Both are bitwise/allclose-pinned equivalences (tests/test_engine.py),
+    so the ratios are pure latency measurements.  On a shared-memory CPU
+    host collective latency is tiny — the ratios mostly certify "no
+    regression" there; the spread shows up on real interconnects.
+    """
     from repro.launch.mesh import make_engine_mesh
     assert jax.device_count() >= n_devices, \
         (f"need {n_devices} devices, have {jax.device_count()} — launch "
@@ -192,10 +211,40 @@ def run_mesh_point(n_devices: int, r1: int = 10, r2: int = 40) -> dict:
                              mode="client_sequential", mesh=mesh)
 
     rps, res = _rps(run, r1, r2)
-    return {"devices": n_devices, "rps": round(rps, 2),
-            "host_wait_s": res.stats["host_wait_s"],
-            "clients_per_round": fl.clients_per_round,
-            "mode": "client_sequential"}
+    point = {"devices": n_devices, "rps": round(rps, 2),
+             "host_wait_s": res.stats["host_wait_s"],
+             "clients_per_round": fl.clients_per_round,
+             "mode": "client_sequential"}
+    if mesh is None:
+        return point
+
+    fl_comp = dataclasses.replace(fl, uplink_codec="topk", topk_frac=0.05)
+
+    def run_collective(rounds, fused):
+        return run_federated(bundle, fl_comp, _mesh_data(cfg),
+                             rounds=rounds, seed=0, eval_every=0,
+                             superstep_rounds=10, mode="client_sequential",
+                             mesh=mesh, fused_collective=fused)
+
+    fused_rps, _ = _rps(lambda r: run_collective(r, True), r1, r2)
+    unfused_rps, _ = _rps(lambda r: run_collective(r, False), r1, r2)
+    point["rps_fused"] = round(fused_rps, 2)
+    point["rps_unfused"] = round(unfused_rps, 2)
+    point["collective_fused_ratio"] = round(
+        fused_rps / max(unfused_rps, 1e-9), 3)
+
+    def run_eval(rounds, sharded):
+        return run_federated(bundle, fl, _mesh_data(cfg), rounds=rounds,
+                             seed=0, eval_every=1, eval_examples=64,
+                             superstep_rounds=10, mode="client_sequential",
+                             mesh=mesh, sharded_eval=sharded)
+
+    ev_shd, _ = _rps(lambda r: run_eval(r, True), r1, r2)
+    ev_repl, _ = _rps(lambda r: run_eval(r, False), r1, r2)
+    point["rps_eval_sharded"] = round(ev_shd, 2)
+    point["rps_eval_replicated"] = round(ev_repl, 2)
+    point["sharded_eval_ratio"] = round(ev_shd / max(ev_repl, 1e-9), 3)
+    return point
 
 
 def run_mesh_sweep(devices, out_dir: str) -> dict:
@@ -216,14 +265,28 @@ def run_mesh_sweep(devices, out_dir: str) -> dict:
         with open(path) as f:
             points.append(json.load(f)["mesh_point"])
         os.remove(path)
-        print(f"mesh data={n}: {points[-1]['rps']:7.2f} r/s")
+        p = points[-1]
+        extra = ""
+        if "collective_fused_ratio" in p:
+            extra = (f"  fused/unfused={p['collective_fused_ratio']}x"
+                     f"  sharded-eval={p['sharded_eval_ratio']}x")
+        print(f"mesh data={n}: {p['rps']:7.2f} r/s{extra}")
     one = [p for p in points if p["devices"] == 1]
     assert one, "mesh sweep needs a devices=1 point (speedup_vs_1 base)"
     base = one[0]["rps"]
     for p in points:
         p["speedup_vs_1"] = round(p["rps"] / base, 2)
-    return {"points": points,
-            "max_speedup": max(p["speedup_vs_1"] for p in points)}
+    out = {"points": points,
+           "max_speedup": max(p["speedup_vs_1"] for p in points)}
+    fused = [p["collective_fused_ratio"] for p in points
+             if "collective_fused_ratio" in p]
+    if fused:
+        out["collective_fused_ratio_max"] = max(fused)
+    ev = [p["sharded_eval_ratio"] for p in points
+          if "sharded_eval_ratio" in p]
+    if ev:
+        out["sharded_eval_ratio_max"] = max(ev)
+    return out
 
 
 def run_eval_overlap(quick: bool, cfg, bundle) -> dict:
@@ -385,6 +448,14 @@ def main():
         if "mesh_scaling" in report and "mesh_scaling" in baseline:
             gate("mesh max speedup", report["mesh_scaling"]["max_speedup"],
                  0.8 * baseline["mesh_scaling"]["max_speedup"])
+            # collective-layout gates: self-arm once the committed
+            # baseline records the ratios (same-host-class rule applies)
+            for key in ("collective_fused_ratio_max",
+                        "sharded_eval_ratio_max"):
+                if key in report["mesh_scaling"] \
+                        and key in baseline["mesh_scaling"]:
+                    gate(key, report["mesh_scaling"][key],
+                         0.8 * baseline["mesh_scaling"][key])
 
 
 if __name__ == "__main__":

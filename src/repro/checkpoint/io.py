@@ -51,6 +51,45 @@ def load_tree(path: str, like) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def strip_scratch_rows(tree, n_shards: int):
+    """Resident sharded EF layout -> the compact on-disk layout.
+
+    The sharded engine's EF table carries one permanent scratch row per
+    shard block (``[(N_loc + 1) * S, ...]`` — the write sink of the
+    in-place scatter, see ``repro.engine.superstep``).  Checkpoints stay
+    format-compatible with the unsharded ``[N, ...]`` layout: this drops
+    row ``N_loc`` of every block before ``ef.npz`` is written.  Works on
+    device or host arrays; returns numpy (a checkpoint is host-bound
+    anyway).
+    """
+    def one(x):
+        x = np.asarray(jax.device_get(x))
+        blocks = x.reshape((n_shards, -1) + x.shape[1:])
+        return blocks[:, :-1].reshape((-1,) + x.shape[1:])
+
+    return jax.tree.map(one, tree)
+
+
+def insert_scratch_rows(tree, n_shards: int):
+    """Compact ``[N, ...]`` EF layout -> resident ``[(N/S + 1) * S, ...]``.
+
+    Re-appends a zero scratch row to every shard block on restore — the
+    scratch row is dead state (always overwritten before any read), so
+    zeros reproduce a never-checkpointed run exactly.  ``N`` must divide
+    over ``n_shards`` (the engine validates this before staging).
+    """
+    def one(x):
+        x = np.asarray(x)
+        n = x.shape[0]
+        assert n % n_shards == 0, (n, n_shards)
+        blocks = x.reshape((n_shards, n // n_shards) + x.shape[1:])
+        pad = np.zeros((n_shards, 1) + x.shape[1:], x.dtype)
+        return np.concatenate([blocks, pad], axis=1).reshape(
+            (-1,) + x.shape[1:])
+
+    return jax.tree.map(one, tree)
+
+
 def save_server_state(dirpath: str, global_state, round_idx: int,
                       extra: Dict | None = None) -> None:
     os.makedirs(dirpath, exist_ok=True)

@@ -15,6 +15,8 @@ from repro.core.fusion import (FUSION_OPS, fusion_aggregate, fusion_apply,
                                fusion_init)  # noqa: F401
 from repro.core.local import make_local_loss, make_local_trainer  # noqa: F401
 from repro.core.losses import (accuracy, cross_entropy,  # noqa: F401
-                               masked_accuracy, masked_cross_entropy)
+                               masked_accuracy, masked_accuracy_sum,
+                               masked_cross_entropy,
+                               masked_cross_entropy_sum)
 from repro.core.mmd import mmd_loss  # noqa: F401
 from repro.core.rounds import init_global_state, make_round_fn  # noqa: F401

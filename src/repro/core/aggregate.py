@@ -59,6 +59,44 @@ def psum_tree(tree, shard: ClientSharding):
     return jax.lax.psum(tree, shard.axis_name)
 
 
+def fused_psum(tree, shard: ClientSharding):
+    """Sum every leaf over the client axes in ONE collective.
+
+    Ravels and concatenates all leaves into a single flat buffer, runs one
+    ``psum`` over it, and unpacks via static slices — pack offsets are pure
+    trace-time Python (leaf shapes are static), so the whole exchange
+    lowers to a single all-reduce regardless of how many quantities ride
+    it.  ``psum`` reduces elementwise in a participant order fixed by the
+    mesh, so every unpacked leaf is bitwise what a standalone ``psum`` of
+    that leaf would have produced — packing is a latency optimization,
+    never a numerics change.  Identity when unsharded.
+
+    All leaves must share one dtype (the engine's fused round buckets are
+    float32 end to end); mixed-dtype trees raise instead of silently
+    promoting through the concatenation.
+    """
+    if shard is None:
+        return tree
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if not leaves:
+        return tree
+    mixed = {str(l.dtype) for l in leaves}
+    if len(mixed) > 1:
+        raise TypeError(
+            f"fused_psum needs a single-dtype tree, got {sorted(mixed)}; "
+            f"run the unfused collectives (fused_collective=False) for "
+            f"mixed-precision buckets")
+    flat = (jnp.concatenate([jnp.ravel(l) for l in leaves])
+            if len(leaves) > 1 else jnp.ravel(leaves[0]))
+    summed = jax.lax.psum(flat, shard.axis_name)
+    out, off = [], 0
+    for l in leaves:
+        out.append(jax.lax.slice_in_dim(summed, off, off + l.size)
+                   .reshape(l.shape))
+        off += l.size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def normalize_weights(n_examples, shard: ClientSharding = None):
     n = jnp.asarray(n_examples, jnp.float32)
     total = jnp.sum(n)

@@ -33,24 +33,42 @@ def _broadcast_mask(mask, labels):
         labels.shape)
 
 
-def masked_cross_entropy(logits, labels, mask):
-    """Mean CE over the valid examples only (mask [B] bool/float).
+def masked_cross_entropy_sum(logits, labels, mask):
+    """Masked CE *sum* and weight sum: ``(Σ ce·w, Σ w)``.
 
-    The padded tail of a fixed-shape eval batch contributes zero weight, so
-    one compiled evaluator serves any test-set size (repro.fl.server)."""
+    The un-normalized form is what cross-shard evaluation psums — each
+    shard reduces its slice of the padded batch, one collective adds the
+    numerators and the true example count, and the quotient equals the
+    full-batch masked mean (pad rows carry zero weight on every shard)."""
     logits = logits.astype(jnp.float32)
     logz = jax.nn.logsumexp(logits, axis=-1)
     onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
     gold = jnp.sum(logits * onehot, axis=-1)
     w = _broadcast_mask(mask, labels)
-    return jnp.sum((logz - gold) * w) / jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum((logz - gold) * w), jnp.sum(w)
+
+
+def masked_accuracy_sum(logits, labels, mask):
+    """Masked correct-prediction *sum* and weight sum: ``(Σ 1[correct]·w,
+    Σ w)`` — the psum-able form of :func:`masked_accuracy`."""
+    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    w = _broadcast_mask(mask, labels)
+    return jnp.sum(correct * w), jnp.sum(w)
+
+
+def masked_cross_entropy(logits, labels, mask):
+    """Mean CE over the valid examples only (mask [B] bool/float).
+
+    The padded tail of a fixed-shape eval batch contributes zero weight, so
+    one compiled evaluator serves any test-set size (repro.fl.server)."""
+    ce_sum, w_sum = masked_cross_entropy_sum(logits, labels, mask)
+    return ce_sum / jnp.maximum(w_sum, 1.0)
 
 
 def masked_accuracy(logits, labels, mask):
     """Accuracy over the valid examples only (mask [B] bool/float)."""
-    correct = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
-    w = _broadcast_mask(mask, labels)
-    return jnp.sum(correct * w) / jnp.maximum(jnp.sum(w), 1.0)
+    correct_sum, w_sum = masked_accuracy_sum(logits, labels, mask)
+    return correct_sum / jnp.maximum(w_sum, 1.0)
 
 
 def l2_tree_distance(tree_a, tree_b):

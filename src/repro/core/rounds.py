@@ -44,6 +44,20 @@ replicated outputs on every shard because the psum results agree
 everywhere.  With ``shard=None`` the code path is exactly the
 pre-sharding one — no collectives — which is what keeps the
 single-device engine bitwise-equal to the reference loop.
+
+Fused-collective contract (``repro.engine.superstep`` with
+``fused_collective=True``): the ``*_round_parts`` factories split a round
+into a *local* function — everything up to and including this shard's
+weighted contribution sums, no collectives — and a *finish* function that
+consumes the psum-completed sums.  The superstep packs the local sums
+into ONE flat buffer together with the EF exchange and the next round's
+weight total and runs a single ``psum``
+(:func:`repro.core.aggregate.fused_psum`).  The split keeps every
+arithmetic op of the unfused path (weights are normalized against a
+total psummed one round ahead — the sizes are pre-staged inputs, so the
+value is identical; extras close through ``finalize_extra_sums``, whose
+ops equal the in-tree plugins' ``aggregate_extras`` after the weighted
+sum), which is what makes fused and unfused rounds bitwise-equal.
 """
 from __future__ import annotations
 
@@ -55,8 +69,7 @@ import jax.numpy as jnp
 from repro.configs.base import FLConfig
 from repro.core.aggregate import (ClientSharding, mean_over_clients,
                                   normalize_weights, psum_tree,
-                                  running_update, weighted_mean,
-                                  zeros_like_tree)
+                                  running_update, zeros_like_tree)
 from repro.core.local import _algorithm, make_local_trainer
 from repro.models.registry import ModelBundle
 
@@ -76,48 +89,58 @@ def _local_client_keys(key, n_local: int, shard: Optional[ClientSharding]):
     return jax.lax.dynamic_slice_in_dim(full, start, n_local, axis=0)
 
 
-def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
-                  impl="auto", shard: Optional[ClientSharding] = None):
-    """Returns round_fn(global_state, client_batches, n_examples, lr).
+_RESERVED_CONTRIB_KEYS = frozenset(("model", "delta", "loss"))
 
-    ``client_batches``: pytree with leading dims [n_clients, local_steps, ...].
-    ``n_examples``: [n_clients] float (n_t weighting).
-    Under ``shard`` both carry only this shard's clients.
+
+def _check_extra_keys(extra_keys):
+    """The fused-collective contribution dicts key the model/delta sums
+    and the chunk loss alongside the plugin's extras — an extra named
+    after one of those would be silently clobbered, so fail at build
+    time instead."""
+    clash = _RESERVED_CONTRIB_KEYS.intersection(extra_keys)
+    if clash:
+        raise ValueError(
+            f"Algorithm.extra_state keys {sorted(clash)} collide with the "
+            f"round accumulators' reserved keys {sorted(_RESERVED_CONTRIB_KEYS)}"
+            f" — rename the extra state entries")
+
+
+def _weighted_sums(stacked, weights):
+    """tensordot(weights, leading-client-axis tree) — the in-shard half of
+    :func:`repro.core.aggregate.weighted_mean` (psum completes it)."""
+    return jax.tree.map(
+        lambda x: jnp.tensordot(weights.astype(x.dtype), x, axes=1), stacked)
+
+
+def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
+                        impl="auto"):
+    """Shared client-side computation of one uncompressed round.
+
+    Returns ``run_clients(global_state, client_batches, weights, lr) ->
+    (wsums, stacked_extras, losses)``: ``wsums`` holds this shard's
+    weighted sums ``{"model": tree, **extras}`` (psum-pending), and
+    ``stacked_extras`` the per-client extras (client_parallel only; the
+    sequential scan only materializes the running sums).
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
     extra_keys = algo.extra_state
 
-    def _finalize(global_state, stacked_models, stacked_extras, weights,
-                  losses):
-        new_model = weighted_mean(stacked_models, weights, shard)
-        new_state: Dict[str, Any] = {"model": new_model}
-        new_state.update(algo.aggregate_extras(fl, global_state,
-                                               stacked_extras, weights,
-                                               shard=shard))
-        return new_state, {"local_loss": mean_over_clients(losses, shard)}
+    def run_clients(global_state, client_batches, weights, lr):
+        gm = global_state["model"]
+        gx = algo.extra_from_state(global_state)
 
-    if mode == "client_parallel":
-        def round_fn(global_state, client_batches, n_examples, lr):
-            weights = normalize_weights(n_examples, shard)
-            gm = global_state["model"]
-            gx = algo.extra_from_state(global_state)
-
+        if mode == "client_parallel":
             def train_one(batches):
                 return trainer(gm, gx, batches, lr)
 
             trainables, losses = jax.vmap(train_one)(client_batches)
-            return _finalize(global_state, trainables["model"],
-                             {k: trainables[k] for k in extra_keys},
-                             weights, losses)
+            wsums = {"model": _weighted_sums(trainables["model"], weights)}
+            for k in extra_keys:
+                wsums[k] = _weighted_sums(trainables[k], weights)
+            return wsums, {k: trainables[k] for k in extra_keys}, losses
 
-        return round_fn
-
-    def round_fn(global_state, client_batches, n_examples, lr):
-        weights = normalize_weights(n_examples, shard)
-        gm = global_state["model"]
-        gx = algo.extra_from_state(global_state)
         acc0 = {"model": zeros_like_tree(gm)}
         for k in extra_keys:
             acc0[k] = zeros_like_tree(global_state[k])
@@ -131,15 +154,82 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
             return acc, loss
 
         acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
-        # the running sums covered this shard's clients; one psum per tree
-        # completes them over the round (no-op when unsharded)
-        acc = psum_tree(acc, shard)
-        new_state: Dict[str, Any] = {"model": acc["model"]}
-        new_state.update(algo.finalize_extra_sums(
-            fl, global_state, {k: acc[k] for k in extra_keys}))
+        return acc, None, losses
+
+    return run_clients
+
+
+def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
+                  impl="auto", shard: Optional[ClientSharding] = None):
+    """Returns round_fn(global_state, client_batches, n_examples, lr).
+
+    ``client_batches``: pytree with leading dims [n_clients, local_steps, ...].
+    ``n_examples``: [n_clients] float (n_t weighting).
+    Under ``shard`` both carry only this shard's clients.
+    """
+    algo = _algorithm(fl)
+    extra_keys = algo.extra_state
+    run_clients = _make_plain_clients(bundle, fl, mode, impl=impl)
+
+    def round_fn(global_state, client_batches, n_examples, lr):
+        weights = normalize_weights(n_examples, shard)
+        wsums, stacked_extras, losses = run_clients(
+            global_state, client_batches, weights, lr)
+        if mode == "client_parallel":
+            new_state: Dict[str, Any] = {
+                "model": psum_tree(wsums["model"], shard)}
+            new_state.update(algo.aggregate_extras(fl, global_state,
+                                                   stacked_extras, weights,
+                                                   shard=shard))
+        else:
+            # the running sums covered this shard's clients; one psum per
+            # tree completes them over the round (no-op when unsharded)
+            acc = psum_tree(wsums, shard)
+            new_state = {"model": acc["model"]}
+            new_state.update(algo.finalize_extra_sums(
+                fl, global_state, {k: acc[k] for k in extra_keys}))
         return new_state, {"local_loss": mean_over_clients(losses, shard)}
 
     return round_fn
+
+
+def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
+                     impl="auto", shard: ClientSharding):
+    """Deferred-psum split of :func:`make_round_fn` (fused collectives).
+
+    Returns ``(local_fn, finish_fn)``:
+
+    ``local_fn(global_state, client_batches, total, n_examples, lr) ->
+    contribs`` — this shard's psum-pending contributions ``{"model": tree,
+    **extras, "loss": scalar}``.  ``total`` is the round's psum-completed
+    example count (the superstep pipelines it one collective ahead, since
+    sizes are pre-staged inputs); dividing by it reproduces
+    ``normalize_weights`` bit for bit.
+
+    ``finish_fn(global_state, summed) -> (new_state, metrics)`` consumes
+    the psum-completed contributions.  Extras close through the plugin's
+    ``finalize_extra_sums`` — for weighted-sum-then-postprocess
+    aggregations (every in-tree plugin) that is op-for-op the tail of
+    ``aggregate_extras``, keeping fused == unfused bitwise.
+    """
+    algo = _algorithm(fl)
+    extra_keys = algo.extra_state
+    _check_extra_keys(extra_keys)
+    run_clients = _make_plain_clients(bundle, fl, mode, impl=impl)
+
+    def local_fn(global_state, client_batches, total, n_examples, lr):
+        weights = jnp.asarray(n_examples, jnp.float32) / total
+        wsums, _, losses = run_clients(global_state, client_batches,
+                                       weights, lr)
+        return {**wsums, "loss": jnp.mean(losses)}
+
+    def finish_fn(global_state, summed):
+        new_state: Dict[str, Any] = {"model": summed["model"]}
+        new_state.update(algo.finalize_extra_sums(
+            fl, global_state, {k: summed[k] for k in extra_keys}))
+        return new_state, {"local_loss": summed["loss"] / shard.n_shards}
+
+    return local_fn, finish_fn
 
 
 def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
@@ -184,14 +274,62 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
     same update), and the per-client rng keys are the positional slice of
     the reference loop's full split.
     """
+    algo = _algorithm(fl)
+    extra_keys = algo.extra_state
+    run_clients = _make_compressed_clients(bundle, fl, mode, uplink,
+                                           downlink, impl=impl, shard=shard)
+
+    def round_fn(global_state, client_batches, n_examples, lr, ef_state,
+                 down_mirror, key):
+        weights = normalize_weights(n_examples, shard)
+        wsums, stacked_extras, new_ef, losses, bcast = run_clients(
+            global_state, client_batches, weights, lr, ef_state,
+            down_mirror, key)
+        if mode == "client_parallel":
+            agg_delta = psum_tree(wsums["delta"], shard)
+        else:
+            acc = psum_tree(wsums, shard)
+            agg_delta = acc["delta"]
+
+        # apply the aggregate update to the FULL-PRECISION server model;
+        # the aggregate of the client models themselves is bcast+Σw·Δ, but
+        # folding the broadcast's codec error back into the server state
+        # would compound it round over round.
+        new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
+                                 global_state["model"], agg_delta)
+        new_state: Dict[str, Any] = {"model": new_model}
+        if mode == "client_parallel":
+            new_state.update(algo.aggregate_extras(
+                fl, global_state, stacked_extras, weights, shard=shard))
+        else:
+            new_state.update(algo.finalize_extra_sums(
+                fl, global_state, {k: acc[k] for k in extra_keys}))
+        return (new_state, {"local_loss": mean_over_clients(losses, shard)},
+                new_ef, bcast)
+
+    return round_fn
+
+
+def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
+                             uplink, downlink, *, impl="auto",
+                             shard: Optional[ClientSharding] = None):
+    """Shared client-side computation of one codec-routed round.
+
+    Returns ``run_clients(global_state, client_batches, weights, lr,
+    ef_state, down_mirror, key) -> (wsums, stacked_extras, new_ef, losses,
+    bcast)``: ``wsums`` holds this shard's psum-pending weighted sums
+    ``{"delta": tree, **extras}``, ``stacked_extras`` the per-client
+    extras (client_parallel only), ``new_ef`` the positional clients'
+    fresh EF rows and ``bcast`` the mirror-based downlink result (the
+    clients' next mirror).
+    """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
     extra_keys = algo.extra_state
 
-    def round_fn(global_state, client_batches, n_examples, lr, ef_state,
-                 down_mirror, key):
-        weights = normalize_weights(n_examples, shard)
+    def run_clients(global_state, client_batches, weights, lr, ef_state,
+                    down_mirror, key):
         n_clients = weights.shape[0]
         kd, ku = jax.random.split(key)
         down_update = jax.tree.map(lambda m, w: m - w,
@@ -219,44 +357,73 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
         if mode == "client_parallel":
             outs = jax.vmap(client_step)(client_batches, ef_state,
                                          client_keys)
-            agg_delta = weighted_mean(outs["delta"], weights, shard)
-            new_ef = outs["ef"]
-            stacked_extras = {k: outs[k] for k in extra_keys}
-        else:
-            acc0 = {"delta": zeros_like_tree(global_state["model"])}
+            wsums = {"delta": _weighted_sums(outs["delta"], weights)}
             for k in extra_keys:
-                acc0[k] = zeros_like_tree(global_state[k])
+                wsums[k] = _weighted_sums(outs[k], weights)
+            return (wsums, {k: outs[k] for k in extra_keys}, outs["ef"],
+                    outs["loss"], bcast)
 
-            def body(acc, xs):
-                batches, w, ef, ck = xs
-                out = client_step(batches, ef, ck)
-                acc = {k: running_update(acc[k], out[k], w) for k in acc}
-                return acc, (out["ef"], out["loss"])
+        acc0 = {"delta": zeros_like_tree(global_state["model"])}
+        for k in extra_keys:
+            acc0[k] = zeros_like_tree(global_state[k])
 
-            acc, (new_ef, losses) = jax.lax.scan(
-                body, acc0, (client_batches, weights, ef_state, client_keys))
-            acc = psum_tree(acc, shard)
-            agg_delta = acc["delta"]
-            extra_sums = {k: acc[k] for k in extra_keys}
+        def body(acc, xs):
+            batches, w, ef, ck = xs
+            out = client_step(batches, ef, ck)
+            acc = {k: running_update(acc[k], out[k], w) for k in acc}
+            return acc, (out["ef"], out["loss"])
 
-        # apply the aggregate update to the FULL-PRECISION server model;
-        # the aggregate of the client models themselves is bcast+Σw·Δ, but
-        # folding the broadcast's codec error back into the server state
-        # would compound it round over round.
+        acc, (new_ef, losses) = jax.lax.scan(
+            body, acc0, (client_batches, weights, ef_state, client_keys))
+        return acc, None, new_ef, losses, bcast
+
+    return run_clients
+
+
+def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
+                                mode: str, uplink, downlink, *, impl="auto",
+                                shard: ClientSharding):
+    """Deferred-psum split of :func:`make_compressed_round_fn`.
+
+    Returns ``(local_fn, finish_fn)`` for the fused-collective superstep:
+
+    ``local_fn(global_state, client_batches, total, n_examples, lr,
+    ef_state, down_mirror, key) -> (contribs, aux)`` — ``contribs``
+    ``{"delta": tree, **extras, "loss": scalar}`` are this shard's
+    psum-pending sums; ``aux`` carries ``new_ef`` (positional clients'
+    fresh EF rows, routed through the fused exchange by the superstep)
+    and ``bcast`` (the next downlink mirror).  ``total`` is the round's
+    psum-completed example count, pipelined one collective ahead.
+
+    ``finish_fn(global_state, summed) -> (new_state, metrics)`` applies
+    the psum-completed aggregate delta to the full-precision server model
+    and closes extras through ``finalize_extra_sums`` (see
+    :func:`make_round_parts` for why that stays bitwise).
+    """
+    algo = _algorithm(fl)
+    extra_keys = algo.extra_state
+    _check_extra_keys(extra_keys)
+    run_clients = _make_compressed_clients(bundle, fl, mode, uplink,
+                                           downlink, impl=impl, shard=shard)
+
+    def local_fn(global_state, client_batches, total, n_examples, lr,
+                 ef_state, down_mirror, key):
+        weights = jnp.asarray(n_examples, jnp.float32) / total
+        wsums, _, new_ef, losses, bcast = run_clients(
+            global_state, client_batches, weights, lr, ef_state,
+            down_mirror, key)
+        contribs = {**wsums, "loss": jnp.mean(losses)}
+        return contribs, {"new_ef": new_ef, "bcast": bcast}
+
+    def finish_fn(global_state, summed):
         new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
-                                 global_state["model"], agg_delta)
+                                 global_state["model"], summed["delta"])
         new_state: Dict[str, Any] = {"model": new_model}
-        if mode == "client_parallel":
-            losses = outs["loss"]
-            new_state.update(algo.aggregate_extras(
-                fl, global_state, stacked_extras, weights, shard=shard))
-        else:
-            new_state.update(algo.finalize_extra_sums(
-                fl, global_state, extra_sums))
-        return (new_state, {"local_loss": mean_over_clients(losses, shard)},
-                new_ef, bcast)
+        new_state.update(algo.finalize_extra_sums(
+            fl, global_state, {k: summed[k] for k in extra_keys}))
+        return new_state, {"local_loss": summed["loss"] / shard.n_shards}
 
-    return round_fn
+    return local_fn, finish_fn
 
 
 def init_global_state(bundle: ModelBundle, fl: FLConfig, key):

@@ -22,6 +22,6 @@ from repro.engine.evaljit import make_eval_fn, pad_eval_batch  # noqa: F401
 from repro.engine.metrics import MetricsPump  # noqa: F401
 from repro.engine.pipeline import HostPrefetcher, StagingPool  # noqa: F401
 from repro.engine.sharded import (client_sharding,  # noqa: F401
-                                  make_sharded_superstep)
+                                  make_sharded_eval, make_sharded_superstep)
 from repro.engine.superstep import (make_compressed_superstep,  # noqa: F401
                                     make_plain_superstep)

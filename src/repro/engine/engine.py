@@ -27,10 +27,18 @@ supersteps instead of one Python-dispatched round at a time:
   other engine metric);
 * mesh — with ``mesh`` whose client axes (``pod``/``data``) multiply to
   S > 1, the superstep runs under ``shard_map`` (``repro.engine.sharded``):
-  the chunk's client axis is split positionally over the S shards and the
-  full-federation EF table is row-sharded by client id.  The results are
-  allclose (not bitwise: aggregation order changes) to the single-device
-  engine; ``mesh=None`` or S == 1 keeps the exact single-device program;
+  the chunk's client axis is split positionally over the S shards, the
+  full-federation EF table is row-sharded by client id in the resident
+  scratch-row layout (``[(N_loc+1)*S, ...]``, in-place per-round scatter;
+  ``ef.npz`` stays the compact format), the compressed round's traffic is
+  ONE packed psum (``fused_collective=True``, the default — EF exchange,
+  aggregate and pipelined weight totals ride a single flat buffer;
+  ``False`` keeps the bitwise-equal three-collective oracle), and
+  evaluation splits the padded test batch over the shards with a
+  masked-sum psum (``sharded_eval=True``; ``False`` evaluates
+  replicated).  The results are allclose (not bitwise: aggregation order
+  changes) to the single-device engine; ``mesh=None`` or S == 1 keeps the
+  exact single-device program;
 * equivalence — the rng streams (data sampling on the host, per-round
   ``fold_in`` on device) and the per-round math are exactly those of the
   preserved reference loop (``repro.fl.server.run_federated_reference``);
@@ -60,7 +68,8 @@ from repro.engine.evaljit import make_eval_fn, pad_eval_batch
 from repro.engine.metrics import MetricsPump
 from repro.engine.pipeline import HostPrefetcher, StagingPool
 from repro.engine.sharded import (client_sharding, chunk_shardings,
-                                  ef_table_sharding, make_sharded_superstep)
+                                  ef_table_sharding, eval_batch_sharding,
+                                  make_sharded_eval, make_sharded_superstep)
 from repro.engine.superstep import (make_compressed_superstep,
                                     make_plain_superstep)
 from repro.models.registry import ModelBundle
@@ -160,7 +169,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                          callback: Optional[Callable] = None,
                          superstep_rounds=8, prefetch: bool = True,
                          impl: str = "auto", mesh=None,
-                         overlap_eval: bool = True) -> ServerResult:
+                         overlap_eval: bool = True,
+                         fused_collective: bool = True,
+                         sharded_eval: bool = True) -> ServerResult:
     """Engine-backed server loop (see module docstring).
 
     Drop-in for the reference loop: same arguments, same ServerResult,
@@ -168,12 +179,18 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     (max rounds per jitted chunk, or ``"auto"`` to calibrate),
     ``prefetch`` (background host staging), ``impl`` (kernel dispatch for
     the EF gather/scatter and codecs), ``mesh`` (client-parallel
-    ``shard_map`` execution when its pod/data axes multiply past 1) and
+    ``shard_map`` execution when its pod/data axes multiply past 1),
     ``overlap_eval`` (snapshot-based eval dispatch; False reproduces the
-    pre-overlap behaviour of evaluating the to-be-donated state).
+    pre-overlap behaviour of evaluating the to-be-donated state),
+    ``fused_collective`` (mesh only: ONE packed psum per round instead of
+    the three-collective layout — bitwise-equal, False keeps the oracle)
+    and ``sharded_eval`` (mesh only: split the eval batch over the client
+    shards with a masked-sum psum; False evaluates replicated).
     """
-    from repro.checkpoint.io import (load_tree, restore_server_state,
-                                     save_server_state, save_tree)
+    from repro.checkpoint.io import (insert_scratch_rows, load_tree,
+                                     restore_server_state,
+                                     save_server_state, save_tree,
+                                     strip_scratch_rows)
     from repro.fl.comm import CommLog
 
     shard = client_sharding(mesh) if mesh is not None else None
@@ -235,8 +252,13 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         ef_path = (os.path.join(checkpoint_dir, "ef.npz")
                    if checkpoint_dir else None)
         if start_round and ef_path and os.path.exists(ef_path):
+            # ef.npz is always the compact [n_clients, ...] layout
             ef_all, down_mirror = load_tree(ef_path, (ef_all, down_mirror))
-        ef_sh = ef_table_sharding(mesh) if shard is not None else None
+        if shard is not None:
+            # resident scratch-row layout: one permanent write-sink row
+            # per shard block, so the per-round scatter is in place
+            ef_all = insert_scratch_rows(ef_all, shard.n_shards)
+            ef_sh = ef_table_sharding(mesh)
         ef_all = jax.tree.map(
             lambda z: (jax.device_put(z, ef_sh) if shard is not None
                        else jnp.asarray(z)), ef_all)
@@ -244,17 +266,36 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                                    down_mirror)
         round_key = jax.random.fold_in(key, 0x636f6d70)  # "comp"
 
+    def save_ef():
+        """ef.npz keeps the compact layout — strip the scratch rows."""
+        ef_disk = (strip_scratch_rows(ef_all, shard.n_shards)
+                   if shard is not None else ef_all)
+        save_tree(ef_path, (ef_disk, down_mirror))
+
     # --- fixed-shape evaluation -------------------------------------------
-    test_batch, test_mask = pad_eval_batch(
-        data.test_batch(), eval_examples,
-        sharding=shard_repl if shard is not None else None)
-    eval_fn = make_eval_fn(bundle, fl)
-    eval_in_scan = eval_every == 1 and callback is None
-    jit_eval = None if eval_in_scan else jax.jit(eval_fn)
-    # eval overlap: the evaluator reads a device-side copy, never the
-    # buffers the next chunk is about to consume by donation
-    snap = (jax.jit(lambda t: jax.tree.map(jnp.copy, t))
-            if (jit_eval is not None and overlap_eval) else None)
+    # on a mesh the eval batch splits positionally over the client shards
+    # and the masked metric sums cross one psum (S× less eval compute per
+    # device — the paper's workload evaluates every round);
+    # sharded_eval=False keeps the replicated-evaluator oracle.
+    eval_shard = shard if (shard is not None and sharded_eval) else None
+    test_batch = test_mask = None
+    eval_fn = jit_eval = snap = None
+    eval_in_scan = False
+    if eval_every:
+        test_batch, test_mask = pad_eval_batch(
+            data.test_batch(), eval_examples,
+            sharding=(eval_batch_sharding(mesh) if eval_shard is not None
+                      else shard_repl if shard is not None else None),
+            shard=eval_shard)
+        eval_fn = make_eval_fn(bundle, fl, shard=eval_shard)
+        eval_in_scan = eval_every == 1 and callback is None
+        if not eval_in_scan:
+            jit_eval = jax.jit(make_sharded_eval(eval_fn, mesh)
+                               if eval_shard is not None else eval_fn)
+        # eval overlap: the evaluator reads a device-side copy, never the
+        # buffers the next chunk is about to consume by donation
+        snap = (jax.jit(lambda t: jax.tree.map(jnp.copy, t))
+                if (jit_eval is not None and overlap_eval) else None)
 
     # --- chunk staging -----------------------------------------------------
     # pinned-buffer reuse is an accelerator optimization: there device_put
@@ -295,7 +336,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             if shard is not None:
                 fn = make_sharded_superstep(
                     bundle, fl, mode, n_rounds, mesh, uplink=uplink,
-                    downlink=downlink, eval_fn=in_scan, impl=impl)
+                    downlink=downlink, eval_fn=in_scan, impl=impl,
+                    fused_collective=fused_collective,
+                    eval_sharded=eval_shard is not None)
             elif compressed:
                 fn = make_compressed_superstep(
                     bundle, fl, mode, n_rounds, uplink, downlink,
@@ -383,7 +426,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                 save_server_state(checkpoint_dir, global_state, r1,
                                   extra={"algorithm": fl.algorithm})
                 if compressed:
-                    save_tree(ef_path, (ef_all, down_mirror))
+                    save_ef()
     finally:
         prefetcher.close()
         pump.close()
@@ -392,10 +435,12 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         save_server_state(checkpoint_dir, global_state, rounds,
                           extra={"algorithm": fl.algorithm})
         if compressed:
-            save_tree(ef_path, (ef_all, down_mirror))
+            save_ef()
     stats = {
         "chunk_rounds": chunk_rounds,
         "client_shards": shard.n_shards if shard is not None else 1,
+        "fused_collective": bool(shard is not None and fused_collective),
+        "sharded_eval": eval_fn is not None and eval_shard is not None,
         "eval_overlap": snap is not None,
         "host_wait_s": round(prefetcher.wait_s, 4),
         "metrics_wait_s": round(pump.wait_s, 4),

@@ -17,6 +17,7 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
 import jax
+import numpy as np
 
 # NOTE: nothing in repro.engine imports repro.fl at module scope —
 # repro.fl.server imports the engine, and the reverse edge would cycle.
@@ -79,16 +80,37 @@ class MetricsPump:
         self.drain()
         self._pool.shutdown(wait=True)
 
+    @staticmethod
+    def _scalar(v):
+        """Host-ify one metric value; non-scalar leaves (e.g. a per-class
+        vector) pass through as numpy instead of crashing ``float()``."""
+        try:
+            return float(v)
+        except (TypeError, ValueError):
+            return np.asarray(v)
+
+    @staticmethod
+    def _fmt(v):
+        """Verbose formatting that tolerates non-float metric values."""
+        try:
+            return f"{v:.4f}"
+        except (TypeError, ValueError):
+            return str(v)
+
     def _log(self, fetched):
         stack, ev = fetched
-        n_rounds = len(next(iter(stack.values())))
+        # an empty metrics stack is legal (a round fn with no scalar
+        # metrics); eval-only chunks still log their single round
+        n_rounds = (len(next(iter(stack.values()))) if stack
+                    else (1 if ev is not None else 0))
         for k in range(n_rounds):
-            metrics = {key: float(v[k]) for key, v in stack.items()}
+            metrics = {key: self._scalar(v[k]) for key, v in stack.items()}
             if ev is not None and k == n_rounds - 1:
-                metrics.update({key: float(v) for key, v in ev.items()})
+                metrics.update({key: self._scalar(v)
+                                for key, v in ev.items()})
             self._comm.log_round(None, self._n_clients, metrics,
                                  **self._wire)
             if self._verbose:
                 print(f"round {self._comm.rounds:4d} " +
-                      " ".join(f"{k2}={v2:.4f}"
+                      " ".join(f"{k2}={self._fmt(v2)}"
                                for k2, v2 in metrics.items()))

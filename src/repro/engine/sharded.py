@@ -8,16 +8,24 @@ in parallel across devices:
 * ``batches [K, C, ...]`` / ``sizes [K, C]`` are sharded over the client
   mesh axes (``pod`` then ``data``): shard ``s`` trains sampled positions
   ``[s*C_loc, (s+1)*C_loc)`` of every round in the chunk;
-* the full-federation EF table is row-sharded by client id (shard ``s``
-  owns rows ``[s*N_loc, (s+1)*N_loc)``); the per-round row movement is
-  the compact psum exchange in ``repro.engine.superstep``;
-* global state, broadcast mirror, lr schedule, round keys, ``cids`` and
-  the eval batch are replicated — every shard computes the identical
-  server-side update from the psum'd aggregate, so the replicated outputs
-  agree bitwise across shards;
-* the only cross-device traffic per round is the aggregation psum (plus
-  the [C, n] EF exchange on compressed runs) — exactly the communication
-  FedAvg counts on the wire.
+* the full-federation EF table is row-sharded by client id in the
+  RESIDENT scratch-row layout (shard ``s`` holds its ``N_loc`` owned rows
+  plus one permanent write-sink row — ``repro.launch.sharding.
+  ef_table_sharding``), so the per-round scatter is one in-place aliased
+  row write instead of a concatenate/slice pair;
+* global state, broadcast mirror, lr schedule, round keys and ``cids``
+  are replicated — every shard computes the identical server-side update
+  from the psum'd aggregate, so the replicated outputs agree bitwise
+  across shards;
+* the eval batch is split positionally over the client axes when the
+  evaluator is shard-aware (``eval_sharded=True``, the engine default —
+  eval-every-round then costs S× less compute), or replicated for a
+  plain evaluator;
+* cross-device traffic per round is ONE packed psum with
+  ``fused_collective=True`` (the default: FedAvg aggregate + EF exchange
+  + pipelined weight totals in a single flat-buffer all-reduce — see
+  ``repro.engine.superstep``), or the three-collective oracle layout with
+  ``fused_collective=False``.
 
 The mesh's ``model`` axis (if any) is treated as replicated: the engine's
 CNN-scale federated workloads are client-bound, and tensor parallelism
@@ -41,7 +49,7 @@ from repro.engine.superstep import (make_compressed_superstep,
                                     make_plain_superstep)
 from repro.launch.mesh import client_axes
 from repro.launch.sharding import (chunk_shardings,  # noqa: F401 (re-export)
-                                   ef_table_sharding)
+                                   ef_table_sharding, eval_batch_sharding)
 
 if hasattr(jax, "shard_map"):          # jax >= 0.6
     _shard_map = jax.shard_map
@@ -63,39 +71,70 @@ def client_sharding(mesh) -> Optional[ClientSharding]:
     return ClientSharding(axes=axes, sizes=sizes)
 
 
+def _unchecked_shard_map(fn, mesh, in_specs, out_specs):
+    # check_rep/check_vma off: outputs marked replicated are made identical
+    # on every shard by construction (they are functions of replicated
+    # inputs and psum results), which the static replication checker
+    # cannot see through the scan carry.
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **{_CHECK_KW: False})
+
+
 def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
                            uplink=None, downlink=None, eval_fn=None,
-                           impl="auto"):
+                           impl="auto", fused_collective=True,
+                           eval_sharded=True):
     """``shard_map``-wrapped superstep on ``mesh`` (client axes size > 1).
 
     Same call signature as the unsharded supersteps; the plain variant is
     built when ``uplink`` is None, the codec-routed one otherwise.  The
     caller stages batches/sizes with
     :func:`repro.launch.sharding.chunk_shardings` and the EF table with
-    :func:`repro.launch.sharding.ef_table_sharding`; jit with the same
-    donations as the unsharded path.
+    :func:`repro.launch.sharding.ef_table_sharding` (resident scratch-row
+    layout); jit with the same donations as the unsharded path.
+
+    ``eval_fn`` must match ``eval_sharded``: a shard-aware evaluator
+    (``make_eval_fn(shard=client_sharding(mesh))`` fed a batch padded
+    with ``pad_eval_batch(shard=...)`` and staged with
+    :func:`repro.launch.sharding.eval_batch_sharding`) when True, a
+    replicated one when False.
     """
     shard = client_sharding(mesh)
     assert shard is not None, "use the plain superstep on a 1-shard mesh"
     ax = shard.axis_name
+    test_spec = P(ax) if eval_sharded else P()
     n_test = 2 if eval_fn is not None else 0
 
     if uplink is None:
         inner = make_plain_superstep(bundle, fl, mode, n_rounds,
-                                     eval_fn=eval_fn, impl=impl, shard=shard)
-        in_specs = (P(), P(None, ax), P(None, ax), P()) + (P(),) * n_test
+                                     eval_fn=eval_fn, impl=impl,
+                                     shard=shard, fused=fused_collective)
+        in_specs = (P(), P(None, ax), P(None, ax), P()) \
+            + (test_spec,) * n_test
         out_specs = (P(), P())
     else:
         inner = make_compressed_superstep(bundle, fl, mode, n_rounds,
                                           uplink, downlink, eval_fn=eval_fn,
-                                          impl=impl, shard=shard)
+                                          impl=impl, shard=shard,
+                                          fused=fused_collective)
         in_specs = (P(), P(ax), P(), P(None, ax), P(None, ax),
-                    P(), P(), P(), P()) + (P(),) * n_test
+                    P(), P(), P(), P()) + (test_spec,) * n_test
         out_specs = (P(), P(), P(ax), P())
 
-    # check_rep/check_vma off: outputs marked replicated are made identical
-    # on every shard by construction (they are functions of replicated
-    # inputs and psum results), which the static replication checker
-    # cannot see through the scan carry.
-    return _shard_map(inner, mesh=mesh, in_specs=in_specs,
-                      out_specs=out_specs, **{_CHECK_KW: False})
+    return _unchecked_shard_map(inner, mesh, in_specs, out_specs)
+
+
+def make_sharded_eval(eval_fn, mesh):
+    """``shard_map``-wrap a shard-aware evaluator for boundary dispatch.
+
+    ``eval_fn`` is a :func:`repro.engine.make_eval_fn` built with
+    ``shard=client_sharding(mesh)``; the state is replicated, the padded
+    batch/mask arrive positionally split over the client axes, and the
+    psum'd metrics come back replicated.  The caller jits the result.
+    """
+    shard = client_sharding(mesh)
+    assert shard is not None, "sharded eval needs client axes > 1"
+    ax = shard.axis_name
+    return _unchecked_shard_map(eval_fn, mesh,
+                                in_specs=(P(), P(ax), P(ax)),
+                                out_specs=P())

@@ -27,14 +27,38 @@ bitwise-equal to the pre-engine loop (the equivalence contract
 Sharded mode (``shard`` = a :class:`repro.core.aggregate.ClientSharding`):
 the superstep becomes a ``shard_map`` BODY (see ``repro.engine.sharded``).
 Batches/sizes then carry only this shard's positional client slice, the
-EF table argument is this shard's row block (rows ``[pos*N_loc,
-(pos+1)*N_loc)`` of the full federation, sharded by client id), and
-``cids`` stays the FULL round sample (replicated — ownership of an EF row
-is decided by cid, not by which shard trains the client).  Each round the
-sampled rows cross shards through one compact ``psum`` exchange in each
-direction (``[C, n]`` — the same order as the FedAvg delta psum); the
-``ef_gather``/``ef_scatter`` kernels themselves only ever index the LOCAL
-row block.  With ``shard=None`` nothing changes.
+EF table argument is this shard's row block PLUS ONE RESIDENT SCRATCH ROW
+(``[N_loc+1, ...]`` — rows ``[pos*N_loc, (pos+1)*N_loc)`` of the full
+federation sharded by client id, row ``N_loc`` a write sink for non-owned
+scatter rows), and ``cids`` stays the FULL round sample (replicated —
+ownership of an EF row is decided by cid, not by which shard trains the
+client).  The scratch row lives in the table layout permanently
+(:func:`repro.launch.sharding.ef_table_sharding` allocates it at staging;
+``repro.checkpoint.io`` drops it at save and re-appends it on restore),
+so the per-round scatter is a single in-place ``ops.ef_scatter`` on the
+donated block instead of a concatenate + slice pair copying the whole
+block twice per round.  With ``shard=None`` nothing changes.
+
+Collectives (sharded only):
+
+* ``fused=False`` — the three-collective oracle: FedAvg aggregation psum
+  inside the round fn, plus one compact ``[C, ...]`` psum exchange per
+  direction for the EF rows (``ef_gather_exchange`` /
+  ``ef_scatter_exchange``);
+* ``fused=True`` (the engine default) — ONE psum per round: the round's
+  local contribution sums (delta / extras / loss via
+  ``repro.core.rounds.make_*_round_parts``), the EF scatter placement,
+  the NEXT round's EF gather contributions and the next round's example
+  -count total are packed into one flat buffer and exchanged with a
+  single ``psum`` (:func:`repro.core.aggregate.fused_psum`; pack offsets
+  are trace-time statics, unpack is static slices).  Quantities a round
+  needs BEFORE training — its gathered EF rows and its weight
+  total — are pipelined one collective ahead: they ride the previous
+  round's psum (a per-chunk prologue psum seeds round 0), which is
+  possible because ``cids``/``sizes`` are pre-staged inputs and a
+  just-trained row's fresh value is known to the shard that trained it
+  before the scatter lands.  Every packed element equals its standalone
+  -psum value bitwise, so fused and unfused rounds agree bit for bit.
 
 The caller jits the returned function; donate ``global_state`` (and for
 the compressed path ``ef_all`` + ``mirror``) so steady-state chunks update
@@ -45,7 +69,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.rounds import make_compressed_round_fn, make_round_fn
+from repro.core.aggregate import fused_psum
+from repro.core.rounds import (make_compressed_round_fn,
+                               make_compressed_round_parts, make_round_fn,
+                               make_round_parts)
 from repro.kernels import ops
 
 
@@ -54,8 +81,14 @@ def _stack1(tree):
     return jax.tree.map(lambda v: jnp.asarray(v)[None], tree)
 
 
+def _size_total(n_examples):
+    """This shard's term of a round's example-count total — the local half
+    of ``normalize_weights`` (psum completes it, one round ahead)."""
+    return jnp.sum(jnp.asarray(n_examples, jnp.float32))
+
+
 def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
-                         impl="auto", shard=None):
+                         impl="auto", shard=None, fused=False):
     """Uncompressed K-round superstep.
 
     Returns ``superstep(global_state, batches, sizes, lrs[, test_batch,
@@ -63,9 +96,17 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
     dims ``batches [K, C, steps, B, ...]``, ``sizes [K, C]``, ``lrs [K]``.
     ``eval_fn`` (traceable, from :func:`repro.engine.make_eval_fn`) folds
     per-round evaluation of the post-round state into the scan.  Under
-    ``shard`` the batch/size client axis is this shard's slice; evaluation
-    runs replicated on the (replicated) post-round state.
+    ``shard`` the batch/size client axis is this shard's slice and
+    ``eval_fn`` must match how the test args are laid out (replicated, or
+    positionally sharded for a shard-aware evaluator).  ``fused=True``
+    (sharded only) runs the round's aggregation as ONE packed psum with
+    the weight total pipelined one round ahead (see module docstring).
     """
+    if fused:
+        assert shard is not None, "fused collectives require a shard"
+        return _make_fused_plain_superstep(bundle, fl, mode, n_rounds,
+                                           eval_fn=eval_fn, impl=impl,
+                                           shard=shard)
     round_fn = make_round_fn(bundle, fl, mode, impl=impl, shard=shard)
 
     def one_round(state, b, n, lr, test):
@@ -91,29 +132,102 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
     return superstep
 
 
+def _make_fused_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn,
+                                impl, shard):
+    """One-psum-per-round uncompressed superstep (shard_map body)."""
+    local_fn, finish_fn = make_round_parts(bundle, fl, mode, impl=impl,
+                                           shard=shard)
+
+    def one_round(state, total, b, n, lr, n_next, test):
+        contribs = local_fn(state, b, total, n, lr)
+        summed = fused_psum({"round": contribs,
+                             "total": _size_total(n_next)}, shard)
+        state, metrics = finish_fn(state, summed["round"])
+        if eval_fn is not None:
+            metrics = {**metrics, **eval_fn(state, test[0], test[1])}
+        return state, summed["total"], metrics
+
+    def superstep(global_state, batches, sizes, lrs, *test):
+        # prologue: round 0's weight total (later rounds' ride the scan)
+        total = fused_psum({"total": _size_total(sizes[0])},
+                           shard)["total"]
+        if n_rounds == 1:
+            b0 = jax.tree.map(lambda a: a[0], batches)
+            state, _, m = one_round(global_state, total, b0, sizes[0],
+                                    lrs[0], sizes[0], test)
+            return state, _stack1(m)
+        sizes_next = jnp.roll(sizes, -1, axis=0)
+
+        def body(carry, xs):
+            state, total = carry
+            b, n, lr, n_next = xs
+            state, total, m = one_round(state, total, b, n, lr, n_next,
+                                        test)
+            return (state, total), m
+
+        (state, _), mstack = jax.lax.scan(
+            body, (global_state, total), (batches, sizes, lrs, sizes_next))
+        return state, mstack
+
+    return superstep
+
+
 # ---------------------------------------------------------------------------
 # Row-sharded EF exchange (shard_map body helpers)
 # ---------------------------------------------------------------------------
+# The sharded EF table block is ALWAYS the resident scratch-row layout
+# ``[N_loc+1, ...]``: row ``N_loc`` is a permanent write sink, so the
+# exchanges below treat ``table.shape[0] - 1`` as the owned-row count.
 
-def ef_gather_exchange(table, cids, shard, *, impl="auto"):
-    """Assemble the round's full [C, ...] EF rows from row-sharded blocks.
-
-    ``table`` is this shard's LOCAL row block [N_loc, ...] of the
-    federation table (shard ``s`` owns client ids ``[s*N_loc,
-    (s+1)*N_loc)``); ``cids [C]`` is the full round sample (replicated).
-    Each shard gathers the sampled rows it owns — a shard-local
-    ``ops.ef_gather`` with clipped indices — masks the rest to zero, and
-    one ``psum`` over the client axes gives every shard the complete
-    [C, ...] matrix.  Rows are disjointly owned, so the sum is exact.
-    """
-    n_loc = table.shape[0]
+def _ef_gather_contrib(table, cids, shard, *, impl="auto"):
+    """This shard's masked term of the round's [C, ...] gather psum."""
+    n_loc = table.shape[0] - 1
     lo = shard.position() * n_loc
     owned = (cids >= lo) & (cids < lo + n_loc)
     local_idx = jnp.clip(cids - lo, 0, n_loc - 1).astype(jnp.int32)
     rows = ops.ef_gather(table, local_idx, impl=impl)
     mask = owned.reshape((-1,) + (1,) * (rows.ndim - 1))
-    contrib = jnp.where(mask, rows, jnp.zeros_like(rows))
-    return jax.lax.psum(contrib, shard.axis_name)
+    return jnp.where(mask, rows, jnp.zeros_like(rows))
+
+
+def ef_gather_exchange(table, cids, shard, *, impl="auto"):
+    """Assemble the round's full [C, ...] EF rows from row-sharded blocks.
+
+    ``table`` is this shard's LOCAL row block ``[N_loc+1, ...]`` of the
+    federation table (shard ``s`` owns client ids ``[s*N_loc,
+    (s+1)*N_loc)``; the trailing scratch row is never read); ``cids [C]``
+    is the full round sample (replicated).  Each shard gathers the sampled
+    rows it owns — a shard-local ``ops.ef_gather`` with clipped indices —
+    masks the rest to zero, and one ``psum`` over the client axes gives
+    every shard the complete [C, ...] matrix.  Rows are disjointly owned,
+    so the sum is exact.
+    """
+    return jax.lax.psum(_ef_gather_contrib(table, cids, shard, impl=impl),
+                        shard.axis_name)
+
+
+def _ef_place_positional(new_rows, shard):
+    """Place this shard's [C_loc, ...] rows at their positional offset in
+    a zero [C, ...] buffer (the scatter exchange's psum operand)."""
+    c_loc = new_rows.shape[0]
+    full = jnp.zeros((c_loc * shard.n_shards,) + new_rows.shape[1:],
+                     new_rows.dtype)
+    return jax.lax.dynamic_update_slice_in_dim(
+        full, new_rows, (shard.position() * c_loc).astype(jnp.int32),
+        axis=0)
+
+
+def _ef_scatter_local(table, cids, full, shard, *, impl="auto"):
+    """Scatter the psum-completed [C, ...] rows this shard owns into its
+    resident block, routing non-owned rows to the scratch row (``N_loc``)
+    so the in-place ``ops.ef_scatter`` never sees a colliding index — a
+    clipped index could alias a genuinely-owned row and ``.at[].set`` with
+    duplicate indices keeps an arbitrary write."""
+    n_loc = table.shape[0] - 1
+    lo = shard.position() * n_loc
+    owned = (cids >= lo) & (cids < lo + n_loc)
+    safe_idx = jnp.where(owned, cids - lo, n_loc).astype(jnp.int32)
+    return ops.ef_scatter(table, safe_idx, full, impl=impl)
 
 
 def ef_scatter_exchange(table, cids, new_rows, shard, *, impl="auto"):
@@ -123,30 +237,67 @@ def ef_scatter_exchange(table, cids, new_rows, shard, *, impl="auto"):
     clients; their cids may be owned by any shard.  The rows are placed at
     their positional offset in a zero [C, ...] buffer, one ``psum``
     broadcasts the complete set, and each shard scatters the rows it owns
-    into its local block.  Non-owned rows are routed to a scratch row
-    appended past the block (row ``N_loc``) so the in-place
-    ``ops.ef_scatter`` never sees a colliding index — a clipped index
-    could alias a genuinely-owned row and ``.at[].set`` with duplicate
-    indices keeps an arbitrary write.
+    into its resident ``[N_loc+1, ...]`` block IN PLACE (under donation) —
+    the permanent scratch row absorbs non-owned rows, so no concatenate /
+    slice copies the block.
     """
-    n_loc = table.shape[0]
-    c_loc = new_rows.shape[0]
+    full = jax.lax.psum(_ef_place_positional(new_rows, shard),
+                        shard.axis_name)
+    return _ef_scatter_local(table, cids, full, shard, impl=impl)
+
+
+def _ef_gather_next_contrib(table, cids_prev, cids_next, new_rows, shard,
+                            *, impl="auto"):
+    """This shard's term of the NEXT round's gather psum, computable
+    BEFORE the current round's scatter lands (the fused-path pipelining).
+
+    For next-round position ``j`` with client ``c = cids_next[j]``:
+
+    * ``c`` trained this round on THIS shard -> contribute the fresh row
+      straight from ``new_rows`` (the post-scatter table value, known here
+      first);
+    * ``c`` trained on another shard -> contribute nothing (that shard
+      has the fresh row);
+    * ``c`` not trained this round -> the owner shard contributes its
+      table row, which the pending scatter leaves untouched.
+
+    Within-round cids are unique (``sample_clients`` asserts it), so
+    exactly one shard contributes per row and the psum is exact — every
+    summed row equals what ``ef_gather_exchange`` on the post-scatter
+    table would produce.
+    """
+    n_loc = table.shape[0] - 1
     pos = shard.position()
-    full = jnp.zeros((c_loc * shard.n_shards,) + new_rows.shape[1:],
-                     new_rows.dtype)
-    full = jax.lax.dynamic_update_slice_in_dim(
-        full, new_rows, (pos * c_loc).astype(jnp.int32), axis=0)
-    full = jax.lax.psum(full, shard.axis_name)
     lo = pos * n_loc
-    owned = (cids >= lo) & (cids < lo + n_loc)
-    safe_idx = jnp.where(owned, cids - lo, n_loc).astype(jnp.int32)
-    scratch = jnp.concatenate(
-        [table, jnp.zeros((1,) + table.shape[1:], table.dtype)], axis=0)
-    return ops.ef_scatter(scratch, safe_idx, full, impl=impl)[:n_loc]
+    c_loc = new_rows.shape[0]
+    prev_local = jax.lax.dynamic_slice_in_dim(
+        cids_prev, (pos * c_loc).astype(jnp.int32), c_loc, axis=0)
+    match = cids_next[:, None] == prev_local[None, :]        # [C, C_loc]
+    trained_here = jnp.any(match, axis=1)
+    local_pos = jnp.argmax(match, axis=1).astype(jnp.int32)
+    from_train = jnp.take(new_rows, local_pos, axis=0)
+    trained_any = jnp.any(cids_next[:, None] == cids_prev[None, :], axis=1)
+    owned = (cids_next >= lo) & (cids_next < lo + n_loc)
+    local_idx = jnp.clip(cids_next - lo, 0, n_loc - 1).astype(jnp.int32)
+    from_table = ops.ef_gather(table, local_idx, impl=impl)
+    mt = trained_here.reshape((-1,) + (1,) * (from_train.ndim - 1))
+    mo = (owned & ~trained_any).reshape(
+        (-1,) + (1,) * (from_table.ndim - 1))
+    return jnp.where(mt, from_train,
+                     jnp.where(mo, from_table, jnp.zeros_like(from_table)))
+
+
+def _slice_positional(full_tree, shard, c_loc):
+    """This shard's positional [C_loc, ...] block of full [C, ...] rows."""
+    start = (shard.position() * c_loc).astype(jnp.int32)
+    return jax.tree.map(
+        lambda g: jax.lax.dynamic_slice_in_dim(g, start, c_loc, axis=0),
+        full_tree)
 
 
 def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
-                              *, eval_fn=None, impl="auto", shard=None):
+                              *, eval_fn=None, impl="auto", shard=None,
+                              fused=False):
     """Compressed (codec-routed) K-round superstep.
 
     Returns ``superstep(global_state, ef_all, mirror, batches, sizes, lrs,
@@ -159,10 +310,17 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
     the scan, reproducing the reference loop's per-round key derivation
     bit for bit (fold_in is a pure function of the key data and r).
 
-    Under ``shard``, ``ef_all`` is this shard's row block and the row
-    movement goes through :func:`ef_gather_exchange` /
-    :func:`ef_scatter_exchange`; ``cids`` stays the full round sample.
+    Under ``shard``, ``ef_all`` is this shard's resident scratch-row block
+    ``[N_loc+1, n]`` and the row movement goes through
+    :func:`ef_gather_exchange` / :func:`ef_scatter_exchange` (three
+    collectives per round) or, with ``fused=True``, one packed psum per
+    round (see module docstring); ``cids`` stays the full round sample.
     """
+    if fused:
+        assert shard is not None, "fused collectives require a shard"
+        return _make_fused_compressed_superstep(
+            bundle, fl, mode, n_rounds, uplink, downlink, eval_fn=eval_fn,
+            impl=impl, shard=shard)
     round_fn = make_compressed_round_fn(bundle, fl, mode, uplink, downlink,
                                         impl=impl, shard=shard)
 
@@ -170,12 +328,11 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
         if shard is None:
             return jax.tree.map(
                 lambda t: ops.ef_gather(t, cids, impl=impl), ef_all)
-        start = (shard.position() * c_loc).astype(jnp.int32)
-        return jax.tree.map(
-            lambda t: jax.lax.dynamic_slice_in_dim(
-                ef_gather_exchange(t, cids, shard, impl=impl),
-                start, c_loc, axis=0),
-            ef_all)
+        return _slice_positional(
+            jax.tree.map(
+                lambda t: ef_gather_exchange(t, cids, shard, impl=impl),
+                ef_all),
+            shard, c_loc)
 
     def scatter_rows(ef_all, cids, new_ef):
         if shard is None:
@@ -219,6 +376,85 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
         (state, ef_all, mirror), mstack = jax.lax.scan(
             body, (global_state, ef_all, mirror),
             (batches, sizes, lrs, cids, round_idx))
+        return state, mstack, ef_all, mirror
+
+    return superstep
+
+
+def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
+                                     downlink, *, eval_fn, impl, shard):
+    """One-psum-per-round compressed superstep (shard_map body).
+
+    Pipelining layout: a per-chunk prologue psum seeds round 0's gathered
+    EF rows and weight total; thereafter round r's single psum carries its
+    contribution sums, its scatter placement, round r+1's gather
+    contributions and round r+1's weight total.  The last round's
+    next-round slots are computed from rolled inputs and discarded —
+    keeping the scan body uniform costs one dead [C, n] lane in the final
+    psum of each chunk.
+    """
+    local_fn, finish_fn = make_compressed_round_parts(
+        bundle, fl, mode, uplink, downlink, impl=impl, shard=shard)
+
+    def one_round(state, ef_all, mirror, ef_rows, total, b, n, lr, cid,
+                  cid_next, n_next, r, round_key, test):
+        key_r = jax.random.fold_in(round_key, r)
+        contribs, aux = local_fn(state, b, total, n, lr, ef_rows, mirror,
+                                 key_r)
+        summed = fused_psum({
+            "round": contribs,
+            "scat": jax.tree.map(
+                lambda rows: _ef_place_positional(rows, shard),
+                aux["new_ef"]),
+            "gath": jax.tree.map(
+                lambda t, rows: _ef_gather_next_contrib(
+                    t, cid, cid_next, rows, shard, impl=impl),
+                ef_all, aux["new_ef"]),
+            "total": _size_total(n_next),
+        }, shard)
+        state, metrics = finish_fn(state, summed["round"])
+        ef_all = jax.tree.map(
+            lambda t, full: _ef_scatter_local(t, cid, full, shard,
+                                              impl=impl),
+            ef_all, summed["scat"])
+        ef_next = _slice_positional(summed["gath"], shard, n.shape[0])
+        if eval_fn is not None:
+            metrics = {**metrics, **eval_fn(state, test[0], test[1])}
+        return state, ef_all, aux["bcast"], ef_next, summed["total"], metrics
+
+    def superstep(global_state, ef_all, mirror, batches, sizes, lrs, cids,
+                  round_idx, round_key, *test):
+        # prologue: round 0's EF rows + weight total in one psum
+        seed = fused_psum({
+            "gather": jax.tree.map(
+                lambda t: _ef_gather_contrib(t, cids[0], shard, impl=impl),
+                ef_all),
+            "total": _size_total(sizes[0]),
+        }, shard)
+        c_loc = sizes.shape[1]
+        ef_rows = _slice_positional(seed["gather"], shard, c_loc)
+        if n_rounds == 1:
+            b0 = jax.tree.map(lambda a: a[0], batches)
+            state, ef_all, mirror, _, _, m = one_round(
+                global_state, ef_all, mirror, ef_rows, seed["total"], b0,
+                sizes[0], lrs[0], cids[0], cids[0], sizes[0], round_idx[0],
+                round_key, test)
+            return state, _stack1(m), ef_all, mirror
+
+        cids_next = jnp.roll(cids, -1, axis=0)
+        sizes_next = jnp.roll(sizes, -1, axis=0)
+
+        def body(carry, xs):
+            state, ef_all, mirror, ef_rows, total = carry
+            b, n, lr, cid, cid_next, n_next, r = xs
+            state, ef_all, mirror, ef_rows, total, m = one_round(
+                state, ef_all, mirror, ef_rows, total, b, n, lr, cid,
+                cid_next, n_next, r, round_key, test)
+            return (state, ef_all, mirror, ef_rows, total), m
+
+        (state, ef_all, mirror, _, _), mstack = jax.lax.scan(
+            body, (global_state, ef_all, mirror, ef_rows, seed["total"]),
+            (batches, sizes, lrs, cids, cids_next, sizes_next, round_idx))
         return state, mstack, ef_all, mirror
 
     return superstep

@@ -97,7 +97,16 @@ class Algorithm:
         ``extra_state`` key; ``weights [n_clients]`` are globally
         normalized.  Under ``shard`` the client axis holds only this
         shard's clients — complete any cross-client statistic with the
-        ``repro.core.aggregate`` psum helpers."""
+        ``repro.core.aggregate`` psum helpers.
+
+        NOTE: the engine's fused-collective path (the sharded default)
+        does not call this hook — it packs the weighted sums of the
+        stacked extras into the round's single psum and closes them with
+        :meth:`finalize_extra_sums`, so keep the two decompositions
+        consistent: ``aggregate_extras(stacked, w) ==
+        finalize_extra_sums(psum(tensordot(w, stacked)))`` (true of every
+        in-tree plugin; a plugin needing a different cross-client
+        statistic should run with ``fused_collective=False``)."""
         return {}
 
     def finalize_extra_sums(self, fl, global_state, sums) -> Dict[str, Any]:

@@ -59,6 +59,8 @@ class EngineOptions:
     mesh: Any = None                        # client-parallel shard_map mesh
     overlap_eval: bool = True               # snapshot-dispatched boundary eval
     impl: str = "auto"                      # kernel dispatch (jnp | pallas)
+    fused_collective: bool = True           # mesh: ONE packed psum per round
+    sharded_eval: bool = True               # mesh: eval batch split + psum
 
 
 @dataclass(frozen=True)
@@ -117,7 +119,9 @@ class FederatedTrainer:
             checkpoint_every=o.checkpoint.every, callback=callback,
             superstep_rounds=o.engine.superstep_rounds,
             prefetch=o.engine.prefetch, impl=o.engine.impl,
-            mesh=o.engine.mesh, overlap_eval=o.engine.overlap_eval)
+            mesh=o.engine.mesh, overlap_eval=o.engine.overlap_eval,
+            fused_collective=o.engine.fused_collective,
+            sharded_eval=o.engine.sharded_eval)
         return self._result
 
     def evaluate(self, global_state=None, batch=None,

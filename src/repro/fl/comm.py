@@ -8,7 +8,7 @@ upload overhead that the round-count metric hides.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
@@ -25,8 +25,10 @@ class CommLog:
     bytes_up: int = 0
     bytes_down: int = 0
     history: List[Dict] = field(default_factory=list)
-    _model_b: int = field(default=None, repr=False)
-    _fusion_b: int = field(default=None, repr=False)
+    # None until bind_sizes() — honest Optional types keep dataclass
+    # introspection (get_type_hints, serializers, repr tooling) truthful
+    _model_b: Optional[int] = field(default=None, repr=False)
+    _fusion_b: Optional[int] = field(default=None, repr=False)
 
     def bind_sizes(self, global_state) -> "CommLog":
         """Precompute the model/fusion wire sizes once.
@@ -41,8 +43,9 @@ class CommLog:
         return self
 
     def log_round(self, global_state, n_clients: int, metrics: Dict, *,
-                  wire_up: int = None, wire_down: int = None,
-                  n_down: int = None):
+                  wire_up: Optional[int] = None,
+                  wire_down: Optional[int] = None,
+                  n_down: Optional[int] = None):
         """Account one round.
 
         ``wire_up`` / ``wire_down``: codec-reported bytes per client for the
@@ -60,8 +63,12 @@ class CommLog:
         charged to ``n_clients`` receivers in both directions.
         """
         if global_state is None:
-            assert self._model_b is not None, "log_round(None) needs " \
-                "bind_sizes(global_state) first"
+            if self._model_b is None:
+                # a real error, not an assert: -O strips asserts, and the
+                # deferred MetricsPump would then account garbage sizes
+                raise RuntimeError(
+                    "CommLog.log_round(global_state=None) requires "
+                    "bind_sizes(global_state) to have been called first")
             model_b, fusion_b = self._model_b, self._fusion_b
         else:
             model_b = tree_bytes(global_state["model"])

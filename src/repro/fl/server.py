@@ -91,7 +91,9 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   callback: Optional[Callable] = None,
                   superstep_rounds=8,
                   prefetch: bool = True, mesh=None,
-                  overlap_eval: bool = True) -> ServerResult:
+                  overlap_eval: bool = True,
+                  fused_collective: bool = True,
+                  sharded_eval: bool = True) -> ServerResult:
     """Back-compat wrapper over :class:`repro.fl.api.FederatedTrainer`.
 
     The flat kwargs map 1:1 onto the grouped ``RunOptions`` fields (see
@@ -110,7 +112,9 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                                      every=checkpoint_every),
         engine=EngineOptions(superstep_rounds=superstep_rounds,
                              prefetch=prefetch, mesh=mesh,
-                             overlap_eval=overlap_eval))
+                             overlap_eval=overlap_eval,
+                             fused_collective=fused_collective,
+                             sharded_eval=sharded_eval))
     return FederatedTrainer(bundle, fl, data, opts).fit(rounds,
                                                         callback=callback)
 

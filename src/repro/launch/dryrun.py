@@ -103,28 +103,35 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
 
 
 def run_superstep(multi_pod: bool, compressed: bool = True,
-                  save: bool = True, n_rounds: int = 8) -> dict:
+                  save: bool = True, n_rounds: int = 8,
+                  fused: bool = True, sharded_eval: bool = True) -> dict:
     """Dry-run the SHARDED federated superstep on a production mesh.
 
     Lowers (never compiles — no real devices needed beyond the forced
     host placeholders) the ``shard_map``-wrapped K-round superstep with
     abstract chunk arguments: the client axis over ``data``/``pod``, the
-    full-federation EF table row-sharded by client id.  Catches sharding
-    -spec and shape regressions of ``repro.engine.sharded`` against the
-    16x16 / 2x16x16 meshes on a CPU box.
+    full-federation EF table row-sharded by client id in the resident
+    scratch-row layout, shard-split evaluation folded into the scan, and
+    the fused one-psum-per-round collective on by default (``fused=False``
+    lowers the three-collective oracle).  Catches sharding-spec and shape
+    regressions of ``repro.engine.sharded`` against the 16x16 / 2x16x16
+    meshes on a CPU box.
     """
     import dataclasses
     import jax.numpy as jnp
     from repro.compress import make_codec
     from repro.configs import CNN_CONFIGS
     from repro.core.rounds import init_global_state
+    from repro.engine.evaljit import make_eval_fn
     from repro.engine.sharded import client_sharding, make_sharded_superstep
-    from repro.launch.sharding import chunk_shardings, ef_table_sharding
+    from repro.launch.sharding import (chunk_shardings, ef_table_sharding,
+                                       eval_batch_sharding)
     from repro.models.registry import make_bundle
 
     mesh_name = "2x16x16" if multi_pod else "16x16"
     rec = {"arch": "cnn_mnist", "shape": "superstep", "mesh": mesh_name,
-           "tag": "topk" if compressed else "plain"}
+           "tag": ("topk" if compressed else "plain")
+                  + ("" if fused else "-unfused")}
     t0 = time.time()
     try:
         mesh = make_production_mesh(multi_pod=multi_pod)
@@ -148,29 +155,47 @@ def run_superstep(multi_pod: bool, compressed: bool = True,
         sizes = jax.ShapeDtypeStruct((K, C), jnp.float32)
         lrs = jax.ShapeDtypeStruct((K,), jnp.float32)
         sh_batch, sh_repl = chunk_shardings(mesh)
+        # eval folded into the scan, batch split over the client shards
+        eval_fn = (make_eval_fn(bundle, fl, shard=shard)
+                   if sharded_eval else None)
+        bucket = 512                  # divides 16 and 32 client shards
+        test_args = ()
+        test_sh = ()
+        if sharded_eval:
+            test_args = (
+                {"x": jax.ShapeDtypeStruct((bucket, H, W, Ch), jnp.float32),
+                 "y": jax.ShapeDtypeStruct((bucket,), jnp.int32)},
+                jax.ShapeDtypeStruct((bucket,), jnp.bool_))
+            ev_sh = eval_batch_sharding(mesh)
+            test_sh = (ev_sh, ev_sh)
 
         if compressed:
             uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac)
             downlink = make_codec(fl.downlink_codec)
             uplink.bind(state["model"])
             downlink.bind(state["model"])
-            ef = [jax.ShapeDtypeStruct((n_federation,) + z.shape, z.dtype)
+            # resident scratch-row layout: one extra row per shard block
+            n_loc = n_federation // shard.n_shards
+            ef = [jax.ShapeDtypeStruct(
+                      ((n_loc + 1) * shard.n_shards,) + z.shape, z.dtype)
                   for z in jax.eval_shape(uplink.init_state)]
             fn = make_sharded_superstep(bundle, fl, "client_parallel", K,
                                         mesh, uplink=uplink,
-                                        downlink=downlink)
+                                        downlink=downlink, eval_fn=eval_fn,
+                                        fused_collective=fused)
             args = (state, ef, state["model"], batches, sizes, lrs,
                     jax.ShapeDtypeStruct((K, C), jnp.int32),
                     jax.ShapeDtypeStruct((K,), jnp.int32),
-                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+                    jax.ShapeDtypeStruct((2,), jnp.uint32)) + test_args
             ef_sh = ef_table_sharding(mesh)
             in_sh = (sh_repl, ef_sh, sh_repl, sh_batch, sh_batch, sh_repl,
-                     sh_repl, sh_repl, sh_repl)
+                     sh_repl, sh_repl, sh_repl) + test_sh
         else:
             fn = make_sharded_superstep(bundle, fl, "client_parallel", K,
-                                        mesh)
-            args = (state, batches, sizes, lrs)
-            in_sh = (sh_repl, sh_batch, sh_batch, sh_repl)
+                                        mesh, eval_fn=eval_fn,
+                                        fused_collective=fused)
+            args = (state, batches, sizes, lrs) + test_args
+            in_sh = (sh_repl, sh_batch, sh_batch, sh_repl) + test_sh
 
         with mesh_context(mesh):
             lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
@@ -178,9 +203,11 @@ def run_superstep(multi_pod: bool, compressed: bool = True,
         rec.update(
             status="ok",
             t_lower_s=round(time.time() - t0, 1),
+            fused_collective=fused,
+            sharded_eval=sharded_eval,
             client_shards=shard.n_shards,
             clients_per_shard=n_clients_round // shard.n_shards,
-            ef_rows_per_shard=(n_federation // shard.n_shards
+            ef_rows_per_shard=(n_federation // shard.n_shards + 1
                                if compressed else 0),
             out_avals=[str(x.shape) for x in jax.tree_util.tree_leaves(out)
                        ][:4],
@@ -237,18 +264,26 @@ def main() -> None:
 
     if args.superstep:
         pods = [True] if args.multi_pod else [False, True]
+        failed = False
         for mp in pods:
-            for compressed in (False, True):
-                rec = run_superstep(mp, compressed=compressed)
-                tag = f"{rec['mesh']:8s} {rec['tag']:6s}"
+            # fused one-psum path (the engine default) for plain + topk,
+            # plus the three-collective oracle layout on the compressed
+            # round (the fused path's equivalence baseline)
+            points = [(False, True), (True, True), (True, False)]
+            for compressed, fused in points:
+                rec = run_superstep(mp, compressed=compressed, fused=fused)
+                tag = f"{rec['mesh']:8s} {rec['tag']:13s}"
                 if rec["status"] == "ok":
                     print(f"superstep {tag} ok  lower={rec['t_lower_s']}s "
                           f"shards={rec['client_shards']} "
                           f"C/shard={rec['clients_per_shard']} "
                           f"ef-rows/shard={rec['ef_rows_per_shard']}")
                 else:
+                    failed = True
                     print(f"superstep {tag} ERROR {rec['error']}")
                     print(rec.get("traceback", ""))
+        if failed:
+            raise SystemExit(1)
         return
 
     if args.all:

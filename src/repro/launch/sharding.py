@@ -221,5 +221,27 @@ def chunk_shardings(mesh):
 
 
 def ef_table_sharding(mesh):
-    """Row sharding (by client id) for the full-federation EF table."""
+    """Row sharding (by client id) for the full-federation EF table.
+
+    The sharded engine stages the table in the RESIDENT scratch-row
+    layout: the global array is ``[(N_loc + 1) * S, ...]`` — each shard's
+    ``N_loc`` owned rows followed by one permanent scratch row that
+    absorbs non-owned scatter writes (``repro.engine.superstep``), so the
+    per-round EF scatter stays a single in-place aliased write under
+    donation.  ``repro.checkpoint.io.strip_scratch_rows`` /
+    ``insert_scratch_rows`` convert to/from the compact ``[N, ...]``
+    layout ``ef.npz`` keeps on disk.
+    """
+    return NamedSharding(mesh, P(client_axis_entry(mesh)))
+
+
+def eval_batch_sharding(mesh):
+    """Positional client-axis split for the padded eval batch and mask.
+
+    Dim 0 (examples) shards over the mesh's client axes; pad with
+    ``repro.engine.pad_eval_batch(shard=...)`` so the bucket divides.
+    Sharded evaluation forwards ``bucket / S`` examples per shard and
+    completes the masked metric sums with one psum
+    (``repro.engine.make_eval_fn(shard=...)``).
+    """
     return NamedSharding(mesh, P(client_axis_entry(mesh)))

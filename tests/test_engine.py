@@ -327,8 +327,9 @@ _SHARDED_GRID_SCRIPT = textwrap.dedent("""
     import sys
     import jax
     assert jax.device_count() == int(sys.argv[1]), jax.devices()
-    from test_engine import (SHARDED_CASES, _bundle, _sharded_data,
-                             _sharded_fl, assert_results_close)
+    from test_engine import (SHARDED_CASES, _assert_same, _bundle,
+                             _sharded_data, _sharded_fl,
+                             assert_results_close)
     from repro.fl.server import run_federated
     from repro.launch.mesh import make_engine_mesh
 
@@ -342,6 +343,13 @@ _SHARDED_GRID_SCRIPT = textwrap.dedent("""
                                 seed=1, eval_every=2, mode=mode,
                                 superstep_rounds=2, mesh=mesh)
         assert_results_close(single, sharded)
+        # the fused one-psum round must match the three-collective
+        # oracle BITWISE (models and full histories, eval included)
+        unfused = run_federated(_bundle(), fl, _sharded_data(), rounds=4,
+                                seed=1, eval_every=2, mode=mode,
+                                superstep_rounds=2, mesh=mesh,
+                                fused_collective=False)
+        _assert_same(unfused, sharded)
         print(f"case {case}: OK")
     print("SHARDED-OK")
 """)
@@ -375,6 +383,194 @@ def test_sharded_equivalence_forced_host_mesh(n_devices, cases):
     assert "SHARDED-OK" in out.stdout
 
 
+def _forced_host_env(n_devices):
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src")
+    env = dict(os.environ)
+    kept = [t for t in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in t]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n_devices}"])
+    env["REPRO_ALLOW_FORCED_DEVICES"] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+    return env
+
+
+@_multidevice
+@pytest.mark.parametrize("case", ["topk", "fusion-topk", "topk-seq"])
+def test_sharded_fused_collective_bitwise(case):
+    """Acceptance: the fused one-psum round == the three-collective
+    oracle BITWISE — final model and full CommLog history (bytes,
+    local_loss, eval metrics) — packing psum operands into one buffer is
+    a latency change, never a numerics change."""
+    from repro.launch.mesh import make_engine_mesh
+    mode, fl = _sharded_fl(case)
+    bundle = _bundle()
+    mesh = make_engine_mesh()
+    kw = dict(rounds=4, seed=1, eval_every=2, mode=mode,
+              superstep_rounds=2, mesh=mesh)
+    fused = run_federated(bundle, fl, _sharded_data(), fused_collective=True,
+                          **kw)
+    unfused = run_federated(bundle, fl, _sharded_data(),
+                            fused_collective=False, **kw)
+    _assert_same(unfused, fused)
+    assert fused.stats["fused_collective"]
+    assert not unfused.stats["fused_collective"]
+
+
+@_multidevice
+def test_sharded_eval_matches_replicated_eval():
+    """Sharded evaluation (batch split + masked-sum psum) vs the
+    replicated evaluator on the same mesh: training is untouched (models
+    bitwise-equal) and the eval metrics agree to float tolerance (the
+    split only reassociates the masked sums)."""
+    from repro.launch.mesh import make_engine_mesh
+    mode, fl = _sharded_fl("topk")
+    bundle = _bundle()
+    mesh = make_engine_mesh()
+    kw = dict(rounds=4, seed=1, eval_every=1, mode=mode,
+              superstep_rounds=2, mesh=mesh)
+    shd = run_federated(bundle, fl, _sharded_data(), sharded_eval=True, **kw)
+    repl = run_federated(bundle, fl, _sharded_data(), sharded_eval=False,
+                         **kw)
+    for a, b in zip(jax.tree.leaves(repl.global_state),
+                    jax.tree.leaves(shd.global_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert_results_close(repl, shd)
+    assert shd.stats["sharded_eval"] and not repl.stats["sharded_eval"]
+
+
+@_multidevice
+@pytest.mark.parametrize("resume_on_mesh", [False, True])
+def test_sharded_checkpoint_cross_layout_resume(tmp_path, resume_on_mesh):
+    """Resident-scratch-row round trip across layouts: a checkpoint saved
+    from the sharded [N_loc+1] table restores into BOTH the compact
+    single-device layout and the resident sharded layout (ef.npz stays
+    format-compatible), and the resumed two-phase run matches the
+    single-device two-phase oracle."""
+    from repro.launch.mesh import make_engine_mesh
+    _, fl = _sharded_fl("topk")
+    bundle = _bundle()
+    mesh = make_engine_mesh()
+    d = tmp_path / "ckpt"
+    kw = dict(seed=1, eval_every=4, superstep_rounds=3,
+              checkpoint_dir=str(d), checkpoint_every=2)
+    # phase 1 on the mesh -> ef.npz written from the resident layout
+    run_federated(bundle, fl, _sharded_data(), rounds=4, mesh=mesh, **kw)
+    # phase 2 restores into the other (or same) layout
+    two_phase = run_federated(bundle, fl, _sharded_data(), rounds=8,
+                              mesh=mesh if resume_on_mesh else None, **kw)
+    oracle = run_federated(bundle, fl, _sharded_data(), rounds=4, seed=1,
+                           eval_every=4, superstep_rounds=3,
+                           checkpoint_dir=str(tmp_path / "o"),
+                           checkpoint_every=2)
+    oracle = run_federated(bundle, fl, _sharded_data(), rounds=8, seed=1,
+                           eval_every=4, superstep_rounds=3,
+                           checkpoint_dir=str(tmp_path / "o"),
+                           checkpoint_every=2)
+    assert_results_close(oracle, two_phase)
+
+
+_ONE_PSUM_SCRIPT = textwrap.dedent("""
+    import sys
+    import jax
+    import jax.numpy as jnp
+    assert jax.device_count() == 2, jax.devices()
+    from test_engine import _bundle, _sharded_fl
+    from repro.compress import make_codec
+    from repro.core.rounds import init_global_state
+    from repro.engine.sharded import client_sharding, make_sharded_superstep
+    from repro.launch.mesh import make_engine_mesh
+
+    def count_psums(jaxpr):
+        n = 0
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "psum":
+                n += 1
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    if hasattr(j, "jaxpr"):
+                        n += count_psums(j.jaxpr)
+                    elif hasattr(j, "eqns"):
+                        n += count_psums(j)
+        return n
+
+    def scan_bodies(jaxpr, out):
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.append(eqn.params["jaxpr"].jaxpr)
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    inner = (j.jaxpr if hasattr(j, "jaxpr")
+                             else (j if hasattr(j, "eqns") else None))
+                    if inner is not None:
+                        scan_bodies(inner, out)
+        return out
+
+    mesh = make_engine_mesh()
+    shard = client_sharding(mesh)
+    mode, fl = _sharded_fl("topk")
+    bundle = _bundle()
+    uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac)
+    downlink = make_codec(fl.downlink_codec)
+    state = jax.eval_shape(lambda k: init_global_state(bundle, fl, k),
+                           jax.random.PRNGKey(0))
+    uplink.bind(state["model"])
+    downlink.bind(state["model"])
+    K, C, S, B = 4, fl.clients_per_round, fl.local_steps, fl.local_batch
+    n_loc = 8 // shard.n_shards
+    ef = [jax.ShapeDtypeStruct(
+              ((n_loc + 1) * shard.n_shards,) + z.shape, z.dtype)
+          for z in jax.eval_shape(uplink.init_state)]
+    args = (state, ef, state["model"],
+            {"x": jax.ShapeDtypeStruct((K, C, S, B, 8, 8, 1), jnp.float32),
+             "y": jax.ShapeDtypeStruct((K, C, S, B), jnp.int32)},
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, C), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    counts = {}
+    for fused in (True, False):
+        fn = make_sharded_superstep(bundle, fl, mode, K, mesh,
+                                    uplink=uplink, downlink=downlink,
+                                    fused_collective=fused)
+        jaxpr = jax.make_jaxpr(fn)(*args)
+        bodies = scan_bodies(jaxpr.jaxpr, [])
+        # the K-round loop is the scan whose body holds the most eqns
+        # (inner scans are the per-client / per-step training loops)
+        body = max(bodies, key=lambda b: len(b.eqns))
+        counts[fused] = (count_psums(body), count_psums(jaxpr.jaxpr))
+    per_round, total = counts[True]
+    assert per_round == 1, f"fused round body has {per_round} psums"
+    # one prologue psum per chunk (round 0's EF gather + weight total)
+    assert total == 2, f"fused superstep has {total} psums"
+    assert counts[False][0] >= 3, counts  # the three-collective oracle
+    print(f"fused: {per_round} psum/round ({total} total); "
+          f"unfused round body: {counts[False][0]} psums")
+    print("ONE-PSUM-OK")
+""")
+
+
+def test_fused_superstep_one_psum_per_round():
+    """Acceptance: with fused_collective=True the compressed sharded
+    round executes exactly ONE psum per round — asserted by counting psum
+    eqns in the K-round scan body's jaxpr on a forced 2-device host (the
+    chunk adds a single prologue psum)."""
+    env = _forced_host_env(2)
+    out = subprocess.run([sys.executable, "-c", _ONE_PSUM_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ONE-PSUM-OK" in out.stdout
+
+
 def test_jitted_evaluate_matches_eager():
     """The pad-and-mask jitted evaluator equals the uncompiled original."""
     bundle = _bundle()
@@ -399,6 +595,104 @@ def test_jitted_evaluate_respects_max_examples():
     slow = _evaluate_eager(bundle, fl, state, batch, max_examples=8)
     for k in fast:
         np.testing.assert_allclose(fast[k], slow[k], rtol=1e-5, atol=1e-6)
+
+
+def test_pad_eval_batch_empty_raises():
+    """Regression: an empty test batch used to produce bucket=1 with an
+    all-false mask — metrics silently degenerate instead of erroring."""
+    from repro.engine import pad_eval_batch
+    empty = {"x": np.zeros((0, 8, 8, 1), np.float32),
+             "y": np.zeros((0,), np.int32)}
+    with pytest.raises(ValueError, match="0 examples"):
+        pad_eval_batch(empty)
+
+
+def test_pad_eval_batch_shard_divisible():
+    """pad_eval_batch(shard=) rounds the bucket up to a multiple of the
+    shard count; the extra rows are masked pad."""
+    from repro.engine import pad_eval_batch
+    batch = {"x": np.ones((5, 8, 8, 1), np.float32),
+             "y": np.ones((5,), np.int32)}
+    padded, mask = pad_eval_batch(batch, shard=3)
+    assert padded["x"].shape[0] % 3 == 0
+    assert int(np.sum(np.asarray(mask))) == 5
+    # unsharded: unchanged power-of-two bucketing
+    padded, mask = pad_eval_batch(batch)
+    assert padded["x"].shape[0] == 8
+
+
+def test_masked_metric_sums_match_means():
+    """The psum-able masked sums divide back to the masked means."""
+    import jax.numpy as jnp
+    from repro.core import (masked_accuracy, masked_accuracy_sum,
+                            masked_cross_entropy, masked_cross_entropy_sum)
+    key = jax.random.PRNGKey(1)
+    logits = jax.random.normal(key, (8, 5))
+    labels = jax.random.randint(key, (8,), 0, 5)
+    mask = jnp.arange(8) < 6
+    c, w = masked_accuracy_sum(logits, labels, mask)
+    assert float(w) == 6.0
+    np.testing.assert_allclose(float(c) / float(w),
+                               float(masked_accuracy(logits, labels, mask)),
+                               rtol=1e-6)
+    ce, w2 = masked_cross_entropy_sum(logits, labels, mask)
+    np.testing.assert_allclose(
+        float(ce) / float(w2),
+        float(masked_cross_entropy(logits, labels, mask)), rtol=1e-6)
+
+
+def _pump_comm():
+    from repro.fl.comm import CommLog
+    return CommLog().bind_sizes({"model": {"w": np.zeros(4, np.float32)}})
+
+
+def test_metrics_pump_empty_stack():
+    """Regression: an empty metrics stack raised bare StopIteration from
+    ``next(iter(stack.values()))`` inside the worker drain."""
+    from repro.engine import MetricsPump
+    comm = _pump_comm()
+    pump = MetricsPump(comm, 2)
+    pump.submit({}, None)                      # no per-round metrics
+    pump.submit({}, {"acc": np.float32(0.5)})  # eval-only chunk
+    pump.close()
+    assert comm.rounds == 1                    # the eval-only round logged
+    assert comm.history[-1]["acc"] == 0.5
+
+
+def test_metrics_pump_verbose_nonfloat(capsys):
+    """Regression: verbose formatting crashed with ``:.4f`` on non-float
+    metric values (e.g. a per-class vector)."""
+    from repro.engine import MetricsPump
+    comm = _pump_comm()
+    pump = MetricsPump(comm, 2, verbose=True)
+    pump.submit({"local_loss": np.ones((2,), np.float32),
+                 "per_class": np.arange(6, dtype=np.int32).reshape(2, 3)},
+                None)
+    pump.close()
+    out = capsys.readouterr().out
+    assert comm.rounds == 2
+    assert "local_loss=1.0000" in out
+    assert "per_class=" in out
+    np.testing.assert_array_equal(comm.history[-1]["per_class"], [3, 4, 5])
+
+
+def test_ef_scratch_row_layout_round_trip():
+    """checkpoint.io strip/insert are exact inverses and keep ef.npz in
+    the compact [N, ...] layout; scratch rows restore as zeros at the end
+    of every shard block."""
+    from repro.checkpoint.io import insert_scratch_rows, strip_scratch_rows
+    rng = np.random.default_rng(0)
+    compact = {"a": rng.normal(size=(8, 5)).astype(np.float32),
+               "b": rng.normal(size=(8,)).astype(np.float32)}
+    for s in (1, 2, 4):
+        resident = insert_scratch_rows(compact, s)
+        for k in compact:
+            assert resident[k].shape[0] == 8 + s
+        back = strip_scratch_rows(resident, s)
+        for k in compact:
+            np.testing.assert_array_equal(back[k], compact[k])
+    blocks = insert_scratch_rows(compact, 4)["a"].reshape(4, 3, 5)
+    assert (blocks[:, -1] == 0).all()
 
 
 def test_masked_metrics_ignore_padding():

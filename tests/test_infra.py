@@ -109,6 +109,29 @@ def test_commlog_rounds_to_milestone():
     assert log.rounds_to("acc", 0.99) == -1
 
 
+def test_commlog_log_round_without_bind_sizes_raises():
+    """Regression: deferred logging (global_state=None) before bind_sizes
+    must raise a real RuntimeError, not a strippable assert."""
+    with pytest.raises(RuntimeError, match="bind_sizes"):
+        CommLog().log_round(None, 4, {})
+
+
+def test_commlog_size_fields_are_honest_optionals():
+    """Regression: the cached wire sizes default to None, so their
+    annotations must be Optional[int] — ``int = None`` breaks typed
+    dataclass introspection (get_type_hints-based tooling)."""
+    import typing
+    hints = typing.get_type_hints(CommLog)
+    assert hints["_model_b"] == typing.Optional[int]
+    assert hints["_fusion_b"] == typing.Optional[int]
+    log = CommLog()
+    assert log._model_b is None and log._fusion_b is None
+    state = {"model": {"w": jnp.zeros(3)}}
+    assert isinstance(log.bind_sizes(state)._model_b, int)
+    log.log_round(None, 2, {"acc": 0.5})      # bound -> logs fine
+    assert log.history[-1]["acc"] == 0.5
+
+
 # ---------------------------------------------------------------------------
 # Sharding rules (structure-level; the 256/512-device check is the dry-run)
 # ---------------------------------------------------------------------------
