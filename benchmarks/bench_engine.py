@@ -310,6 +310,47 @@ def run_eval_overlap(quick: bool, cfg, bundle) -> dict:
     return out
 
 
+def run_observability(quick, cfg, bundle, out_dir,
+                      profile_dir=None) -> dict:
+    """Instrumented engine run (repro.obs): telemetry taps + runlog span
+    tracing on the topk workload, emitting the run's JSONL artifacts
+    (``runlog.jsonl`` / ``comm.jsonl``) next to the report and embedding
+    the round-time breakdown in it.  Also measures the telemetry on/off
+    throughput ratio — informational, since the bitwise contract
+    (tests/test_obs.py) already pins that "on" only adds tap arithmetic
+    to the existing round program.
+    """
+    from repro.obs import RunLog, build_report
+    fl = next(f for name, f in _configs(quick) if name == "fedavgxtopk")
+    rounds = 50 if quick else 24
+    os.makedirs(out_dir, exist_ok=True)
+    runlog_path = os.path.join(out_dir, "runlog.jsonl")
+    comm_path = os.path.join(out_dir, "comm.jsonl")
+
+    res = run_federated(bundle, fl, _data(cfg, quick), rounds=rounds,
+                        seed=0, eval_every=1,
+                        eval_examples=32 if quick else 2048,
+                        superstep_rounds=10, telemetry=True,
+                        runlog=runlog_path, profile_dir=profile_dir)
+    res.comm.save(comm_path)
+    report = build_report(RunLog.load(runlog_path), res.comm.to_records())
+
+    def run_tele(rounds, on):
+        return run_federated(bundle, fl, _data(cfg, quick), rounds=rounds,
+                             seed=0, eval_every=1,
+                             eval_examples=32 if quick else 2048,
+                             superstep_rounds=SUPERSTEP, telemetry=on)
+
+    rps_off, _ = _rps(lambda r: run_tele(r, False), 25, 100 if quick else 50)
+    rps_on, _ = _rps(lambda r: run_tele(r, True), 25, 100 if quick else 50)
+    return {"round_time": report["round_time"],
+            "telemetry": {"rps_off": round(rps_off, 2),
+                          "rps_on": round(rps_on, 2),
+                          "on_off_ratio": round(rps_on / max(rps_off, 1e-9),
+                                                3)},
+            "artifacts": {"runlog": runlog_path, "comm": comm_path}}
+
+
 def check_bitwise(bundle, fl, cfg, quick) -> bool:
     """Acceptance: K=1 engine model bitwise-equals the reference loop."""
     ref = run_federated_reference(bundle, fl, _data(cfg, quick), rounds=6,
@@ -320,7 +361,8 @@ def check_bitwise(bundle, fl, cfg, quick) -> bool:
         jax.tree.leaves(ref.global_state), jax.tree.leaves(eng.global_state)))
 
 
-def run(quick: bool = True, r1: int = None, r2: int = None):
+def run(quick: bool = True, r1: int = None, r2: int = None,
+        out_dir: str = None, profile_dir: str = None):
     cfg = _bundle(quick)
     bundle = make_bundle(cfg)
     r1 = r1 or SUPERSTEP
@@ -355,6 +397,8 @@ def run(quick: bool = True, r1: int = None, r2: int = None):
                          _data(cfg, quick), rounds=8, seed=0,
                          eval_every=0, superstep_rounds="auto")
     overlap = run_eval_overlap(quick, cfg, bundle)
+    obs = run_observability(quick, cfg, bundle, out_dir or ART_DIR,
+                            profile_dir=profile_dir)
     report = {
         "host": {"platform": platform.platform(),
                  "device": jax.devices()[0].platform,
@@ -368,6 +412,7 @@ def run(quick: bool = True, r1: int = None, r2: int = None):
         "k1_bitwise_equal": bool(bitwise),
         "adaptive_chunk_rounds": auto.stats["chunk_rounds"],
         "eval_overlap": overlap,
+        "observability": obs,
     }
     print_table("engine vs pre-PR loop (rounds/sec)", rows)
     print(f"geomean speedup: {geomean:.2f}x   "
@@ -376,6 +421,12 @@ def run(quick: bool = True, r1: int = None, r2: int = None):
           f"eval-overlap ratio: {overlap['overlap_ratio']}x "
           f"(host wait {overlap['host_wait_s_overlap']}s vs "
           f"{overlap['host_wait_s_blocking']}s blocking)")
+    rt = obs["round_time"]
+    print(f"round-time breakdown: dispatch={rt['dispatch_s']}s "
+          f"metrics={rt['metrics_drain_s']}s "
+          f"prefetch-stall={rt['prefetch_stall_s']}s "
+          f"eval={rt['eval_s']}s of wall={rt['wall_s']}s   "
+          f"telemetry on/off: {obs['telemetry']['on_off_ratio']}x")
     return report
 
 
@@ -395,6 +446,9 @@ def main():
                     help="run the mesh point per device count in "
                          "subprocesses and add 'mesh_scaling' to the "
                          "report")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="write a jax.profiler trace of the instrumented "
+                         "observability run into DIR")
     args = ap.parse_args()
 
     if args.mesh:
@@ -406,7 +460,9 @@ def main():
         print(f"wrote {args.out}")
         return
 
-    report = run(quick=args.quick)
+    report = run(quick=args.quick,
+                 out_dir=os.path.dirname(args.out) or ".",
+                 profile_dir=args.profile)
     if args.mesh_sweep:
         devices = [int(d) for d in
                    args.mesh_sweep.split("=", 1)[1].split(",")]

@@ -70,6 +70,19 @@ def run_fl(bundle, data: FederatedDataset, fl: FLConfig, rounds: int,
                          eval_every=eval_every)
 
 
+def round_records(comm, save_as: str = None) -> List[Dict]:
+    """A run's per-round history as plain-JSON records
+    (``CommLog.to_records`` — the repro.obs serializer, so numpy scalars
+    are already host types).  ``save_as`` additionally streams the full
+    record set (rounds + summary) as JSONL under the artifacts dir, the
+    same file format ``repro.obs.report``/``benchmarks.obs_report``
+    consume."""
+    if save_as:
+        os.makedirs(ART_DIR, exist_ok=True)
+        comm.save(os.path.join(ART_DIR, save_as))
+    return [r for r in comm.to_records() if r["kind"] == "round"]
+
+
 def rounds_to_acc(history: List[Dict], target: float) -> int:
     for h in history:
         if h.get("acc", -1) >= target:

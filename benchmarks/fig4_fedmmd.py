@@ -15,7 +15,8 @@ from repro.data.partition import (artificial_noniid_partition,
                                   class_split_partition, iid_partition)
 
 from benchmarks.common import (bench_cnn, best_acc, cifar_like, mnist_like,
-                               print_table, rounds_to_acc, run_fl, write_csv)
+                               print_table, round_records, rounds_to_acc,
+                               run_fl, write_csv)
 
 ALGOS = ("fedavg", "fedmmd", "fedl2")
 
@@ -26,7 +27,7 @@ def _panel(name, bundle, data, fl_base, rounds, target, seed=0):
         import dataclasses
         fl = dataclasses.replace(fl_base, algorithm=algo)
         res = run_fl(bundle, data, fl, rounds, seed=seed)
-        hist = res.comm.history
+        hist = round_records(res.comm, save_as=f"fig4_{name}_{algo}.jsonl")
         rows.append({
             "panel": name, "algorithm": algo,
             "rounds_to_target": rounds_to_acc(hist, target),

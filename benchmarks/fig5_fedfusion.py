@@ -17,7 +17,8 @@ from repro.data.partition import (artificial_noniid_partition, iid_partition,
 
 from benchmarks.common import (bench_cnn, best_acc, cifar_like, mnist_like,
                                permuted_union_test, print_table,
-                               rounds_to_acc, run_fl, write_csv)
+                               round_records, rounds_to_acc, run_fl,
+                               write_csv)
 
 VARIANTS = (("fedavg", "none"), ("fedfusion", "single"),
             ("fedfusion", "multi"), ("fedfusion", "conv"))
@@ -28,11 +29,12 @@ def _panel(name, bundle, data, fl_base, rounds, target, seed=0):
     for algo, op in VARIANTS:
         fl = dataclasses.replace(fl_base, algorithm=algo,
                                  fusion_op=op if op != "none" else "multi")
+        variant = op if algo == "fedfusion" else "fedavg"
         res = run_fl(bundle, data, fl, rounds, seed=seed)
-        hist = res.comm.history
+        hist = round_records(res.comm, save_as=f"fig5_{name}_{variant}.jsonl")
         rows.append({
             "panel": name,
-            "variant": op if algo == "fedfusion" else "fedavg",
+            "variant": variant,
             "rounds_to_target": rounds_to_acc(hist, target),
             "target": target,
             "best_acc": round(best_acc(hist), 4),      # Table 1 analogue

@@ -10,23 +10,24 @@ and no accuracy loss.
 """
 from __future__ import annotations
 
+from typing import Dict, List
+
 from repro.configs.base import FLConfig
 from repro.data.federated import FederatedDataset
 from repro.data.partition import artificial_noniid_partition
-from repro.fl.comm import CommLog
 
 from benchmarks.common import (bench_cnn, best_acc, mnist_like, print_table,
-                               run_fl, write_csv)
+                               round_records, run_fl, write_csv)
 
 ALGOS = ("fedavg", "fedmmd", "fedfusion")
 CODECS = ("identity", "int8", "topk")
 TOPK_FRAC = 1.0 / 16.0
 
 
-def bytes_to_acc(comm: CommLog, target: float) -> int:
+def bytes_to_acc(hist: List[Dict], target: float) -> int:
     """Cumulative uplink bytes when the milestone is first reached (-1 if
     never)."""
-    for h in comm.history:
+    for h in hist:
         if h.get("acc", -1.0) >= target:
             return h["cum_bytes_up"]
     return -1
@@ -52,8 +53,9 @@ def run(quick: bool = True):
                           local_batch=32, lr=0.06, lr_decay=0.99,
                           uplink_codec=codec, topk_frac=TOPK_FRAC)
             res = run_fl(bundle, data, fl, rounds)
-            hist = res.comm.history
-            b = bytes_to_acc(res.comm, milestone)
+            hist = round_records(res.comm,
+                                 save_as=f"fig7_{algo}_{codec}.jsonl")
+            b = bytes_to_acc(hist, milestone)
             row = {"algo": algo, "uplink": codec,
                    "best_acc": round(best_acc(hist), 4),
                    "mb_up_total": round(res.comm.bytes_up / 1e6, 3),

@@ -1,0 +1,57 @@
+"""CLI over ``repro.obs.report``: run JSONL files -> a readable report.
+
+Feed it the two artifacts an instrumented engine run leaves behind —
+the :class:`repro.obs.RunLog` span/event stream (``--runlog``) and the
+:meth:`repro.fl.comm.CommLog.save` round history (``--comm``); either
+alone works.  Prints the rendered report and, with ``--out``, writes the
+full report dict as JSON (the same shape ``bench_engine.py`` embeds
+under its ``observability`` key).
+
+    PYTHONPATH=src python -m benchmarks.obs_report \
+        --runlog benchmarks/artifacts/runlog.jsonl \
+        --comm benchmarks/artifacts/comm.jsonl
+
+Stdlib-only on purpose: reports must be buildable on any machine the
+JSONL was copied to, no jax required.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.obs.report import build_report, render
+
+
+def _load_jsonl(path):
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="summarize an instrumented engine run")
+    ap.add_argument("--runlog", default=None, metavar="JSONL",
+                    help="RunLog span/event stream (engine runlog=PATH)")
+    ap.add_argument("--comm", default=None, metavar="JSONL",
+                    help="CommLog.save round history")
+    ap.add_argument("--out", default=None, metavar="JSON",
+                    help="also write the report dict as JSON")
+    args = ap.parse_args()
+    if not args.runlog and not args.comm:
+        ap.error("need --runlog and/or --comm")
+
+    runlog_records = _load_jsonl(args.runlog) if args.runlog else None
+    comm_records = None
+    if args.comm:
+        comm_records = [r for r in _load_jsonl(args.comm)
+                        if r.get("kind") == "round"]
+    report = build_report(runlog_records, comm_records)
+    print(render(report))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,7 +16,8 @@ from repro.data.partition import permuted_partition
 
 from benchmarks.common import (bench_cnn, best_acc, mnist_like,
                                permuted_union_test, print_table,
-                               rounds_to_acc, run_fl, write_csv)
+                               round_records, rounds_to_acc, run_fl,
+                               write_csv)
 
 VARIANTS = (("fedavg", "none"), ("fedfusion", "single"),
             ("fedfusion", "multi"), ("fedfusion", "conv"))
@@ -39,9 +40,10 @@ def run(quick: bool = True):
                       fusion_op=op if op != "none" else "multi",
                       clients_per_round=4, local_steps=4, local_batch=32,
                       lr=0.06, lr_decay=0.99)
+        variant = op if algo == "fedfusion" else "fedavg"
         res = run_fl(bundle, data, fl, rounds)
-        hist = res.comm.history
-        row = {"variant": op if algo == "fedfusion" else "fedavg",
+        hist = round_records(res.comm, save_as=f"table2_{variant}.jsonl")
+        row = {"variant": variant,
                "best_acc": round(best_acc(hist), 4)}
         for m in milestones:
             row[f"rounds_to_{int(m*100)}"] = rounds_to_acc(hist, m)

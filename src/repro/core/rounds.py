@@ -72,6 +72,8 @@ from repro.core.aggregate import (ClientSharding, mean_over_clients,
                                   running_update, zeros_like_tree)
 from repro.core.local import _algorithm, make_local_trainer
 from repro.models.registry import ModelBundle
+# repro.obs sits at the bottom of the import graph (jax only) — no cycle
+from repro.obs.telemetry import ClientTapCtx
 
 
 def _local_client_keys(key, n_local: int, shard: Optional[ClientSharding]):
@@ -89,7 +91,13 @@ def _local_client_keys(key, n_local: int, shard: Optional[ClientSharding]):
     return jax.lax.dynamic_slice_in_dim(full, start, n_local, axis=0)
 
 
-_RESERVED_CONTRIB_KEYS = frozenset(("model", "delta", "loss"))
+_RESERVED_CONTRIB_KEYS = frozenset(("model", "delta", "loss", "tele"))
+
+
+def _sum_clients(tele):
+    """[C]-stacked per-client tap sums -> this shard's scalar sums (the
+    psum-pending half of the round's telemetry; {} passes through)."""
+    return {k: jnp.sum(v, axis=0) for k, v in tele.items()}
 
 
 def _check_extra_keys(extra_keys):
@@ -113,88 +121,135 @@ def _weighted_sums(stacked, weights):
 
 
 def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
-                        impl="auto"):
+                        impl="auto", telemetry=None):
     """Shared client-side computation of one uncompressed round.
 
-    Returns ``run_clients(global_state, client_batches, weights, lr) ->
-    (wsums, stacked_extras, losses)``: ``wsums`` holds this shard's
-    weighted sums ``{"model": tree, **extras}`` (psum-pending), and
-    ``stacked_extras`` the per-client extras (client_parallel only; the
-    sequential scan only materializes the running sums).
+    Returns ``run_clients(global_state, client_batches, weights, lr,
+    n_examples) -> (wsums, stacked_extras, losses, tele)``: ``wsums``
+    holds this shard's weighted sums ``{"model": tree, **extras}``
+    (psum-pending), ``stacked_extras`` the per-client extras
+    (client_parallel only; the sequential scan only materializes the
+    running sums), and ``tele`` this shard's telemetry tap sums
+    (psum-pending scalars; ``{}`` with ``telemetry=None`` — the code path
+    is then byte-identical to the untapped one).
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
     extra_keys = algo.extra_state
 
-    def run_clients(global_state, client_batches, weights, lr):
+    def run_clients(global_state, client_batches, weights, lr,
+                    n_examples=None):
         gm = global_state["model"]
         gx = algo.extra_from_state(global_state)
 
         if mode == "client_parallel":
-            def train_one(batches):
-                return trainer(gm, gx, batches, lr)
+            if telemetry is None:
+                def train_one(batches):
+                    return trainer(gm, gx, batches, lr)
 
-            trainables, losses = jax.vmap(train_one)(client_batches)
+                trainables, losses = jax.vmap(train_one)(client_batches)
+                tele = {}
+            else:
+                def train_one(batches, nex):
+                    trainable, loss = trainer(gm, gx, batches, lr)
+                    t = telemetry.client_sums(ClientTapCtx(
+                        n_examples=nex, loss=loss,
+                        model=trainable["model"], global_model=gm))
+                    return trainable, loss, t
+
+                trainables, losses, tele_c = jax.vmap(train_one)(
+                    client_batches, n_examples)
+                tele = _sum_clients(tele_c)
             wsums = {"model": _weighted_sums(trainables["model"], weights)}
             for k in extra_keys:
                 wsums[k] = _weighted_sums(trainables[k], weights)
-            return wsums, {k: trainables[k] for k in extra_keys}, losses
+            return (wsums, {k: trainables[k] for k in extra_keys}, losses,
+                    tele)
 
         acc0 = {"model": zeros_like_tree(gm)}
         for k in extra_keys:
             acc0[k] = zeros_like_tree(global_state[k])
 
-        def body(acc, xs):
-            batches, w = xs
-            trainable, loss = trainer(gm, gx, batches, lr)
-            # accumulate the weighted client params (and extras — e.g.
-            # fusion gates; the plugin's EMA etc. applies after the sum)
-            acc = {k: running_update(acc[k], trainable[k], w) for k in acc}
-            return acc, loss
+        if telemetry is None:
+            def body(acc, xs):
+                batches, w = xs
+                trainable, loss = trainer(gm, gx, batches, lr)
+                # accumulate the weighted client params (and extras — e.g.
+                # fusion gates; the plugin's EMA etc. applies after the sum)
+                acc = {k: running_update(acc[k], trainable[k], w)
+                       for k in acc}
+                return acc, loss
 
-        acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
-        return acc, None, losses
+            acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
+            return acc, None, losses, {}
+
+        def body(acc, xs):
+            batches, w, nex = xs
+            trainable, loss = trainer(gm, gx, batches, lr)
+            acc = {k: running_update(acc[k], trainable[k], w) for k in acc}
+            t = telemetry.client_sums(ClientTapCtx(
+                n_examples=nex, loss=loss, model=trainable["model"],
+                global_model=gm))
+            return acc, (loss, t)
+
+        acc, (losses, tele_c) = jax.lax.scan(
+            body, acc0, (client_batches, weights, n_examples))
+        return acc, None, losses, _sum_clients(tele_c)
 
     return run_clients
 
 
 def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
-                  impl="auto", shard: Optional[ClientSharding] = None):
+                  impl="auto", shard: Optional[ClientSharding] = None,
+                  telemetry=None):
     """Returns round_fn(global_state, client_batches, n_examples, lr).
 
     ``client_batches``: pytree with leading dims [n_clients, local_steps, ...].
     ``n_examples``: [n_clients] float (n_t weighting).
     Under ``shard`` both carry only this shard's clients.
+
+    ``telemetry`` (a :class:`repro.obs.telemetry.Telemetry`) adds
+    ``tele/...`` entries to the round metrics; the tap sums ride the
+    aggregation psum the round already performs (``psum`` of a tree is one
+    collective regardless of leaf count, and elementwise reduction keeps
+    the pre-existing leaves' bits), so the round stays one-psum and
+    bitwise-equal to the untapped build.
     """
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
-    run_clients = _make_plain_clients(bundle, fl, mode, impl=impl)
+    run_clients = _make_plain_clients(bundle, fl, mode, impl=impl,
+                                      telemetry=telemetry)
 
     def round_fn(global_state, client_batches, n_examples, lr):
         weights = normalize_weights(n_examples, shard)
-        wsums, stacked_extras, losses = run_clients(
-            global_state, client_batches, weights, lr)
+        wsums, stacked_extras, losses, tele = run_clients(
+            global_state, client_batches, weights, lr, n_examples)
         if mode == "client_parallel":
-            new_state: Dict[str, Any] = {
-                "model": psum_tree(wsums["model"], shard)}
+            # tele rides the model-sum psum: same single collective
+            summed = psum_tree({"model": wsums["model"], "tele": tele},
+                               shard)
+            new_state: Dict[str, Any] = {"model": summed["model"]}
             new_state.update(algo.aggregate_extras(fl, global_state,
                                                    stacked_extras, weights,
                                                    shard=shard))
         else:
             # the running sums covered this shard's clients; one psum per
             # tree completes them over the round (no-op when unsharded)
-            acc = psum_tree(wsums, shard)
-            new_state = {"model": acc["model"]}
+            summed = psum_tree({**wsums, "tele": tele}, shard)
+            new_state = {"model": summed["model"]}
             new_state.update(algo.finalize_extra_sums(
-                fl, global_state, {k: acc[k] for k in extra_keys}))
-        return new_state, {"local_loss": mean_over_clients(losses, shard)}
+                fl, global_state, {k: summed[k] for k in extra_keys}))
+        metrics = {"local_loss": mean_over_clients(losses, shard)}
+        if telemetry is not None:
+            metrics.update(telemetry.finish(summed["tele"]))
+        return new_state, metrics
 
     return round_fn
 
 
 def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
-                     impl="auto", shard: ClientSharding):
+                     impl="auto", shard: ClientSharding, telemetry=None):
     """Deferred-psum split of :func:`make_round_fn` (fused collectives).
 
     Returns ``(local_fn, finish_fn)``:
@@ -211,30 +266,39 @@ def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     ``finalize_extra_sums`` — for weighted-sum-then-postprocess
     aggregations (every in-tree plugin) that is op-for-op the tail of
     ``aggregate_extras``, keeping fused == unfused bitwise.
+
+    ``telemetry`` taps contribute a ``"tele"`` sub-dict to ``contribs`` —
+    a few extra f32 scalars riding the superstep's single fused psum —
+    and their finalized ``tele/...`` metrics to ``finish_fn``'s output.
     """
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
     _check_extra_keys(extra_keys)
-    run_clients = _make_plain_clients(bundle, fl, mode, impl=impl)
+    run_clients = _make_plain_clients(bundle, fl, mode, impl=impl,
+                                      telemetry=telemetry)
 
     def local_fn(global_state, client_batches, total, n_examples, lr):
         weights = jnp.asarray(n_examples, jnp.float32) / total
-        wsums, _, losses = run_clients(global_state, client_batches,
-                                       weights, lr)
-        return {**wsums, "loss": jnp.mean(losses)}
+        wsums, _, losses, tele = run_clients(global_state, client_batches,
+                                             weights, lr, n_examples)
+        return {**wsums, "loss": jnp.mean(losses), "tele": tele}
 
     def finish_fn(global_state, summed):
         new_state: Dict[str, Any] = {"model": summed["model"]}
         new_state.update(algo.finalize_extra_sums(
             fl, global_state, {k: summed[k] for k in extra_keys}))
-        return new_state, {"local_loss": summed["loss"] / shard.n_shards}
+        metrics = {"local_loss": summed["loss"] / shard.n_shards}
+        if telemetry is not None:
+            metrics.update(telemetry.finish(summed["tele"]))
+        return new_state, metrics
 
     return local_fn, finish_fn
 
 
 def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
                              uplink, downlink, *, impl="auto",
-                             shard: Optional[ClientSharding] = None):
+                             shard: Optional[ClientSharding] = None,
+                             telemetry=None):
     """A federated round with the wire path routed through codecs.
 
     Returns round_fn(global_state, client_batches, n_examples, lr,
@@ -277,19 +341,23 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
     run_clients = _make_compressed_clients(bundle, fl, mode, uplink,
-                                           downlink, impl=impl, shard=shard)
+                                           downlink, impl=impl, shard=shard,
+                                           telemetry=telemetry)
 
     def round_fn(global_state, client_batches, n_examples, lr, ef_state,
                  down_mirror, key):
         weights = normalize_weights(n_examples, shard)
-        wsums, stacked_extras, new_ef, losses, bcast = run_clients(
+        wsums, stacked_extras, new_ef, losses, bcast, tele = run_clients(
             global_state, client_batches, weights, lr, ef_state,
-            down_mirror, key)
+            down_mirror, key, n_examples)
         if mode == "client_parallel":
-            agg_delta = psum_tree(wsums["delta"], shard)
+            # tele rides the delta-sum psum: same single collective
+            summed = psum_tree({"delta": wsums["delta"], "tele": tele},
+                               shard)
+            agg_delta = summed["delta"]
         else:
-            acc = psum_tree(wsums, shard)
-            agg_delta = acc["delta"]
+            summed = psum_tree({**wsums, "tele": tele}, shard)
+            agg_delta = summed["delta"]
 
         # apply the aggregate update to the FULL-PRECISION server model;
         # the aggregate of the client models themselves is bcast+Σw·Δ, but
@@ -303,25 +371,30 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
                 fl, global_state, stacked_extras, weights, shard=shard))
         else:
             new_state.update(algo.finalize_extra_sums(
-                fl, global_state, {k: acc[k] for k in extra_keys}))
-        return (new_state, {"local_loss": mean_over_clients(losses, shard)},
-                new_ef, bcast)
+                fl, global_state, {k: summed[k] for k in extra_keys}))
+        metrics = {"local_loss": mean_over_clients(losses, shard)}
+        if telemetry is not None:
+            metrics.update(telemetry.finish(summed["tele"]))
+        return new_state, metrics, new_ef, bcast
 
     return round_fn
 
 
 def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
                              uplink, downlink, *, impl="auto",
-                             shard: Optional[ClientSharding] = None):
+                             shard: Optional[ClientSharding] = None,
+                             telemetry=None):
     """Shared client-side computation of one codec-routed round.
 
     Returns ``run_clients(global_state, client_batches, weights, lr,
-    ef_state, down_mirror, key) -> (wsums, stacked_extras, new_ef, losses,
-    bcast)``: ``wsums`` holds this shard's psum-pending weighted sums
-    ``{"delta": tree, **extras}``, ``stacked_extras`` the per-client
-    extras (client_parallel only), ``new_ef`` the positional clients'
-    fresh EF rows and ``bcast`` the mirror-based downlink result (the
-    clients' next mirror).
+    ef_state, down_mirror, key, n_examples) -> (wsums, stacked_extras,
+    new_ef, losses, bcast, tele)``: ``wsums`` holds this shard's
+    psum-pending weighted sums ``{"delta": tree, **extras}``,
+    ``stacked_extras`` the per-client extras (client_parallel only),
+    ``new_ef`` the positional clients' fresh EF rows, ``bcast`` the
+    mirror-based downlink result (the clients' next mirror) and ``tele``
+    this shard's telemetry tap sums (``{}`` when ``telemetry=None`` — the
+    code path is then byte-identical to the untapped one).
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
@@ -329,7 +402,7 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
     extra_keys = algo.extra_state
 
     def run_clients(global_state, client_batches, weights, lr, ef_state,
-                    down_mirror, key):
+                    down_mirror, key, n_examples=None):
         n_clients = weights.shape[0]
         kd, ku = jax.random.split(key)
         down_update = jax.tree.map(lambda m, w: m - w,
@@ -342,7 +415,7 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
         gx = algo.extra_from_state(global_state)
         client_keys = _local_client_keys(ku, n_clients, shard)
 
-        def client_step(batches, ef, ck):
+        def client_step(batches, ef, ck, nex=None):
             trainable, loss = trainer(bcast, gx, batches, lr)
             delta = jax.tree.map(lambda a, b: a - b, trainable["model"],
                                  bcast)
@@ -352,37 +425,60 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
             out = {"delta": decoded, "ef": new_ef, "loss": loss}
             for k in extra_keys:
                 out[k] = trainable[k]
+            if telemetry is not None:
+                out["tele"] = telemetry.client_sums(ClientTapCtx(
+                    n_examples=nex, loss=loss, global_model=bcast,
+                    delta=delta, decoded=decoded, ef=new_ef))
             return out
 
         if mode == "client_parallel":
-            outs = jax.vmap(client_step)(client_batches, ef_state,
-                                         client_keys)
+            if telemetry is None:
+                outs = jax.vmap(client_step)(client_batches, ef_state,
+                                             client_keys)
+                tele = {}
+            else:
+                outs = jax.vmap(client_step)(client_batches, ef_state,
+                                             client_keys, n_examples)
+                tele = _sum_clients(outs["tele"])
             wsums = {"delta": _weighted_sums(outs["delta"], weights)}
             for k in extra_keys:
                 wsums[k] = _weighted_sums(outs[k], weights)
             return (wsums, {k: outs[k] for k in extra_keys}, outs["ef"],
-                    outs["loss"], bcast)
+                    outs["loss"], bcast, tele)
 
         acc0 = {"delta": zeros_like_tree(global_state["model"])}
         for k in extra_keys:
             acc0[k] = zeros_like_tree(global_state[k])
+        acc_keys = tuple(acc0)
+
+        if telemetry is None:
+            def body(acc, xs):
+                batches, w, ef, ck = xs
+                out = client_step(batches, ef, ck)
+                acc = {k: running_update(acc[k], out[k], w) for k in acc}
+                return acc, (out["ef"], out["loss"])
+
+            acc, (new_ef, losses) = jax.lax.scan(
+                body, acc0, (client_batches, weights, ef_state, client_keys))
+            return acc, None, new_ef, losses, bcast, {}
 
         def body(acc, xs):
-            batches, w, ef, ck = xs
-            out = client_step(batches, ef, ck)
-            acc = {k: running_update(acc[k], out[k], w) for k in acc}
-            return acc, (out["ef"], out["loss"])
+            batches, w, ef, ck, nex = xs
+            out = client_step(batches, ef, ck, nex)
+            acc = {k: running_update(acc[k], out[k], w) for k in acc_keys}
+            return acc, (out["ef"], out["loss"], out["tele"])
 
-        acc, (new_ef, losses) = jax.lax.scan(
-            body, acc0, (client_batches, weights, ef_state, client_keys))
-        return acc, None, new_ef, losses, bcast
+        acc, (new_ef, losses, tele_c) = jax.lax.scan(
+            body, acc0, (client_batches, weights, ef_state, client_keys,
+                         n_examples))
+        return acc, None, new_ef, losses, bcast, _sum_clients(tele_c)
 
     return run_clients
 
 
 def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
                                 mode: str, uplink, downlink, *, impl="auto",
-                                shard: ClientSharding):
+                                shard: ClientSharding, telemetry=None):
     """Deferred-psum split of :func:`make_compressed_round_fn`.
 
     Returns ``(local_fn, finish_fn)`` for the fused-collective superstep:
@@ -404,15 +500,16 @@ def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
     extra_keys = algo.extra_state
     _check_extra_keys(extra_keys)
     run_clients = _make_compressed_clients(bundle, fl, mode, uplink,
-                                           downlink, impl=impl, shard=shard)
+                                           downlink, impl=impl, shard=shard,
+                                           telemetry=telemetry)
 
     def local_fn(global_state, client_batches, total, n_examples, lr,
                  ef_state, down_mirror, key):
         weights = jnp.asarray(n_examples, jnp.float32) / total
-        wsums, _, new_ef, losses, bcast = run_clients(
+        wsums, _, new_ef, losses, bcast, tele = run_clients(
             global_state, client_batches, weights, lr, ef_state,
-            down_mirror, key)
-        contribs = {**wsums, "loss": jnp.mean(losses)}
+            down_mirror, key, n_examples)
+        contribs = {**wsums, "loss": jnp.mean(losses), "tele": tele}
         return contribs, {"new_ef": new_ef, "bcast": bcast}
 
     def finish_fn(global_state, summed):
@@ -421,7 +518,10 @@ def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
         new_state: Dict[str, Any] = {"model": new_model}
         new_state.update(algo.finalize_extra_sums(
             fl, global_state, {k: summed[k] for k in extra_keys}))
-        return new_state, {"local_loss": summed["loss"] / shard.n_shards}
+        metrics = {"local_loss": summed["loss"] / shard.n_shards}
+        if telemetry is not None:
+            metrics.update(telemetry.finish(summed["tele"]))
+        return new_state, metrics
 
     return local_fn, finish_fn
 

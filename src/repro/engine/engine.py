@@ -51,6 +51,7 @@ since it observes per-round state by contract.
 """
 from __future__ import annotations
 
+import contextlib
 import copy
 import os
 import time
@@ -73,6 +74,8 @@ from repro.engine.sharded import (client_sharding, chunk_shardings,
 from repro.engine.superstep import (make_compressed_superstep,
                                     make_plain_superstep)
 from repro.models.registry import ModelBundle
+from repro.obs.runlog import as_runlog
+from repro.obs.telemetry import Telemetry, make_telemetry
 from repro.optim import exp_decay_per_round
 
 # repro.fl.comm is imported lazily inside run_federated_engine:
@@ -171,7 +174,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                          impl: str = "auto", mesh=None,
                          overlap_eval: bool = True,
                          fused_collective: bool = True,
-                         sharded_eval: bool = True) -> ServerResult:
+                         sharded_eval: bool = True,
+                         telemetry=False, runlog=None,
+                         profile_dir: Optional[str] = None) -> ServerResult:
     """Engine-backed server loop (see module docstring).
 
     Drop-in for the reference loop: same arguments, same ServerResult,
@@ -186,6 +191,21 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     the three-collective layout — bitwise-equal, False keeps the oracle)
     and ``sharded_eval`` (mesh only: split the eval batch over the client
     shards with a masked-sum psum; False evaluates replicated).
+
+    Observability (``repro.obs``, all off by default):
+
+    * ``telemetry`` — True (every applicable registered tap), a sequence
+      of tap names, or a prebuilt :class:`repro.obs.telemetry.Telemetry`:
+      on-device tap signals (``tele/...`` keys) ride the existing metrics
+      stack and the round's existing psum — zero extra collectives, zero
+      extra host syncs, and the trained model stays bitwise-equal to a
+      telemetry-off run;
+    * ``runlog`` — None | JSONL path | :class:`repro.obs.runlog.RunLog`:
+      host span tracing (chunk dispatch, eval dispatch, prefetch staging,
+      checkpoint saves) plus counters and non-finite-metric warnings; a
+      path given here is opened, streamed and closed by the engine;
+    * ``profile_dir`` — start a ``jax.profiler`` trace into the directory
+      for the whole run, with one ``StepTraceAnnotation`` per chunk.
     """
     from repro.checkpoint.io import (insert_scratch_rows, load_tree,
                                      restore_server_state,
@@ -266,6 +286,25 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                                    down_mirror)
         round_key = jax.random.fold_in(key, 0x636f6d70)  # "comp"
 
+    # --- observability: telemetry taps + host span tracing ----------------
+    # tele=None keeps every traced code path byte-identical to the
+    # pre-observability engine (the bitwise contract tests/test_obs.py pins)
+    tele = None
+    if telemetry:
+        if isinstance(telemetry, Telemetry):
+            tele = telemetry
+        else:
+            tele = make_telemetry(
+                "compressed" if compressed else "plain",
+                n_clients=n_sampled,
+                n_shards=shard.n_shards if shard is not None else 1,
+                available=frozenset(
+                    ("ef",) if compressed and uplink.stateful else ()),
+                taps=None if telemetry is True else tuple(telemetry))
+    # a path means the engine owns the sink's lifetime (stream + close)
+    owns_runlog = runlog is not None and not hasattr(runlog, "span")
+    rl = as_runlog(runlog)
+
     def save_ef():
         """ef.npz keeps the compact layout — strip the scratch rows."""
         ef_disk = (strip_scratch_rows(ef_all, shard.n_shards)
@@ -338,14 +377,15 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                     bundle, fl, mode, n_rounds, mesh, uplink=uplink,
                     downlink=downlink, eval_fn=in_scan, impl=impl,
                     fused_collective=fused_collective,
-                    eval_sharded=eval_shard is not None)
+                    eval_sharded=eval_shard is not None, telemetry=tele)
             elif compressed:
                 fn = make_compressed_superstep(
                     bundle, fl, mode, n_rounds, uplink, downlink,
-                    eval_fn=in_scan, impl=impl)
+                    eval_fn=in_scan, impl=impl, telemetry=tele)
             else:
                 fn = make_plain_superstep(bundle, fl, mode, n_rounds,
-                                          eval_fn=in_scan, impl=impl)
+                                          eval_fn=in_scan, impl=impl,
+                                          telemetry=tele)
             # donate the carried state AND the staged chunk — batches /
             # sizes / lrs (/cids/ridx) are consumed exactly once.  The
             # host-staged arrays are only donatable on accelerator
@@ -395,47 +435,75 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
 
     prefetcher = HostPrefetcher(
         lambda r0, r1: build_chunk(r0, r1, staging_pool=pool),
-        schedule, enabled=prefetch)
+        schedule, enabled=prefetch, runlog=rl)
 
     pump = MetricsPump(comm, n_sampled, wire_up=wire_up,
                        wire_down=wire_down,
                        n_down=(data.n_clients
                                if fl.downlink_codec != "identity" else None),
-                       verbose=verbose)
+                       verbose=verbose, runlog=rl)
 
+    def step_annotation(i):
+        """jax.profiler chunk marker; a no-op without --profile."""
+        if profile_dir and hasattr(jax.profiler, "StepTraceAnnotation"):
+            return jax.profiler.StepTraceAnnotation("superstep", step_num=i)
+        return contextlib.nullcontext()
+
+    rl.event("run.start", rounds=rounds, start_round=start_round,
+             chunk_rounds=chunk_rounds, compressed=compressed,
+             client_shards=shard.n_shards if shard is not None else 1,
+             telemetry=tele is not None)
+    if profile_dir:
+        jax.profiler.start_trace(profile_dir)
     try:
-        for r0, r1, staged in prefetcher:
-            step = get_step(r1 - r0)
-            if compressed:
-                global_state, mstack, ef_all, down_mirror = run_step(
-                    step, staged, global_state, ef_all, down_mirror)
-            else:
-                global_state, mstack = run_step(step, staged, global_state)
-            eval_metrics = None
-            if jit_eval is not None and eval_every and r1 % eval_every == 0:
-                eval_state = snap(global_state) if snap is not None \
-                    else global_state
-                eval_metrics = jit_eval(eval_state, test_batch, test_mask)
-            pump.submit(mstack, eval_metrics)
-            if callback is not None:        # per-round chunks by contract
-                pump.drain()
-                metrics = {k: v for k, v in comm.history[-1].items()
-                           if k not in _NON_METRIC_KEYS}
-                callback(r0, global_state, metrics)
-            if checkpoint_dir and r1 % checkpoint_every == 0:
-                save_server_state(checkpoint_dir, global_state, r1,
-                                  extra={"algorithm": fl.algorithm})
-                if compressed:
-                    save_ef()
+        # the pump context drains into the CommLog on a clean exit and
+        # ABORTS (cancel + non-blocking shutdown) when unwinding an
+        # exception — a mid-run error no longer leaks the worker thread
+        with pump:
+            for ci, (r0, r1, staged) in enumerate(prefetcher):
+                with step_annotation(ci):
+                    with rl.span("chunk.dispatch", r0=r0, r1=r1,
+                                 compile=(r1 - r0) not in steps):
+                        step = get_step(r1 - r0)
+                        if compressed:
+                            global_state, mstack, ef_all, down_mirror = \
+                                run_step(step, staged, global_state, ef_all,
+                                         down_mirror)
+                        else:
+                            global_state, mstack = run_step(step, staged,
+                                                            global_state)
+                    eval_metrics = None
+                    if jit_eval is not None and eval_every \
+                            and r1 % eval_every == 0:
+                        with rl.span("eval.dispatch", round=r1,
+                                     overlap=snap is not None):
+                            eval_state = snap(global_state) \
+                                if snap is not None else global_state
+                            eval_metrics = jit_eval(eval_state, test_batch,
+                                                    test_mask)
+                pump.submit(mstack, eval_metrics)
+                if callback is not None:    # per-round chunks by contract
+                    pump.drain()
+                    metrics = {k: v for k, v in comm.history[-1].items()
+                               if k not in _NON_METRIC_KEYS}
+                    callback(r0, global_state, metrics)
+                if checkpoint_dir and r1 % checkpoint_every == 0:
+                    with rl.span("checkpoint.save", round=r1):
+                        save_server_state(checkpoint_dir, global_state, r1,
+                                          extra={"algorithm": fl.algorithm})
+                        if compressed:
+                            save_ef()
     finally:
         prefetcher.close()
-        pump.close()
+        if profile_dir:
+            jax.profiler.stop_trace()
 
     if checkpoint_dir:
-        save_server_state(checkpoint_dir, global_state, rounds,
-                          extra={"algorithm": fl.algorithm})
-        if compressed:
-            save_ef()
+        with rl.span("checkpoint.save", round=rounds, final=True):
+            save_server_state(checkpoint_dir, global_state, rounds,
+                              extra={"algorithm": fl.algorithm})
+            if compressed:
+                save_ef()
     stats = {
         "chunk_rounds": chunk_rounds,
         "client_shards": shard.n_shards if shard is not None else 1,
@@ -444,5 +512,18 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         "eval_overlap": snap is not None,
         "host_wait_s": round(prefetcher.wait_s, 4),
         "metrics_wait_s": round(pump.wait_s, 4),
+        "telemetry": tele is not None,
+        "staging_pool_hits": pool.hits if pool is not None else 0,
+        "staging_pool_misses": pool.misses if pool is not None else 0,
     }
+    rl.counter("prefetch.wait_s", stats["host_wait_s"])
+    rl.counter("metrics.wait_s", stats["metrics_wait_s"])
+    if pool is not None:
+        rl.counter("staging.pool_hits", pool.hits)
+        rl.counter("staging.pool_misses", pool.misses)
+    rl.event("run.end", rounds=rounds)
+    if owns_runlog:
+        rl.close()
+    if rl.path:
+        stats["runlog"] = rl.path
     return ServerResult(global_state=global_state, comm=comm, stats=stats)

@@ -8,9 +8,22 @@ until the superstep producing the values has finished, while the main
 thread keeps dispatching the next chunk.  ``CommLog`` rounds are logged in
 order when futures are drained — bounded by ``max_pending`` chunks so a
 long run cannot pile up unfetched device buffers.
+
+``MetricsPump`` is a context manager: a clean exit drains every pending
+chunk into the CommLog, an exceptional one ABORTS — pending futures are
+cancelled and the executor is shut down without blocking the raising
+thread — so a mid-run error never leaks the worker thread or queued
+device buffers (the engine enters the pump around its dispatch loop).
+
+A ``repro.obs.runlog`` sink (optional) receives a structured warning
+event for every non-finite metric value as rounds land in the history —
+the value still enters ``CommLog.history`` untouched (history equality
+with the reference loop is a pinned contract), but the divergence is now
+visible with its round index instead of silently riding the curves.
 """
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from concurrent.futures import ThreadPoolExecutor
@@ -19,8 +32,11 @@ from typing import Optional
 import jax
 import numpy as np
 
+from repro.obs.runlog import as_runlog
+
 # NOTE: nothing in repro.engine imports repro.fl at module scope —
 # repro.fl.server imports the engine, and the reverse edge would cycle.
+# (repro.obs sits below everything and imports no repro package.)
 
 
 class MetricsPump:
@@ -30,23 +46,40 @@ class MetricsPump:
     ``comm`` must have wire sizes bound (``comm.bind_sizes``) — the pump
     logs with ``global_state=None``.  ``wire_up`` / ``wire_down`` /
     ``n_down`` are the per-run constants the server loop previously passed
-    to every ``log_round`` call.
+    to every ``log_round`` call.  ``runlog`` (None | RunLog) receives
+    non-finite metric warnings.
     """
 
     def __init__(self, comm, n_clients: int, *,
                  wire_up: Optional[int] = None,
                  wire_down: Optional[int] = None,
                  n_down: Optional[int] = None,
-                 verbose: bool = False, max_pending: int = 4):
+                 verbose: bool = False, max_pending: int = 4,
+                 runlog=None):
         self._comm = comm
         self._n_clients = n_clients
         self._wire = dict(wire_up=wire_up, wire_down=wire_down,
                           n_down=n_down)
         self._verbose = verbose
         self._max_pending = max_pending
+        self._runlog = as_runlog(runlog)
         self._pool = ThreadPoolExecutor(1, thread_name_prefix="engine-metrics")
         self._pending: deque = deque()
         self.wait_s = 0.0    # dispatch-thread time blocked on metric sync
+
+    def __enter__(self) -> "MetricsPump":
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        # clean exit: every queued chunk must land in the CommLog; an
+        # exception mid-run: do NOT block the raising thread on device
+        # fetches that may never resolve — drop the queue and retire the
+        # worker.
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+        return False
 
     def submit(self, metrics_stack, eval_metrics=None):
         """Queue one chunk: ``metrics_stack`` leaves are [K] device arrays;
@@ -80,6 +113,13 @@ class MetricsPump:
         self.drain()
         self._pool.shutdown(wait=True)
 
+    def abort(self):
+        """Exception path: cancel queued fetches and retire the worker
+        without draining — never blocks on device state mid-unwind."""
+        while self._pending:
+            self._pending.popleft().cancel()
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
     @staticmethod
     def _scalar(v):
         """Host-ify one metric value; non-scalar leaves (e.g. a per-class
@@ -108,6 +148,13 @@ class MetricsPump:
             if ev is not None and k == n_rounds - 1:
                 metrics.update({key: self._scalar(v)
                                 for key, v in ev.items()})
+            bad = [key for key, v in metrics.items()
+                   if isinstance(v, float) and not math.isfinite(v)]
+            if bad:
+                # the value still lands in history (equality with the
+                # reference loop is pinned); the event makes it findable
+                self._runlog.warning("metrics.nonfinite",
+                                     round=self._comm.rounds + 1, keys=bad)
             self._comm.log_round(None, self._n_clients, metrics,
                                  **self._wire)
             if self._verbose:

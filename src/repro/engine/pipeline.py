@@ -52,6 +52,8 @@ class StagingPool:
 
     def __init__(self):
         self._bufs: Dict[str, np.ndarray] = {}
+        self.hits = 0       # takes served from an existing buffer
+        self.misses = 0     # takes that had to allocate
 
     def take(self, name: str, shape, dtype) -> np.ndarray:
         buf = self._bufs.get(name)
@@ -59,6 +61,9 @@ class StagingPool:
                 or buf.dtype != np.dtype(dtype):
             buf = np.empty(shape, dtype)
             self._bufs[name] = buf
+            self.misses += 1
+        else:
+            self.hits += 1
         return buf
 
 
@@ -71,10 +76,13 @@ class HostPrefetcher:
     """
 
     def __init__(self, build_chunk: Callable, schedule: Iterable[Tuple[int,
-                 int]], *, depth: int = 2, enabled: bool = True):
+                 int]], *, depth: int = 2, enabled: bool = True,
+                 runlog=None):
+        from repro.obs.runlog import as_runlog
         self._build = build_chunk
         self._schedule = list(schedule)
         self._enabled = enabled
+        self._runlog = as_runlog(runlog)
         self.wait_s = 0.0       # consumer time blocked on staging
         if enabled:
             self._q: queue.Queue = queue.Queue(maxsize=depth)
@@ -98,7 +106,12 @@ class HostPrefetcher:
             for r0, r1 in self._schedule:
                 if self._stop.is_set():
                     return
-                if not self._put((r0, r1, self._build(r0, r1))):
+                # the span runs on THIS thread — RunLog's nesting stacks
+                # are thread-local, so staging intervals interleave
+                # correctly with the dispatch thread's chunk spans
+                with self._runlog.span("prefetch.stage", r0=r0, r1=r1):
+                    staged = self._build(r0, r1)
+                if not self._put((r0, r1, staged)):
                     return
             self._put(None)
         except BaseException as e:  # surfaced at the consumer
@@ -108,7 +121,8 @@ class HostPrefetcher:
         if not self._enabled:
             for r0, r1 in self._schedule:
                 t0 = time.perf_counter()
-                staged = self._build(r0, r1)
+                with self._runlog.span("prefetch.stage", r0=r0, r1=r1):
+                    staged = self._build(r0, r1)
                 self.wait_s += time.perf_counter() - t0
                 yield r0, r1, staged
             return

@@ -83,7 +83,7 @@ def _unchecked_shard_map(fn, mesh, in_specs, out_specs):
 def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
                            uplink=None, downlink=None, eval_fn=None,
                            impl="auto", fused_collective=True,
-                           eval_sharded=True):
+                           eval_sharded=True, telemetry=None):
     """``shard_map``-wrapped superstep on ``mesh`` (client axes size > 1).
 
     Same call signature as the unsharded supersteps; the plain variant is
@@ -108,7 +108,8 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
     if uplink is None:
         inner = make_plain_superstep(bundle, fl, mode, n_rounds,
                                      eval_fn=eval_fn, impl=impl,
-                                     shard=shard, fused=fused_collective)
+                                     shard=shard, fused=fused_collective,
+                                     telemetry=telemetry)
         in_specs = (P(), P(None, ax), P(None, ax), P()) \
             + (test_spec,) * n_test
         out_specs = (P(), P())
@@ -116,7 +117,8 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
         inner = make_compressed_superstep(bundle, fl, mode, n_rounds,
                                           uplink, downlink, eval_fn=eval_fn,
                                           impl=impl, shard=shard,
-                                          fused=fused_collective)
+                                          fused=fused_collective,
+                                          telemetry=telemetry)
         in_specs = (P(), P(ax), P(), P(None, ax), P(None, ax),
                     P(), P(), P(), P()) + (test_spec,) * n_test
         out_specs = (P(), P(), P(ax), P())

@@ -88,7 +88,8 @@ def _size_total(n_examples):
 
 
 def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
-                         impl="auto", shard=None, fused=False):
+                         impl="auto", shard=None, fused=False,
+                         telemetry=None):
     """Uncompressed K-round superstep.
 
     Returns ``superstep(global_state, batches, sizes, lrs[, test_batch,
@@ -106,8 +107,9 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
         assert shard is not None, "fused collectives require a shard"
         return _make_fused_plain_superstep(bundle, fl, mode, n_rounds,
                                            eval_fn=eval_fn, impl=impl,
-                                           shard=shard)
-    round_fn = make_round_fn(bundle, fl, mode, impl=impl, shard=shard)
+                                           shard=shard, telemetry=telemetry)
+    round_fn = make_round_fn(bundle, fl, mode, impl=impl, shard=shard,
+                             telemetry=telemetry)
 
     def one_round(state, b, n, lr, test):
         state, metrics = round_fn(state, b, n, lr)
@@ -133,10 +135,10 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
 
 
 def _make_fused_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn,
-                                impl, shard):
+                                impl, shard, telemetry=None):
     """One-psum-per-round uncompressed superstep (shard_map body)."""
     local_fn, finish_fn = make_round_parts(bundle, fl, mode, impl=impl,
-                                           shard=shard)
+                                           shard=shard, telemetry=telemetry)
 
     def one_round(state, total, b, n, lr, n_next, test):
         contribs = local_fn(state, b, total, n, lr)
@@ -297,7 +299,7 @@ def _slice_positional(full_tree, shard, c_loc):
 
 def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
                               *, eval_fn=None, impl="auto", shard=None,
-                              fused=False):
+                              fused=False, telemetry=None):
     """Compressed (codec-routed) K-round superstep.
 
     Returns ``superstep(global_state, ef_all, mirror, batches, sizes, lrs,
@@ -320,9 +322,10 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
         assert shard is not None, "fused collectives require a shard"
         return _make_fused_compressed_superstep(
             bundle, fl, mode, n_rounds, uplink, downlink, eval_fn=eval_fn,
-            impl=impl, shard=shard)
+            impl=impl, shard=shard, telemetry=telemetry)
     round_fn = make_compressed_round_fn(bundle, fl, mode, uplink, downlink,
-                                        impl=impl, shard=shard)
+                                        impl=impl, shard=shard,
+                                        telemetry=telemetry)
 
     def gather_rows(ef_all, cids, c_loc):
         if shard is None:
@@ -382,7 +385,8 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
 
 
 def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
-                                     downlink, *, eval_fn, impl, shard):
+                                     downlink, *, eval_fn, impl, shard,
+                                     telemetry=None):
     """One-psum-per-round compressed superstep (shard_map body).
 
     Pipelining layout: a per-chunk prologue psum seeds round 0's gathered
@@ -394,7 +398,8 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
     psum of each chunk.
     """
     local_fn, finish_fn = make_compressed_round_parts(
-        bundle, fl, mode, uplink, downlink, impl=impl, shard=shard)
+        bundle, fl, mode, uplink, downlink, impl=impl, shard=shard,
+        telemetry=telemetry)
 
     def one_round(state, ef_all, mirror, ef_rows, total, b, n, lr, cid,
                   cid_next, n_next, r, round_key, test):

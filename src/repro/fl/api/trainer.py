@@ -61,6 +61,10 @@ class EngineOptions:
     impl: str = "auto"                      # kernel dispatch (jnp | pallas)
     fused_collective: bool = True           # mesh: ONE packed psum per round
     sharded_eval: bool = True               # mesh: eval batch split + psum
+    # observability (repro.obs) — off by default, bitwise-invisible when on
+    telemetry: Any = False                  # True | tap names | Telemetry
+    runlog: Any = None                      # JSONL path | RunLog sink
+    profile_dir: Optional[str] = None       # jax.profiler trace directory
 
 
 @dataclass(frozen=True)
@@ -121,7 +125,9 @@ class FederatedTrainer:
             prefetch=o.engine.prefetch, impl=o.engine.impl,
             mesh=o.engine.mesh, overlap_eval=o.engine.overlap_eval,
             fused_collective=o.engine.fused_collective,
-            sharded_eval=o.engine.sharded_eval)
+            sharded_eval=o.engine.sharded_eval,
+            telemetry=o.engine.telemetry, runlog=o.engine.runlog,
+            profile_dir=o.engine.profile_dir)
         return self._result
 
     def evaluate(self, global_state=None, batch=None,

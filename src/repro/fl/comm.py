@@ -93,3 +93,30 @@ class CommLog:
             if h.get(key, -np.inf) >= threshold:
                 return h["round"]
         return -1
+
+    def to_records(self) -> List[Dict]:
+        """History as plain-JSON round records (numpy scalars/arrays
+        converted via ``repro.obs.runlog.json_safe``) plus a final
+        ``{"kind": "summary"}`` record with the run totals.  The shared
+        shape with RunLog's JSONL stream is what lets
+        ``repro.obs.report`` consume both files with one loader."""
+        from repro.obs.runlog import json_safe
+        records = [{"kind": "round",
+                    **{k: json_safe(v) for k, v in h.items()}}
+                   for h in self.history]
+        records.append({"kind": "summary", "rounds": self.rounds,
+                        "bytes_up": self.bytes_up,
+                        "bytes_down": self.bytes_down})
+        return records
+
+    def save(self, path: str) -> str:
+        """Write :meth:`to_records` as JSONL; returns ``path``."""
+        import json
+        import os
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            for rec in self.to_records():
+                f.write(json.dumps(rec) + "\n")
+        return path

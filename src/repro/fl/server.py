@@ -93,7 +93,9 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   prefetch: bool = True, mesh=None,
                   overlap_eval: bool = True,
                   fused_collective: bool = True,
-                  sharded_eval: bool = True) -> ServerResult:
+                  sharded_eval: bool = True,
+                  telemetry=False, runlog=None,
+                  profile_dir: Optional[str] = None) -> ServerResult:
     """Back-compat wrapper over :class:`repro.fl.api.FederatedTrainer`.
 
     The flat kwargs map 1:1 onto the grouped ``RunOptions`` fields (see
@@ -114,7 +116,9 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                              prefetch=prefetch, mesh=mesh,
                              overlap_eval=overlap_eval,
                              fused_collective=fused_collective,
-                             sharded_eval=sharded_eval))
+                             sharded_eval=sharded_eval,
+                             telemetry=telemetry, runlog=runlog,
+                             profile_dir=profile_dir))
     return FederatedTrainer(bundle, fl, data, opts).fit(rounds,
                                                         callback=callback)
 

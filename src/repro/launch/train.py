@@ -83,12 +83,21 @@ def run_engine(args, cfg, fl) -> None:
         seed=0, verbose=True,
         eval=EvalOptions(every=max(args.rounds // 2, 1), examples=64),
         engine=EngineOptions(superstep_rounds="auto",
-                             mesh=mesh if shards > 1 else None)))
+                             mesh=mesh if shards > 1 else None,
+                             telemetry=args.telemetry,
+                             runlog=args.runlog,
+                             profile_dir=args.profile)))
     t0 = time.perf_counter()
     res = trainer.fit(args.rounds)
     dt = time.perf_counter() - t0
     print(f"done: {args.rounds} rounds in {dt:.1f}s "
           f"({args.rounds / dt:.2f} r/s)  stats={res.stats}")
+    if args.telemetry and res.comm.history:
+        last = res.comm.history[-1]
+        tele = {k: v for k, v in last.items() if k.startswith("tele/")}
+        if tele:
+            print("telemetry (last round): " +
+                  " ".join(f"{k}={v:.4g}" for k, v in sorted(tele.items())))
 
 
 def main() -> None:
@@ -106,6 +115,15 @@ def main() -> None:
     ap.add_argument("--engine", action="store_true",
                     help="run via the client-parallel shard_map engine "
                          "(repro.engine) instead of the pjit round loop")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="engine only: enable repro.obs on-device telemetry "
+                         "taps (tele/... metrics; bitwise-invisible)")
+    ap.add_argument("--runlog", default=None, metavar="PATH",
+                    help="engine only: stream host span traces / events to "
+                         "this JSONL file (repro.obs.RunLog)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="engine only: write a jax.profiler trace for the "
+                         "whole run into DIR")
     args = ap.parse_args()
 
     cfg = ARCH_CONFIGS[args.arch]

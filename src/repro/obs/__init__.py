@@ -1,0 +1,30 @@
+"""``repro.obs`` — observability for the federated engine.
+
+Three layers, all off by default and bitwise-invisible when off:
+
+* :mod:`repro.obs.telemetry` — on-device taps whose per-round signals
+  ride the existing metrics stack and the round's existing psum (zero
+  extra collectives, zero extra host syncs);
+* :mod:`repro.obs.runlog` — host-side structured span/event/counter sink
+  streaming JSONL (:class:`RunLog`), with a zero-allocation disabled path;
+* :mod:`repro.obs.report` — fold a run's RunLog + CommLog records into a
+  round-time breakdown and telemetry trend report.
+
+``runlog`` and ``report`` are stdlib+numpy only; ``telemetry`` needs jax.
+Nothing here imports the rest of ``repro`` — this package sits at the
+bottom of the import graph so ``repro.fl.comm`` and ``repro.engine`` can
+both use it without cycles.
+"""
+from repro.obs.report import build_report, render
+from repro.obs.runlog import (NULL_RUNLOG, NullRunLog, RunLog, as_runlog,
+                              json_safe)
+from repro.obs.telemetry import (TELEMETRY_PREFIX, ClientTapCtx, RoundTapCtx,
+                                 Telemetry, TelemetryTap, make_telemetry,
+                                 register_tap, registered_taps)
+
+__all__ = [
+    "RunLog", "NullRunLog", "NULL_RUNLOG", "as_runlog", "json_safe",
+    "Telemetry", "TelemetryTap", "ClientTapCtx", "RoundTapCtx",
+    "make_telemetry", "register_tap", "registered_taps", "TELEMETRY_PREFIX",
+    "build_report", "render",
+]

@@ -1,0 +1,205 @@
+"""Run reports: RunLog + CommLog records -> where the round time went.
+
+The tier-2 bench gate can tell you rounds/sec dropped; this module tells
+you *why*.  :func:`build_report` folds a run's two record streams —
+
+* the :class:`repro.obs.runlog.RunLog` JSONL (spans/events/counters the
+  engine emits: chunk dispatch, eval dispatch, checkpoint saves, prefetch
+  staging, queue waits), and
+* the :meth:`repro.fl.comm.CommLog.to_records` per-round history (bytes
+  and metrics, ``tele/`` telemetry included)
+
+— into one plain dict: a round-time breakdown (dispatch vs metrics-drain
+vs prefetch-stall vs eval vs checkpoint, each as seconds and a fraction
+of the run's wall time), bytes/round, warning events, and first/last/mean
+trends for every telemetry series.  :func:`render` pretty-prints it;
+``benchmarks/obs_report.py`` is the CLI and ``benchmarks/bench_engine.py``
+embeds the breakdown in its artifact.
+
+Only stdlib + the runlog serializer here — reports must be buildable
+anywhere the JSONL can be read, jax not required.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+__all__ = ["span_totals", "round_time_breakdown", "telemetry_summary",
+           "bytes_per_round", "build_report", "render"]
+
+# span names charged to the dispatch thread's wall clock, in report order
+_BREAKDOWN_SPANS = ("chunk.dispatch", "eval.dispatch", "checkpoint.save")
+
+
+def span_totals(records: List[Dict]) -> Dict[str, Dict[str, float]]:
+    """Per-span-name totals: count, total seconds, max seconds."""
+    out: Dict[str, Dict[str, float]] = {}
+    for r in records:
+        if r.get("kind") != "span":
+            continue
+        t = out.setdefault(r["name"], {"count": 0, "total_s": 0.0,
+                                       "max_s": 0.0})
+        t["count"] += 1
+        t["total_s"] += r.get("dur", 0.0)
+        t["max_s"] = max(t["max_s"], r.get("dur", 0.0))
+    for t in out.values():
+        t["total_s"] = round(t["total_s"], 4)
+        t["max_s"] = round(t["max_s"], 4)
+    return out
+
+
+def _counter_last(records: List[Dict], name: str) -> Optional[float]:
+    val = None
+    for r in records:
+        if r.get("kind") == "counter" and r.get("name") == name:
+            val = r.get("value")
+    return val
+
+
+def _wall_s(records: List[Dict]) -> Optional[float]:
+    """run.start -> run.end wall time; falls back to the record span."""
+    t0 = t1 = None
+    for r in records:
+        if r.get("kind") == "event" and r.get("name") == "run.start":
+            t0 = r.get("t")
+        if r.get("kind") == "event" and r.get("name") == "run.end":
+            t1 = r.get("t")
+    if t0 is not None and t1 is not None:
+        return t1 - t0
+    ts = [r.get("t", r.get("t0")) for r in records
+          if r.get("t", r.get("t0")) is not None]
+    return (max(ts) - min(ts)) if ts else None
+
+
+def round_time_breakdown(records: List[Dict]) -> Dict[str, Any]:
+    """Where the dispatch thread's wall time went, from one run's records.
+
+    ``dispatch`` / ``eval`` / ``checkpoint`` come from their spans;
+    ``metrics_drain`` and ``prefetch_stall`` from the engine's end-of-run
+    counters (``metrics.wait_s`` / ``prefetch.wait_s``); ``other`` is the
+    wall-time remainder — on a healthy run, mostly the time the host sat
+    idle while superstep chunks trained on device.
+    """
+    spans = span_totals(records)
+    wall = _wall_s(records)
+    parts = {
+        "dispatch_s": spans.get("chunk.dispatch", {}).get("total_s", 0.0),
+        "eval_s": spans.get("eval.dispatch", {}).get("total_s", 0.0),
+        "checkpoint_s": spans.get("checkpoint.save", {}).get("total_s", 0.0),
+        "metrics_drain_s": _counter_last(records, "metrics.wait_s") or 0.0,
+        "prefetch_stall_s": _counter_last(records, "prefetch.wait_s") or 0.0,
+    }
+    out: Dict[str, Any] = {"wall_s": round(wall, 4) if wall else None,
+                           **{k: round(v, 4) for k, v in parts.items()}}
+    if wall and wall > 0:
+        accounted = sum(parts.values())
+        out["other_s"] = round(max(wall - accounted, 0.0), 4)
+        out["fractions"] = {
+            k[:-2]: round(v / wall, 4) for k, v in parts.items()}
+    chunks = spans.get("chunk.dispatch", {})
+    if chunks.get("count"):
+        out["chunks"] = int(chunks["count"])
+        out["compiles"] = sum(
+            1 for r in records if r.get("kind") == "span"
+            and r["name"] == "chunk.dispatch" and r.get("compile"))
+    return out
+
+
+def telemetry_summary(comm_records: List[Dict],
+                      prefix: str = "tele/") -> Dict[str, Dict]:
+    """First/last/mean/max trend per telemetry series in the history."""
+    series: Dict[str, List[float]] = {}
+    for rec in comm_records:
+        for k, v in rec.items():
+            if k.startswith(prefix) and isinstance(v, (int, float)) \
+                    and math.isfinite(v):
+                series.setdefault(k, []).append(float(v))
+    return {k: {"first": round(vs[0], 6), "last": round(vs[-1], 6),
+                "mean": round(sum(vs) / len(vs), 6),
+                "max": round(max(vs), 6), "rounds": len(vs)}
+            for k, vs in series.items() if vs}
+
+
+def bytes_per_round(comm_records: List[Dict]) -> Dict[str, Any]:
+    """Wire accounting across the run (the paper's x-axis)."""
+    if not comm_records:
+        return {}
+    up = [r.get("bytes_up", 0) for r in comm_records]
+    down = [r.get("bytes_down", 0) for r in comm_records]
+    ideal = [r.get("bytes_up_ideal", 0) for r in comm_records]
+    out = {"rounds": len(comm_records),
+           "bytes_up_per_round": round(sum(up) / len(up), 1),
+           "bytes_down_per_round": round(sum(down) / len(down), 1),
+           "total_mb_up": round(sum(up) / 1e6, 3),
+           "total_mb_down": round(sum(down) / 1e6, 3)}
+    if sum(up) and sum(ideal):
+        out["uplink_compression"] = round(sum(ideal) / sum(up), 2)
+    return out
+
+
+def build_report(runlog_records: Optional[List[Dict]] = None,
+                 comm_records: Optional[List[Dict]] = None) -> Dict:
+    """Fold the two record streams into one report dict (either may be
+    None/empty — the report carries whatever the run collected)."""
+    report: Dict[str, Any] = {}
+    if runlog_records:
+        report["round_time"] = round_time_breakdown(runlog_records)
+        report["spans"] = span_totals(runlog_records)
+        warns = [r for r in runlog_records
+                 if r.get("kind") == "event" and r.get("level") == "warning"]
+        if warns:
+            report["warnings"] = warns
+    if comm_records:
+        # accept CommLog.to_records() verbatim: keep only round records
+        # (raw history dicts carry no "kind" and pass through)
+        comm_records = [r for r in comm_records
+                        if r.get("kind", "round") == "round"]
+    if comm_records:
+        report["bytes"] = bytes_per_round(comm_records)
+        tele = telemetry_summary(comm_records)
+        if tele:
+            report["telemetry"] = tele
+    return report
+
+
+def render(report: Dict) -> str:
+    """Report dict -> a terminal-friendly text block."""
+    lines: List[str] = []
+    rt = report.get("round_time")
+    if rt:
+        lines.append("== round-time breakdown ==")
+        wall = rt.get("wall_s")
+        lines.append(f"wall: {wall}s  chunks: {rt.get('chunks', '?')} "
+                     f"(compiled {rt.get('compiles', '?')})")
+        for k in ("dispatch_s", "eval_s", "checkpoint_s",
+                  "metrics_drain_s", "prefetch_stall_s", "other_s"):
+            if k in rt:
+                frac = (report["round_time"].get("fractions", {})
+                        .get(k[:-2]))
+                pct = f"  ({frac * 100:.1f}%)" if frac is not None else ""
+                lines.append(f"  {k[:-2]:>15s}: {rt[k]:9.4f}s{pct}")
+    b = report.get("bytes")
+    if b:
+        lines.append("== bytes ==")
+        lines.append(
+            f"  up {b.get('bytes_up_per_round', 0):.0f} B/round "
+            f"({b.get('total_mb_up', 0)} MB total), "
+            f"down {b.get('bytes_down_per_round', 0):.0f} B/round"
+            + (f", uplink compression {b['uplink_compression']}x"
+               if "uplink_compression" in b else ""))
+    tele = report.get("telemetry")
+    if tele:
+        lines.append("== telemetry trends ==")
+        for k in sorted(tele):
+            t = tele[k]
+            lines.append(f"  {k:>24s}: first={t['first']:.5g} "
+                         f"last={t['last']:.5g} mean={t['mean']:.5g}")
+    warns = report.get("warnings")
+    if warns:
+        lines.append(f"== warnings ({len(warns)}) ==")
+        for w in warns[:20]:
+            lines.append(f"  {w.get('name')}: "
+                         + " ".join(f"{k}={v}" for k, v in w.items()
+                                    if k not in ("kind", "name", "t",
+                                                 "level")))
+    return "\n".join(lines) if lines else "(empty report)"
