@@ -11,8 +11,8 @@ import argparse
 import time
 
 from benchmarks import (fig4_fedmmd, fig5_fedfusion, fig6_newclient,
-                        fig7_compression, kernels_bench, roofline_report,
-                        table2_milestones)
+                        fig7_compression, fig8_stragglers, kernels_bench,
+                        roofline_report, table2_milestones)
 
 SUITES = {
     "fig4": fig4_fedmmd.run,          # FedMMD vs FedAvg vs L2
@@ -20,6 +20,7 @@ SUITES = {
     "table2": table2_milestones.run,  # rounds-to-milestone reductions
     "fig6": fig6_newclient.run,       # new-client generalization
     "fig7": fig7_compression.run,     # wire codecs: acc vs uplink bytes
+    "fig8": fig8_stragglers.run,      # straggler policies: sim-time-to-acc
     "kernels": kernels_bench.run,     # kernel microbench + overhead claim
     "roofline": roofline_report.run,  # collate dry-run artifacts
 }

@@ -1,0 +1,17 @@
+"""Deterministic client-chaos injection — public entry point.
+
+The implementation lives with the data loader (``repro.data.federated``)
+because the fault schedule must ride the dataset's rng streams to stay
+reproducible and resumable; this module is the stable import surface:
+
+    from repro.chaos import ChaosConfig
+    data = FederatedDataset(clients, test, seed=0,
+                            chaos=ChaosConfig(speed_sigma=1.2, dropout=0.05))
+
+Pair a chaos-enabled dataset with a participation policy
+(``repro.fl.participation``) to decide, per round, which of the sampled
+clients contribute and at what staleness weight.
+"""
+from repro.data.federated import ChaosConfig, ChaosDraws  # noqa: F401
+
+__all__ = ["ChaosConfig", "ChaosDraws"]

@@ -7,10 +7,39 @@ from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
+
+# transient-OSError retry for checkpoint writes: networked / overlaid
+# filesystems (NFS, overlayfs under container churn) throw sporadic
+# EIO/ESTALE that a short backoff rides out; a persistent failure still
+# raises after the last attempt.
+_SAVE_ATTEMPTS = 3
+_SAVE_BACKOFF_S = 0.05
+
+
+def _retry_save(write, path: str, runlog=None) -> None:
+    """Run ``write()`` with bounded exponential backoff on ``OSError``.
+
+    Attempts beyond the first are counted on the runlog
+    (``checkpoint.save_retries``) so flaky storage is visible in the run
+    trace; the final failure propagates untouched.
+    """
+    for attempt in range(_SAVE_ATTEMPTS):
+        try:
+            write()
+            return
+        except OSError:
+            if attempt == _SAVE_ATTEMPTS - 1:
+                raise
+            if runlog is not None:
+                runlog.counter("checkpoint.save_retries", 1)
+                runlog.warning("checkpoint.save_retry", path=path,
+                               attempt=attempt + 1)
+            time.sleep(_SAVE_BACKOFF_S * (2 ** attempt))
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -34,9 +63,10 @@ def _path_str(p) -> str:
     return str(p)
 
 
-def save_tree(path: str, tree) -> None:
+def save_tree(path: str, tree, runlog=None) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    flat = _flatten(tree)   # fetch once — retries must not re-sync device
+    _retry_save(lambda: np.savez(path, **flat), path, runlog)
 
 
 def load_tree(path: str, like) -> Any:
@@ -91,12 +121,18 @@ def insert_scratch_rows(tree, n_shards: int):
 
 
 def save_server_state(dirpath: str, global_state, round_idx: int,
-                      extra: Dict | None = None) -> None:
+                      extra: Dict | None = None, runlog=None) -> None:
     os.makedirs(dirpath, exist_ok=True)
-    save_tree(os.path.join(dirpath, "state.npz"), global_state)
+    save_tree(os.path.join(dirpath, "state.npz"), global_state,
+              runlog=runlog)
     meta = {"round": round_idx, **(extra or {})}
-    with open(os.path.join(dirpath, "meta.json"), "w") as f:
-        json.dump(meta, f)
+    meta_path = os.path.join(dirpath, "meta.json")
+
+    def write_meta():
+        with open(meta_path, "w") as f:
+            json.dump(meta, f)
+
+    _retry_save(write_meta, meta_path, runlog)
 
 
 def restore_server_state(dirpath: str, like) -> Tuple[Any, int]:

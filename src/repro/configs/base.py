@@ -32,6 +32,10 @@ CODEC_NAMES = ("identity", "quant", "int8", "int4", "topk", "topk_noef",
 # beyond these are validated against the live registry lazily.
 ALGORITHM_NAMES = ("fedavg", "fedmmd", "fedfusion", "fedl2", "fedprox")
 
+# Participation policies from repro.fl.participation (same pattern;
+# test_participation asserts sync with registered_policies()).
+PARTICIPATION_NAMES = ("full_sync", "deadline", "buffered_async")
+
 
 @dataclass(frozen=True)
 class ArchConfig:
@@ -277,6 +281,13 @@ class FLConfig:
     topk_frac: float = 0.05           # kept fraction (topk / mask / lowrank)
     quant_bits: int = 8               # the "quant" codec's bit width
 
+    # --- participation policy (repro.fl.participation) ---
+    participation: str = "full_sync"  # a PARTICIPATION_NAMES / registry name
+    over_provision: float = 1.5       # deadline: cohort C' = ceil(C * this)
+    buffer_k: int = 0                 # buffered_async: close at K-th arrival
+    # (0 -> clients_per_round // 2)
+    staleness_alpha: float = 0.5      # buffered_async: (1+s)^(-alpha) weight
+
     def __post_init__(self):
         if self.algorithm not in ALGORITHM_NAMES:
             # runtime-registered plugin?  consult the registry lazily so
@@ -288,6 +299,13 @@ class FLConfig:
         assert self.downlink_codec in CODEC_NAMES, self.downlink_codec
         assert 0.0 < self.topk_frac <= 1.0, self.topk_frac
         assert self.quant_bits in (4, 8), self.quant_bits
+        if self.participation not in PARTICIPATION_NAMES:
+            from repro.fl.participation import registered_policies
+            assert self.participation in registered_policies(), \
+                self.participation
+        assert self.over_provision >= 1.0, self.over_provision
+        assert self.buffer_k >= 0, self.buffer_k
+        assert self.staleness_alpha >= 0.0, self.staleness_alpha
 
     @property
     def compressed(self) -> bool:

@@ -126,6 +126,22 @@ def mean_over_clients(values, shard: ClientSharding = None):
     return jax.lax.pmean(m, shard.axis_name)
 
 
+def masked_loss_sums(losses, pmask):
+    """Psum-pending numerator/denominator of a participation-masked mean
+    loss.  Rides whatever collective the caller already makes (the fused
+    one-psum contribs or the unfused ``psum_tree`` pack) — masking adds
+    no collectives of its own."""
+    m = pmask.astype(losses.dtype)
+    return {"lsum": jnp.sum(losses * m), "lw": jnp.sum(m)}
+
+
+def finish_masked_loss(summed):
+    """Post-psum completion of :func:`masked_loss_sums` (the staleness /
+    participation finish step: division happens once, after the sum over
+    every shard's surviving clients)."""
+    return summed["lsum"] / jnp.maximum(summed["lw"], 1.0)
+
+
 def running_update(acc_tree, tree, weight):
     """acc += weight * tree   (client_sequential accumulation)."""
     return jax.tree.map(lambda a, x: a + weight.astype(x.dtype) * x,

@@ -58,6 +58,22 @@ total psummed one round ahead — the sizes are pre-staged inputs, so the
 value is identical; extras close through ``finalize_extra_sums``, whose
 ops equal the in-tree plugins' ``aggregate_extras`` after the weighted
 sum), which is what makes fused and unfused rounds bitwise-equal.
+
+Participation contract (``repro.fl.participation``): with
+``participation=True`` every factory's round fn takes two extra
+``[n_clients]`` float32 inputs — ``pmask`` (0/1 contribution mask) and
+``pstale`` (staleness, telemetry only).  Masked clients are zeroed
+purely *by weight*: the engine pre-multiplies the staged sizes by
+``mask * staleness_weight`` on the host, so the existing normalized
+weighted mean — including the fused path's pipelined total — silently
+excludes them with no shape changes and no extra collectives.  The
+round-level additions are (a) the per-client EF update is guarded so a
+masked client's residual is carried forward untouched (its payload
+never reached the server, so its dropped mass must stay local), and
+(b) the round loss becomes the mask-weighted mean, its numerator /
+denominator riding the round's existing collective and dividing in the
+post-psum finish step.  With ``participation=False`` (the default)
+every traced code path is byte-identical to before this axis existed.
 """
 from __future__ import annotations
 
@@ -67,7 +83,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FLConfig
-from repro.core.aggregate import (ClientSharding, mean_over_clients,
+from repro.core.aggregate import (ClientSharding, finish_masked_loss,
+                                  masked_loss_sums, mean_over_clients,
                                   normalize_weights, psum_tree,
                                   running_update, zeros_like_tree)
 from repro.core.local import _algorithm, make_local_trainer
@@ -91,7 +108,8 @@ def _local_client_keys(key, n_local: int, shard: Optional[ClientSharding]):
     return jax.lax.dynamic_slice_in_dim(full, start, n_local, axis=0)
 
 
-_RESERVED_CONTRIB_KEYS = frozenset(("model", "delta", "loss", "tele"))
+_RESERVED_CONTRIB_KEYS = frozenset(("model", "delta", "loss", "lsum", "lw",
+                                    "tele"))
 
 
 def _sum_clients(tele):
@@ -132,6 +150,12 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     running sums), and ``tele`` this shard's telemetry tap sums
     (psum-pending scalars; ``{}`` with ``telemetry=None`` — the code path
     is then byte-identical to the untapped one).
+
+    ``pmask``/``pstale`` (participation mask + staleness, ``None`` when
+    the participation axis is off) feed the telemetry tap contexts only:
+    plain-round masking itself is entirely weight-borne (the engine
+    zeroes masked clients' example weights on the host), so with
+    ``telemetry=None`` the traced computation never sees them.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
@@ -139,7 +163,7 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     extra_keys = algo.extra_state
 
     def run_clients(global_state, client_batches, weights, lr,
-                    n_examples=None):
+                    n_examples=None, pmask=None, pstale=None):
         gm = global_state["model"]
         gx = algo.extra_from_state(global_state)
 
@@ -150,7 +174,7 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 
                 trainables, losses = jax.vmap(train_one)(client_batches)
                 tele = {}
-            else:
+            elif pmask is None:
                 def train_one(batches, nex):
                     trainable, loss = trainer(gm, gx, batches, lr)
                     t = telemetry.client_sums(ClientTapCtx(
@@ -160,6 +184,18 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 
                 trainables, losses, tele_c = jax.vmap(train_one)(
                     client_batches, n_examples)
+                tele = _sum_clients(tele_c)
+            else:
+                def train_one(batches, nex, m, st):
+                    trainable, loss = trainer(gm, gx, batches, lr)
+                    t = telemetry.client_sums(ClientTapCtx(
+                        n_examples=nex, loss=loss,
+                        model=trainable["model"], global_model=gm,
+                        pmask=m, staleness=st))
+                    return trainable, loss, t
+
+                trainables, losses, tele_c = jax.vmap(train_one)(
+                    client_batches, n_examples, pmask, pstale)
                 tele = _sum_clients(tele_c)
             wsums = {"model": _weighted_sums(trainables["model"], weights)}
             for k in extra_keys:
@@ -184,17 +220,32 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
             acc, losses = jax.lax.scan(body, acc0, (client_batches, weights))
             return acc, None, losses, {}
 
+        if pmask is None:
+            def body(acc, xs):
+                batches, w, nex = xs
+                trainable, loss = trainer(gm, gx, batches, lr)
+                acc = {k: running_update(acc[k], trainable[k], w)
+                       for k in acc}
+                t = telemetry.client_sums(ClientTapCtx(
+                    n_examples=nex, loss=loss, model=trainable["model"],
+                    global_model=gm))
+                return acc, (loss, t)
+
+            acc, (losses, tele_c) = jax.lax.scan(
+                body, acc0, (client_batches, weights, n_examples))
+            return acc, None, losses, _sum_clients(tele_c)
+
         def body(acc, xs):
-            batches, w, nex = xs
+            batches, w, nex, m, st = xs
             trainable, loss = trainer(gm, gx, batches, lr)
             acc = {k: running_update(acc[k], trainable[k], w) for k in acc}
             t = telemetry.client_sums(ClientTapCtx(
                 n_examples=nex, loss=loss, model=trainable["model"],
-                global_model=gm))
+                global_model=gm, pmask=m, staleness=st))
             return acc, (loss, t)
 
         acc, (losses, tele_c) = jax.lax.scan(
-            body, acc0, (client_batches, weights, n_examples))
+            body, acc0, (client_batches, weights, n_examples, pmask, pstale))
         return acc, None, losses, _sum_clients(tele_c)
 
     return run_clients
@@ -202,7 +253,7 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 
 def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
                   impl="auto", shard: Optional[ClientSharding] = None,
-                  telemetry=None):
+                  telemetry=None, participation=False):
     """Returns round_fn(global_state, client_batches, n_examples, lr).
 
     ``client_batches``: pytree with leading dims [n_clients, local_steps, ...].
@@ -215,11 +266,50 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     collective regardless of leaf count, and elementwise reduction keeps
     the pre-existing leaves' bits), so the round stays one-psum and
     bitwise-equal to the untapped build.
+
+    ``participation=True`` appends ``pmask``/``pstale`` [n_clients]
+    inputs (see module docstring): ``n_examples`` then arrives already
+    mask-and-staleness-weighted from the host, and the round loss is the
+    mask-weighted mean whose sums ride the same psum.
     """
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
     run_clients = _make_plain_clients(bundle, fl, mode, impl=impl,
                                       telemetry=telemetry)
+
+    def _finish(global_state, summed, stacked_extras, weights):
+        if mode == "client_parallel":
+            new_state: Dict[str, Any] = {"model": summed["model"]}
+            new_state.update(algo.aggregate_extras(fl, global_state,
+                                                   stacked_extras, weights,
+                                                   shard=shard))
+        else:
+            new_state = {"model": summed["model"]}
+            new_state.update(algo.finalize_extra_sums(
+                fl, global_state, {k: summed[k] for k in extra_keys}))
+        return new_state
+
+    if participation:
+        def round_fn(global_state, client_batches, n_examples, lr,
+                     pmask, pstale):
+            weights = normalize_weights(n_examples, shard)
+            wsums, stacked_extras, losses, tele = run_clients(
+                global_state, client_batches, weights, lr, n_examples,
+                pmask, pstale)
+            lsums = masked_loss_sums(losses, pmask)
+            if mode == "client_parallel":
+                summed = psum_tree(
+                    {"model": wsums["model"], "tele": tele, **lsums}, shard)
+            else:
+                summed = psum_tree({**wsums, "tele": tele, **lsums}, shard)
+            new_state = _finish(global_state, summed, stacked_extras,
+                                weights)
+            metrics = {"local_loss": finish_masked_loss(summed)}
+            if telemetry is not None:
+                metrics.update(telemetry.finish(summed["tele"]))
+            return new_state, metrics
+
+        return round_fn
 
     def round_fn(global_state, client_batches, n_examples, lr):
         weights = normalize_weights(n_examples, shard)
@@ -229,17 +319,11 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
             # tele rides the model-sum psum: same single collective
             summed = psum_tree({"model": wsums["model"], "tele": tele},
                                shard)
-            new_state: Dict[str, Any] = {"model": summed["model"]}
-            new_state.update(algo.aggregate_extras(fl, global_state,
-                                                   stacked_extras, weights,
-                                                   shard=shard))
         else:
             # the running sums covered this shard's clients; one psum per
             # tree completes them over the round (no-op when unsharded)
             summed = psum_tree({**wsums, "tele": tele}, shard)
-            new_state = {"model": summed["model"]}
-            new_state.update(algo.finalize_extra_sums(
-                fl, global_state, {k: summed[k] for k in extra_keys}))
+        new_state = _finish(global_state, summed, stacked_extras, weights)
         metrics = {"local_loss": mean_over_clients(losses, shard)}
         if telemetry is not None:
             metrics.update(telemetry.finish(summed["tele"]))
@@ -249,7 +333,8 @@ def make_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 
 
 def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
-                     impl="auto", shard: ClientSharding, telemetry=None):
+                     impl="auto", shard: ClientSharding, telemetry=None,
+                     participation=False):
     """Deferred-psum split of :func:`make_round_fn` (fused collectives).
 
     Returns ``(local_fn, finish_fn)``:
@@ -270,6 +355,11 @@ def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     ``telemetry`` taps contribute a ``"tele"`` sub-dict to ``contribs`` —
     a few extra f32 scalars riding the superstep's single fused psum —
     and their finalized ``tele/...`` metrics to ``finish_fn``'s output.
+
+    ``participation=True``: ``local_fn`` takes trailing ``pmask``/
+    ``pstale`` inputs, the mask-weighted loss sums replace the plain
+    chunk-loss scalar in ``contribs`` (two f32 lanes on the same fused
+    psum), and ``finish_fn`` divides them post-psum.
     """
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
@@ -277,17 +367,30 @@ def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     run_clients = _make_plain_clients(bundle, fl, mode, impl=impl,
                                       telemetry=telemetry)
 
-    def local_fn(global_state, client_batches, total, n_examples, lr):
-        weights = jnp.asarray(n_examples, jnp.float32) / total
-        wsums, _, losses, tele = run_clients(global_state, client_batches,
-                                             weights, lr, n_examples)
-        return {**wsums, "loss": jnp.mean(losses), "tele": tele}
+    if participation:
+        def local_fn(global_state, client_batches, total, n_examples, lr,
+                     pmask, pstale):
+            weights = jnp.asarray(n_examples, jnp.float32) / total
+            wsums, _, losses, tele = run_clients(
+                global_state, client_batches, weights, lr, n_examples,
+                pmask, pstale)
+            return {**wsums, **masked_loss_sums(losses, pmask),
+                    "tele": tele}
+    else:
+        def local_fn(global_state, client_batches, total, n_examples, lr):
+            weights = jnp.asarray(n_examples, jnp.float32) / total
+            wsums, _, losses, tele = run_clients(
+                global_state, client_batches, weights, lr, n_examples)
+            return {**wsums, "loss": jnp.mean(losses), "tele": tele}
 
     def finish_fn(global_state, summed):
         new_state: Dict[str, Any] = {"model": summed["model"]}
         new_state.update(algo.finalize_extra_sums(
             fl, global_state, {k: summed[k] for k in extra_keys}))
-        metrics = {"local_loss": summed["loss"] / shard.n_shards}
+        if participation:
+            metrics = {"local_loss": finish_masked_loss(summed)}
+        else:
+            metrics = {"local_loss": summed["loss"] / shard.n_shards}
         if telemetry is not None:
             metrics.update(telemetry.finish(summed["tele"]))
         return new_state, metrics
@@ -298,7 +401,7 @@ def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
                              uplink, downlink, *, impl="auto",
                              shard: Optional[ClientSharding] = None,
-                             telemetry=None):
+                             telemetry=None, participation=False):
     """A federated round with the wire path routed through codecs.
 
     Returns round_fn(global_state, client_batches, n_examples, lr,
@@ -344,6 +447,45 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
                                            downlink, impl=impl, shard=shard,
                                            telemetry=telemetry)
 
+    def _finish(global_state, summed, stacked_extras, weights):
+        # apply the aggregate update to the FULL-PRECISION server model;
+        # the aggregate of the client models themselves is bcast+Σw·Δ, but
+        # folding the broadcast's codec error back into the server state
+        # would compound it round over round.
+        new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
+                                 global_state["model"], summed["delta"])
+        new_state: Dict[str, Any] = {"model": new_model}
+        if mode == "client_parallel":
+            new_state.update(algo.aggregate_extras(
+                fl, global_state, stacked_extras, weights, shard=shard))
+        else:
+            new_state.update(algo.finalize_extra_sums(
+                fl, global_state, {k: summed[k] for k in extra_keys}))
+        return new_state
+
+    if participation:
+        def round_fn(global_state, client_batches, n_examples, lr,
+                     ef_state, down_mirror, key, pmask, pstale):
+            weights = normalize_weights(n_examples, shard)
+            wsums, stacked_extras, new_ef, losses, bcast, tele = \
+                run_clients(global_state, client_batches, weights, lr,
+                            ef_state, down_mirror, key, n_examples, pmask,
+                            pstale)
+            lsums = masked_loss_sums(losses, pmask)
+            if mode == "client_parallel":
+                summed = psum_tree(
+                    {"delta": wsums["delta"], "tele": tele, **lsums}, shard)
+            else:
+                summed = psum_tree({**wsums, "tele": tele, **lsums}, shard)
+            new_state = _finish(global_state, summed, stacked_extras,
+                                weights)
+            metrics = {"local_loss": finish_masked_loss(summed)}
+            if telemetry is not None:
+                metrics.update(telemetry.finish(summed["tele"]))
+            return new_state, metrics, new_ef, bcast
+
+        return round_fn
+
     def round_fn(global_state, client_batches, n_examples, lr, ef_state,
                  down_mirror, key):
         weights = normalize_weights(n_examples, shard)
@@ -354,24 +496,9 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
             # tele rides the delta-sum psum: same single collective
             summed = psum_tree({"delta": wsums["delta"], "tele": tele},
                                shard)
-            agg_delta = summed["delta"]
         else:
             summed = psum_tree({**wsums, "tele": tele}, shard)
-            agg_delta = summed["delta"]
-
-        # apply the aggregate update to the FULL-PRECISION server model;
-        # the aggregate of the client models themselves is bcast+Σw·Δ, but
-        # folding the broadcast's codec error back into the server state
-        # would compound it round over round.
-        new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
-                                 global_state["model"], agg_delta)
-        new_state: Dict[str, Any] = {"model": new_model}
-        if mode == "client_parallel":
-            new_state.update(algo.aggregate_extras(
-                fl, global_state, stacked_extras, weights, shard=shard))
-        else:
-            new_state.update(algo.finalize_extra_sums(
-                fl, global_state, {k: summed[k] for k in extra_keys}))
+        new_state = _finish(global_state, summed, stacked_extras, weights)
         metrics = {"local_loss": mean_over_clients(losses, shard)}
         if telemetry is not None:
             metrics.update(telemetry.finish(summed["tele"]))
@@ -395,6 +522,13 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
     mirror-based downlink result (the clients' next mirror) and ``tele``
     this shard's telemetry tap sums (``{}`` when ``telemetry=None`` — the
     code path is then byte-identical to the untapped one).
+
+    ``pmask``/``pstale`` (participation; ``None`` when the axis is off):
+    a masked client's encoded payload never reaches the server (its
+    weight is zero), so its EF update is rolled back — ``new_ef`` keeps
+    the client's *incoming* residual bit for bit, exactly what the
+    reference semantics of "this client never uplinked" require.  Both
+    arrays also feed the telemetry tap contexts.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
@@ -402,7 +536,8 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
     extra_keys = algo.extra_state
 
     def run_clients(global_state, client_batches, weights, lr, ef_state,
-                    down_mirror, key, n_examples=None):
+                    down_mirror, key, n_examples=None, pmask=None,
+                    pstale=None):
         n_clients = weights.shape[0]
         kd, ku = jax.random.split(key)
         down_update = jax.tree.map(lambda m, w: m - w,
@@ -415,31 +550,49 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
         gx = algo.extra_from_state(global_state)
         client_keys = _local_client_keys(ku, n_clients, shard)
 
-        def client_step(batches, ef, ck, nex=None):
+        def client_step(batches, ef, ck, nex=None, m=None, st=None):
             trainable, loss = trainer(bcast, gx, batches, lr)
             delta = jax.tree.map(lambda a, b: a - b, trainable["model"],
                                  bcast)
             payload, new_ef = uplink.encode(
                 delta, ef, ck if uplink.uses_key else None)
             decoded = uplink.decode(payload)
+            if m is not None:
+                # dropped / late client: its payload never uplinked, so
+                # the residual it would have cleared stays local intact
+                new_ef = jax.tree.map(
+                    lambda n, o: jnp.where(m > 0, n, o), new_ef, ef)
             out = {"delta": decoded, "ef": new_ef, "loss": loss}
             for k in extra_keys:
                 out[k] = trainable[k]
             if telemetry is not None:
                 out["tele"] = telemetry.client_sums(ClientTapCtx(
                     n_examples=nex, loss=loss, global_model=bcast,
-                    delta=delta, decoded=decoded, ef=new_ef))
+                    delta=delta, decoded=decoded, ef=new_ef,
+                    pmask=m, staleness=st))
             return out
 
         if mode == "client_parallel":
-            if telemetry is None:
-                outs = jax.vmap(client_step)(client_batches, ef_state,
-                                             client_keys)
-                tele = {}
+            if pmask is None:
+                if telemetry is None:
+                    outs = jax.vmap(client_step)(client_batches, ef_state,
+                                                 client_keys)
+                    tele = {}
+                else:
+                    outs = jax.vmap(client_step)(client_batches, ef_state,
+                                                 client_keys, n_examples)
+                    tele = _sum_clients(outs["tele"])
             else:
-                outs = jax.vmap(client_step)(client_batches, ef_state,
-                                             client_keys, n_examples)
-                tele = _sum_clients(outs["tele"])
+                if telemetry is None:
+                    outs = jax.vmap(
+                        lambda b, e, k, m: client_step(b, e, k, m=m))(
+                            client_batches, ef_state, client_keys, pmask)
+                    tele = {}
+                else:
+                    outs = jax.vmap(client_step)(
+                        client_batches, ef_state, client_keys, n_examples,
+                        pmask, pstale)
+                    tele = _sum_clients(outs["tele"])
             wsums = {"delta": _weighted_sums(outs["delta"], weights)}
             for k in extra_keys:
                 wsums[k] = _weighted_sums(outs[k], weights)
@@ -451,26 +604,53 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
             acc0[k] = zeros_like_tree(global_state[k])
         acc_keys = tuple(acc0)
 
+        if pmask is None:
+            if telemetry is None:
+                def body(acc, xs):
+                    batches, w, ef, ck = xs
+                    out = client_step(batches, ef, ck)
+                    acc = {k: running_update(acc[k], out[k], w)
+                           for k in acc}
+                    return acc, (out["ef"], out["loss"])
+
+                acc, (new_ef, losses) = jax.lax.scan(
+                    body, acc0,
+                    (client_batches, weights, ef_state, client_keys))
+                return acc, None, new_ef, losses, bcast, {}
+
+            def body(acc, xs):
+                batches, w, ef, ck, nex = xs
+                out = client_step(batches, ef, ck, nex)
+                acc = {k: running_update(acc[k], out[k], w)
+                       for k in acc_keys}
+                return acc, (out["ef"], out["loss"], out["tele"])
+
+            acc, (new_ef, losses, tele_c) = jax.lax.scan(
+                body, acc0, (client_batches, weights, ef_state, client_keys,
+                             n_examples))
+            return acc, None, new_ef, losses, bcast, _sum_clients(tele_c)
+
         if telemetry is None:
             def body(acc, xs):
-                batches, w, ef, ck = xs
-                out = client_step(batches, ef, ck)
+                batches, w, ef, ck, m = xs
+                out = client_step(batches, ef, ck, m=m)
                 acc = {k: running_update(acc[k], out[k], w) for k in acc}
                 return acc, (out["ef"], out["loss"])
 
             acc, (new_ef, losses) = jax.lax.scan(
-                body, acc0, (client_batches, weights, ef_state, client_keys))
+                body, acc0, (client_batches, weights, ef_state, client_keys,
+                             pmask))
             return acc, None, new_ef, losses, bcast, {}
 
         def body(acc, xs):
-            batches, w, ef, ck, nex = xs
-            out = client_step(batches, ef, ck, nex)
+            batches, w, ef, ck, nex, m, st = xs
+            out = client_step(batches, ef, ck, nex, m, st)
             acc = {k: running_update(acc[k], out[k], w) for k in acc_keys}
             return acc, (out["ef"], out["loss"], out["tele"])
 
         acc, (new_ef, losses, tele_c) = jax.lax.scan(
             body, acc0, (client_batches, weights, ef_state, client_keys,
-                         n_examples))
+                         n_examples, pmask, pstale))
         return acc, None, new_ef, losses, bcast, _sum_clients(tele_c)
 
     return run_clients
@@ -478,7 +658,8 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
 
 def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
                                 mode: str, uplink, downlink, *, impl="auto",
-                                shard: ClientSharding, telemetry=None):
+                                shard: ClientSharding, telemetry=None,
+                                participation=False):
     """Deferred-psum split of :func:`make_compressed_round_fn`.
 
     Returns ``(local_fn, finish_fn)`` for the fused-collective superstep:
@@ -503,14 +684,25 @@ def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
                                            downlink, impl=impl, shard=shard,
                                            telemetry=telemetry)
 
-    def local_fn(global_state, client_batches, total, n_examples, lr,
-                 ef_state, down_mirror, key):
-        weights = jnp.asarray(n_examples, jnp.float32) / total
-        wsums, _, new_ef, losses, bcast, tele = run_clients(
-            global_state, client_batches, weights, lr, ef_state,
-            down_mirror, key, n_examples)
-        contribs = {**wsums, "loss": jnp.mean(losses), "tele": tele}
-        return contribs, {"new_ef": new_ef, "bcast": bcast}
+    if participation:
+        def local_fn(global_state, client_batches, total, n_examples, lr,
+                     ef_state, down_mirror, key, pmask, pstale):
+            weights = jnp.asarray(n_examples, jnp.float32) / total
+            wsums, _, new_ef, losses, bcast, tele = run_clients(
+                global_state, client_batches, weights, lr, ef_state,
+                down_mirror, key, n_examples, pmask, pstale)
+            contribs = {**wsums, **masked_loss_sums(losses, pmask),
+                        "tele": tele}
+            return contribs, {"new_ef": new_ef, "bcast": bcast}
+    else:
+        def local_fn(global_state, client_batches, total, n_examples, lr,
+                     ef_state, down_mirror, key):
+            weights = jnp.asarray(n_examples, jnp.float32) / total
+            wsums, _, new_ef, losses, bcast, tele = run_clients(
+                global_state, client_batches, weights, lr, ef_state,
+                down_mirror, key, n_examples)
+            contribs = {**wsums, "loss": jnp.mean(losses), "tele": tele}
+            return contribs, {"new_ef": new_ef, "bcast": bcast}
 
     def finish_fn(global_state, summed):
         new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
@@ -518,7 +710,10 @@ def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
         new_state: Dict[str, Any] = {"model": new_model}
         new_state.update(algo.finalize_extra_sums(
             fl, global_state, {k: summed[k] for k in extra_keys}))
-        metrics = {"local_loss": summed["loss"] / shard.n_shards}
+        if participation:
+            metrics = {"local_loss": finish_masked_loss(summed)}
+        else:
+            metrics = {"local_loss": summed["loss"] / shard.n_shards}
         if telemetry is not None:
             metrics.update(telemetry.finish(summed["tele"]))
         return new_state, metrics

@@ -1,21 +1,80 @@
 """Federated data loader: samples clients per round and builds the stacked
-round batch the round-fn consumes ([n_clients, local_steps, B, ...])."""
+round batch the round-fn consumes ([n_clients, local_steps, B, ...]).
+
+Also hosts the deterministic *chaos layer*: per-client compute-speed
+draws, per-round dropout and arrival jitter, and partial-local-epoch
+truncation, all keyed off the dataset's rng streams so every fault
+schedule is reproducible — and replayable through
+``skip_round_sampling`` on resume-from-checkpoint."""
 from __future__ import annotations
 
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+
+@dataclass(frozen=True)
+class ChaosConfig:
+    """Deterministic client-heterogeneity injection.
+
+    ``speed_sigma``: sigma of the *static* per-client lognormal compute
+    speed (drawn once at dataset construction from a seed-derived rng;
+    heavy-tailed — a client's simulated arrival time is
+    ``jitter / speed``).  ``jitter``: sigma of the per-(round, client)
+    lognormal arrival jitter.  ``dropout``: per-(round, client)
+    probability of dropping out of the round entirely.  ``truncation``:
+    probability a surviving client only completes a uniform fraction of
+    its local steps (simulated as a proportional cut to its example
+    weight — the psum shape never changes).  ``seed``: the static-speed
+    stream seed; ``None`` derives it from the dataset seed.
+
+    All per-round draws ride ``FederatedDataset._rng`` *after* the
+    round's batch draws, in a fixed order, so a given dataset seed
+    reproduces the identical fault schedule — including across
+    interrupt + resume via ``skip_round_sampling``.
+    """
+
+    speed_sigma: float = 1.0
+    jitter: float = 0.1
+    dropout: float = 0.0
+    truncation: float = 0.0
+    seed: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class ChaosDraws:
+    """One round's chaos draws for the sampled cohort.
+
+    ``arrival``: float32 [cohort] simulated completion times (1.0 == a
+    nominal median client).  ``dropped``: bool [cohort].  ``work``:
+    float32 [cohort] in (0, 1] — the fraction of local work a surviving
+    client completed (1.0 unless truncated).
+    """
+
+    arrival: np.ndarray
+    dropped: np.ndarray
+    work: np.ndarray
 
 
 class FederatedDataset:
     """Holds per-client datasets + a held-out test set."""
 
     def __init__(self, clients: List[Dict[str, np.ndarray]],
-                 test: Dict[str, np.ndarray], *, seed: int = 0):
+                 test: Dict[str, np.ndarray], *, seed: int = 0,
+                 chaos: Optional[ChaosConfig] = None):
         self.clients = clients
         self.test = test
         self._seed = seed
         self._rng = np.random.default_rng(seed)
+        self.chaos = chaos
+        if chaos is not None:
+            # static heavy-tailed per-client speeds, from their own
+            # seed-derived stream so they never perturb round sampling
+            speed_rng = np.random.default_rng(
+                seed if chaos.seed is None else chaos.seed)
+            self._client_speed = speed_rng.lognormal(
+                0.0, chaos.speed_sigma, len(clients)).astype(np.float32)
 
     @property
     def n_clients(self) -> int:
@@ -30,8 +89,17 @@ class FederatedDataset:
         server scatters per-client EF state back by cid (``dst[cids] =
         src`` / ``table.at[cids].set``), which silently keeps only the
         LAST write for a duplicated cid — one client's residual would be
-        lost every round."""
-        n = min(n, self.n_clients)
+        lost every round.
+
+        Raises ``ValueError`` when ``n > n_clients``: a cohort quietly
+        shrinking (the old behavior clamped with ``min``) is exactly the
+        silent-partial-participation failure mode the participation
+        policies make explicit."""
+        if n > self.n_clients:
+            raise ValueError(
+                f"cannot sample {n} distinct clients from a federation of "
+                f"{self.n_clients}; lower clients_per_round (or "
+                f"over_provision for the deadline policy)")
         cids = self._rng.choice(self.n_clients, size=n, replace=False)
         assert len(np.unique(cids)) == len(cids), \
             f"sample_clients returned duplicate cids: {cids}"
@@ -59,8 +127,40 @@ class FederatedDataset:
         sizes = self.client_sizes()[np.asarray(client_ids)]
         return _to_batch(stacked), sizes
 
+    def chaos_round(self, client_ids) -> Optional[ChaosDraws]:
+        """Draw one round's fault schedule for ``client_ids``.
+
+        Consumes exactly three draws from ``self._rng`` (jitter, dropout,
+        truncation — in that order, each sized to the cohort) iff chaos
+        is configured; returns ``None`` (consuming nothing) otherwise.
+        Callers must invoke this immediately after ``round_batch`` so the
+        stream position is a pure function of (seed, round index) and
+        ``skip_round_sampling`` can replay it.
+        """
+        if self.chaos is None:
+            return None
+        c = self.chaos
+        n = len(client_ids)
+        jitter = self._rng.lognormal(0.0, c.jitter, n).astype(np.float32)
+        dropped = self._rng.random(n) < c.dropout
+        trunc = self._rng.random(2 * n).reshape(2, n)
+        work = np.where(trunc[0] < c.truncation,
+                        np.maximum(trunc[1], 1.0 / 16.0), 1.0)
+        arrival = jitter / self._client_speed[np.asarray(client_ids)]
+        return ChaosDraws(arrival=arrival, dropped=dropped,
+                          work=work.astype(np.float32))
+
+    def _consume_chaos_round(self, n: int) -> None:
+        """Consume ``chaos_round``'s rng draws without materializing them
+        (the ``skip_round_sampling`` replay counterpart)."""
+        c = self.chaos
+        self._rng.lognormal(0.0, c.jitter, n)
+        self._rng.random(n)
+        self._rng.random(2 * n)
+
     def round_chunk(self, n_rounds: int, clients_per_round: int,
-                    local_steps: int, batch: int, *, pool=None):
+                    local_steps: int, batch: int, *, pool=None,
+                    participation: Optional[Callable] = None):
         """Sample ``n_rounds`` consecutive rounds for the superstep engine.
 
         Returns (cids [K, C], batches {k: [K, C, steps, B, ...]},
@@ -75,14 +175,26 @@ class FederatedDataset:
         no new host pages.  The caller must not re-enter with the same
         pool while the previous chunk's buffers are still being
         transferred.
+
+        ``participation`` (optional): a host callable
+        ``draws -> RoundParticipation`` (see ``repro.fl.participation``)
+        invoked once per round with that round's :class:`ChaosDraws`
+        (``None`` when chaos is off).  When given, a fourth element is
+        returned: ``{"mask" [K, C], "staleness" [K, C], "weight" [K, C],
+        "round_time" [K], "n_arrived" [K]}``.  Chaos draws are consumed
+        iff ``self.chaos`` is set, *independent* of ``participation``,
+        so the rng stream position never depends on who is reading it.
         """
-        cids_l, batch_l, size_l = [], [], []
+        cids_l, batch_l, size_l, part_l = [], [], [], []
         for _ in range(n_rounds):
             cids = self.sample_clients(clients_per_round)
             b, s = self.round_batch(cids, local_steps, batch)
+            draws = self.chaos_round(cids)
             cids_l.append(cids)
             batch_l.append(b)
             size_l.append(s)
+            if participation is not None:
+                part_l.append((participation(draws), draws))
 
         def _stack(name, parts, dtype=None):
             dtype = dtype or parts[0].dtype
@@ -95,8 +207,27 @@ class FederatedDataset:
 
         stacked = {k: _stack(f"batch/{k}", [b[k] for b in batch_l])
                    for k in batch_l[0]}
-        return (_stack("cids", cids_l, np.int32), stacked,
-                _stack("sizes", size_l, np.float32))
+        out = (_stack("cids", cids_l, np.int32), stacked,
+               _stack("sizes", size_l, np.float32))
+        if participation is None:
+            return out
+        f32 = np.float32
+        part = {
+            "mask": _stack("part/mask", [p.mask for p, _ in part_l], f32),
+            "staleness": _stack("part/staleness",
+                                [p.staleness for p, _ in part_l], f32),
+            "weight": _stack("part/weight",
+                             [p.weight for p, _ in part_l], f32),
+            # truncated clients complete a fraction of their local work;
+            # simulate as a proportional example-weight cut (host-side)
+            "work": _stack("part/work",
+                           [np.ones_like(p.mask) if d is None else d.work
+                            for p, d in part_l], f32),
+            "round_time": np.array([p.round_time for p, _ in part_l], f32),
+            "n_arrived": np.array([p.n_arrived for p, _ in part_l],
+                                  np.int32),
+        }
+        return out + (part,)
 
     def skip_round_sampling(self, n_rounds: int, clients_per_round: int,
                             local_steps: int, batch: int) -> None:
@@ -123,6 +254,8 @@ class FederatedDataset:
                 size = len(self.clients[cid][key])
                 for _ in range(local_steps):
                     self._rng.choice(size, size=batch, replace=size < batch)
+            if self.chaos is not None:
+                self._consume_chaos_round(len(cids))
 
     def test_batch(self, n: Optional[int] = None) -> Dict[str, np.ndarray]:
         if n is None:

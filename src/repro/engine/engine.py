@@ -176,6 +176,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                          fused_collective: bool = True,
                          sharded_eval: bool = True,
                          telemetry=False, runlog=None,
+                         halt_on_nonfinite: bool = False,
                          profile_dir: Optional[str] = None) -> ServerResult:
     """Engine-backed server loop (see module docstring).
 
@@ -206,19 +207,59 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
       path given here is opened, streamed and closed by the engine;
     * ``profile_dir`` — start a ``jax.profiler`` trace into the directory
       for the whole run, with one ``StepTraceAnnotation`` per chunk.
+
+    Robustness (both off by default — the defaults keep every traced code
+    path byte-identical to the pre-robustness engine):
+
+    * partial participation — ``fl.participation`` names a policy from
+      ``repro.fl.participation`` (``full_sync`` / ``deadline`` /
+      ``buffered_async``) and ``data`` may carry a
+      :class:`repro.data.federated.ChaosConfig`.  When either deviates
+      from the default, the engine samples the policy's (possibly
+      over-provisioned) cohort, folds the host-decided mask / staleness
+      weight / work fraction into the staged example weights (so dropped
+      or late clients are zeroed INSIDE the existing one-psum — no shape
+      changes, no extra collectives), carries masked clients' EF state
+      forward untouched, and accounts per-round ``sim_time`` plus the
+      partial uplink (``n_up``) in the CommLog;
+    * ``halt_on_nonfinite`` — drain metrics at every chunk boundary and,
+      on the first non-finite metric value, checkpoint the current state
+      (if ``checkpoint_dir`` is set) and stop cleanly instead of training
+      onward on garbage; ``stats["halted_at"]`` records the boundary.
     """
     from repro.checkpoint.io import (insert_scratch_rows, load_tree,
                                      restore_server_state,
                                      save_server_state, save_tree,
                                      strip_scratch_rows)
     from repro.fl.comm import CommLog
+    from repro.fl.participation import make_policy
 
     shard = client_sharding(mesh) if mesh is not None else None
     n_sampled = min(fl.clients_per_round, data.n_clients)
+
+    # --- participation: who lands in each round, at what weight ------------
+    # part_active=False (full_sync policy, no chaos) takes the exact
+    # pre-participation code path everywhere: no extra round_chunk outputs,
+    # no pmask/pstale superstep args, byte-identical traced programs.
+    policy = make_policy(fl.participation)
+    part_active = (getattr(data, "chaos", None) is not None
+                   or policy.name != "full_sync")
+    c_round = policy.cohort_size(n_sampled, fl) if part_active else n_sampled
+    select_fn = None
+    if part_active:
+        def select_fn(draws):
+            if draws is None:     # chaos off: everyone reports at t=1.0
+                arrival = np.ones(c_round, np.float32)
+                dropped = np.zeros(c_round, bool)
+            else:
+                arrival, dropped = draws.arrival, draws.dropped
+            return policy.select(arrival, dropped, fl, n_sampled)
+
     if shard is not None:
-        if n_sampled % shard.n_shards:
+        if c_round % shard.n_shards:
             raise ValueError(
-                f"clients_per_round={n_sampled} must divide over the mesh's "
+                f"round cohort {c_round} (clients_per_round={n_sampled}, "
+                f"policy {policy.name!r}) must divide over the mesh's "
                 f"{shard.n_shards} client shards {shard.axes}")
         if fl.compressed and data.n_clients % shard.n_shards:
             raise ValueError(
@@ -238,9 +279,10 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             os.path.join(checkpoint_dir, "meta.json")):
         global_state, start_round = restore_server_state(checkpoint_dir,
                                                          global_state)
-        # replay the consumed sampling stream so resumed rounds draw the
-        # exact clients/batches an uninterrupted run would have
-        data.skip_round_sampling(start_round, fl.clients_per_round,
+        # replay the consumed sampling stream (and, with chaos on, the
+        # fault-schedule draws) so resumed rounds draw the exact
+        # clients/batches/faults an uninterrupted run would have
+        data.skip_round_sampling(start_round, c_round,
                                  fl.local_steps, fl.local_batch)
     global_state = jax.tree.map(lambda x: _stage(jnp.asarray(x)),
                                 global_state)
@@ -296,10 +338,11 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         else:
             tele = make_telemetry(
                 "compressed" if compressed else "plain",
-                n_clients=n_sampled,
+                n_clients=c_round,
                 n_shards=shard.n_shards if shard is not None else 1,
                 available=frozenset(
-                    ("ef",) if compressed and uplink.stateful else ()),
+                    (("ef",) if compressed and uplink.stateful else ())
+                    + (("pmask", "staleness") if part_active else ())),
                 taps=None if telemetry is True else tuple(telemetry))
     # a path means the engine owns the sink's lifetime (stream + close)
     owns_runlog = runlog is not None and not hasattr(runlog, "span")
@@ -309,7 +352,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         """ef.npz keeps the compact layout — strip the scratch rows."""
         ef_disk = (strip_scratch_rows(ef_all, shard.n_shards)
                    if shard is not None else ef_all)
-        save_tree(ef_path, (ef_disk, down_mirror))
+        save_tree(ef_path, (ef_disk, down_mirror), runlog=rl)
 
     # --- fixed-shape evaluation -------------------------------------------
     # on a mesh the eval batch splits positionally over the client shards
@@ -345,9 +388,21 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     pool = StagingPool() if jax.default_backend() != "cpu" else None
 
     def build_chunk(r0, r1, src=None, staging_pool=None):
-        cids, batches, sizes = (src or data).round_chunk(
-            r1 - r0, fl.clients_per_round, fl.local_steps, fl.local_batch,
-            pool=staging_pool)
+        out = (src or data).round_chunk(
+            r1 - r0, c_round, fl.local_steps, fl.local_batch,
+            pool=staging_pool, participation=select_fn)
+        if select_fn is not None:
+            cids, batches, sizes, part = out
+            # the whole participation outcome is weight-borne: dropped /
+            # late clients are zeroed (mask), staleness-discounted
+            # (weight) and truncation-scaled (work) HERE, on the host, so
+            # the staged example weights drive the unchanged normalized
+            # weighted mean — the fused one-psum never learns masking
+            # exists.  pmask/pstale only reach the round fns for EF
+            # preservation, the masked loss lanes and telemetry.
+            sizes = sizes * part["mask"] * part["weight"] * part["work"]
+        else:
+            cids, batches, sizes, part = out + (None,)
         staged = {
             "batches": {k: _stage(v, sharded_like=True)
                         for k, v in batches.items()},
@@ -360,6 +415,17 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         if compressed:   # only the compressed superstep consumes these
             staged["cids"] = _stage(cids)
             staged["ridx"] = _stage(np.arange(r0, r1, dtype=np.int32))
+        if part is not None:
+            staged["pmask"] = _stage(part["mask"], sharded_like=True)
+            staged["pstale"] = _stage(part["staleness"], sharded_like=True)
+            # host-only accounting: simulated round wall-clock and the
+            # partial uplink count ride the MetricsPump alongside the
+            # device fetch — no device round-trip involved
+            staged["host"] = {
+                "metrics": {"sim_time": part["round_time"],
+                            "arrived": part["n_arrived"].astype(np.float32)},
+                "n_up": part["n_arrived"],
+            }
         if staging_pool is not None:
             # free the pool's host buffers for the next chunk: the wait
             # lands on the PREFETCH thread, never the dispatch thread
@@ -377,26 +443,33 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                     bundle, fl, mode, n_rounds, mesh, uplink=uplink,
                     downlink=downlink, eval_fn=in_scan, impl=impl,
                     fused_collective=fused_collective,
-                    eval_sharded=eval_shard is not None, telemetry=tele)
+                    eval_sharded=eval_shard is not None, telemetry=tele,
+                    participation=part_active)
             elif compressed:
                 fn = make_compressed_superstep(
                     bundle, fl, mode, n_rounds, uplink, downlink,
-                    eval_fn=in_scan, impl=impl, telemetry=tele)
+                    eval_fn=in_scan, impl=impl, telemetry=tele,
+                    participation=part_active)
             else:
                 fn = make_plain_superstep(bundle, fl, mode, n_rounds,
                                           eval_fn=in_scan, impl=impl,
-                                          telemetry=tele)
+                                          telemetry=tele,
+                                          participation=part_active)
             # donate the carried state AND the staged chunk — batches /
-            # sizes / lrs (/cids/ridx) are consumed exactly once.  The
-            # host-staged arrays are only donatable on accelerator
-            # backends (on CPU their buffers alias host numpy memory and
-            # XLA refuses, warning on every dispatch); the lr slice is
-            # device-native and always donates.
+            # sizes / lrs (/cids/ridx/pmask/pstale) are consumed exactly
+            # once.  The host-staged arrays are only donatable on
+            # accelerator backends (on CPU their buffers alias host numpy
+            # memory and XLA refuses, warning on every dispatch); the lr
+            # slice is device-native and always donates.
             host_staged = jax.default_backend() != "cpu"
             if compressed:
-                donate = (0, 1, 2, 5) + ((3, 4, 6, 7) if host_staged else ())
+                donate = (0, 1, 2, 5) + (
+                    ((3, 4, 6, 7) + ((9, 10) if part_active else ()))
+                    if host_staged else ())
             else:
-                donate = (0, 3) + ((1, 2) if host_staged else ())
+                donate = (0, 3) + (
+                    ((1, 2) + ((4, 5) if part_active else ()))
+                    if host_staged else ())
             steps[n_rounds] = jax.jit(fn, donate_argnums=donate)
         return steps[n_rounds]
 
@@ -407,15 +480,17 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         zero trees (calibration — the real carries must not be donated)."""
         state = jax.tree.map(jnp.zeros_like, global_state) \
             if state is None else state
+        part_args = ((staged["pmask"], staged["pstale"])
+                     if part_active else ())
         if compressed:
             ef = jax.tree.map(jnp.zeros_like, ef_all) if ef is None else ef
             mirror = jax.tree.map(jnp.zeros_like, down_mirror) \
                 if mirror is None else mirror
             return step(state, ef, mirror, staged["batches"],
                         staged["sizes"], staged["lrs"], staged["cids"],
-                        staged["ridx"], round_key, *test_args)
+                        staged["ridx"], round_key, *part_args, *test_args)
         return step(state, staged["batches"], staged["sizes"],
-                    staged["lrs"], *test_args)
+                    staged["lrs"], *part_args, *test_args)
 
     # --- chunk size: fixed or calibrated ----------------------------------
     chunk_rounds = superstep_rounds
@@ -437,7 +512,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         lambda r0, r1: build_chunk(r0, r1, staging_pool=pool),
         schedule, enabled=prefetch, runlog=rl)
 
-    pump = MetricsPump(comm, n_sampled, wire_up=wire_up,
+    pump = MetricsPump(comm, c_round, wire_up=wire_up,
                        wire_down=wire_down,
                        n_down=(data.n_clients
                                if fl.downlink_codec != "identity" else None),
@@ -452,9 +527,11 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     rl.event("run.start", rounds=rounds, start_round=start_round,
              chunk_rounds=chunk_rounds, compressed=compressed,
              client_shards=shard.n_shards if shard is not None else 1,
-             telemetry=tele is not None)
+             telemetry=tele is not None,
+             participation=policy.name if part_active else None)
     if profile_dir:
         jax.profiler.start_trace(profile_dir)
+    halted_at = None
     try:
         # the pump context drains into the CommLog on a clean exit and
         # ABORTS (cancel + non-blocking shutdown) when unwinding an
@@ -481,16 +558,36 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                                 if snap is not None else global_state
                             eval_metrics = jit_eval(eval_state, test_batch,
                                                     test_mask)
-                pump.submit(mstack, eval_metrics)
+                pump.submit(mstack, eval_metrics,
+                            host=staged.get("host"))
                 if callback is not None:    # per-round chunks by contract
                     pump.drain()
                     metrics = {k: v for k, v in comm.history[-1].items()
                                if k not in _NON_METRIC_KEYS}
                     callback(r0, global_state, metrics)
+                if halt_on_nonfinite:
+                    # the drain costs the metrics overlap — that is the
+                    # documented price of the option (off by default)
+                    pump.drain()
+                    if pump.nonfinite_round is not None:
+                        rl.event("run.halt", reason="metrics.nonfinite",
+                                 round=pump.nonfinite_round, boundary=r1)
+                        if checkpoint_dir:
+                            with rl.span("checkpoint.save", round=r1,
+                                         halt=True):
+                                save_server_state(
+                                    checkpoint_dir, global_state, r1,
+                                    extra={"algorithm": fl.algorithm,
+                                           "halted": True}, runlog=rl)
+                                if compressed:
+                                    save_ef()
+                        halted_at = r1
+                        break
                 if checkpoint_dir and r1 % checkpoint_every == 0:
                     with rl.span("checkpoint.save", round=r1):
                         save_server_state(checkpoint_dir, global_state, r1,
-                                          extra={"algorithm": fl.algorithm})
+                                          extra={"algorithm": fl.algorithm},
+                                          runlog=rl)
                         if compressed:
                             save_ef()
     finally:
@@ -498,10 +595,11 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         if profile_dir:
             jax.profiler.stop_trace()
 
-    if checkpoint_dir:
+    if checkpoint_dir and halted_at is None:
         with rl.span("checkpoint.save", round=rounds, final=True):
             save_server_state(checkpoint_dir, global_state, rounds,
-                              extra={"algorithm": fl.algorithm})
+                              extra={"algorithm": fl.algorithm},
+                              runlog=rl)
             if compressed:
                 save_ef()
     stats = {
@@ -515,6 +613,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         "telemetry": tele is not None,
         "staging_pool_hits": pool.hits if pool is not None else 0,
         "staging_pool_misses": pool.misses if pool is not None else 0,
+        "participation": policy.name if part_active else None,
+        "round_cohort": c_round,
+        "halted_at": halted_at,
     }
     rl.counter("prefetch.wait_s", stats["host_wait_s"])
     rl.counter("metrics.wait_s", stats["metrics_wait_s"])

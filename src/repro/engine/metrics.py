@@ -66,6 +66,9 @@ class MetricsPump:
         self._pool = ThreadPoolExecutor(1, thread_name_prefix="engine-metrics")
         self._pending: deque = deque()
         self.wait_s = 0.0    # dispatch-thread time blocked on metric sync
+        # first round whose metrics contained a non-finite value (1-based),
+        # or None — the engine's halt_on_nonfinite option polls this
+        self.nonfinite_round: Optional[int] = None
 
     def __enter__(self) -> "MetricsPump":
         return self
@@ -81,7 +84,7 @@ class MetricsPump:
             self.abort()
         return False
 
-    def submit(self, metrics_stack, eval_metrics=None):
+    def submit(self, metrics_stack, eval_metrics=None, host=None):
         """Queue one chunk: ``metrics_stack`` leaves are [K] device arrays;
         ``eval_metrics`` (scalar device dict or None) merges into the
         chunk's LAST round — chunk boundaries are aligned to eval rounds
@@ -93,20 +96,29 @@ class MetricsPump:
         what waits for the future, so the merge happens when it resolves
         and the dispatch thread never blocks here unless ``max_pending``
         chunks have piled up (accounted in ``wait_s``).
+
+        ``host`` (optional) carries host-computed per-round values that
+        never touched the device: ``host["metrics"]`` maps metric name to
+        a [K] array merged into each round, and ``host["n_up"]`` ([K] int)
+        overrides the uplink client count per round (partial-participation
+        accounting).  Host values need no fetch, so they ride alongside
+        the future and merge at log time.
         """
-        self._pending.append(self._pool.submit(
-            jax.device_get, (metrics_stack, eval_metrics)))
+        self._pending.append((self._pool.submit(
+            jax.device_get, (metrics_stack, eval_metrics)), host))
         while len(self._pending) > self._max_pending:
             t0 = time.perf_counter()
-            fetched = self._pending.popleft().result()
+            fut, h = self._pending.popleft()
+            fetched = fut.result()
             self.wait_s += time.perf_counter() - t0
-            self._log(fetched)
+            self._log(fetched, h)
 
     def drain(self):
         """Resolve every pending chunk into the CommLog (host blocks)."""
         t0 = time.perf_counter()
         while self._pending:
-            self._log(self._pending.popleft().result())
+            fut, h = self._pending.popleft()
+            self._log(fut.result(), h)
         self.wait_s += time.perf_counter() - t0
 
     def close(self):
@@ -117,7 +129,8 @@ class MetricsPump:
         """Exception path: cancel queued fetches and retire the worker
         without draining — never blocks on device state mid-unwind."""
         while self._pending:
-            self._pending.popleft().cancel()
+            fut, _ = self._pending.popleft()
+            fut.cancel()
         self._pool.shutdown(wait=False, cancel_futures=True)
 
     @staticmethod
@@ -137,14 +150,18 @@ class MetricsPump:
         except (TypeError, ValueError):
             return str(v)
 
-    def _log(self, fetched):
+    def _log(self, fetched, host=None):
         stack, ev = fetched
         # an empty metrics stack is legal (a round fn with no scalar
         # metrics); eval-only chunks still log their single round
         n_rounds = (len(next(iter(stack.values()))) if stack
                     else (1 if ev is not None else 0))
+        host_metrics = host.get("metrics", {}) if host else {}
+        n_up = host.get("n_up") if host else None
         for k in range(n_rounds):
             metrics = {key: self._scalar(v[k]) for key, v in stack.items()}
+            metrics.update({key: float(v[k])
+                            for key, v in host_metrics.items()})
             if ev is not None and k == n_rounds - 1:
                 metrics.update({key: self._scalar(v)
                                 for key, v in ev.items()})
@@ -155,7 +172,11 @@ class MetricsPump:
                 # reference loop is pinned); the event makes it findable
                 self._runlog.warning("metrics.nonfinite",
                                      round=self._comm.rounds + 1, keys=bad)
+                if self.nonfinite_round is None:
+                    self.nonfinite_round = self._comm.rounds + 1
             self._comm.log_round(None, self._n_clients, metrics,
+                                 n_up=(None if n_up is None
+                                       else int(n_up[k])),
                                  **self._wire)
             if self._verbose:
                 print(f"round {self._comm.rounds:4d} " +

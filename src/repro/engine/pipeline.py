@@ -84,6 +84,8 @@ class HostPrefetcher:
         self._enabled = enabled
         self._runlog = as_runlog(runlog)
         self.wait_s = 0.0       # consumer time blocked on staging
+        self.error = None       # builder exception the consumer never saw
+        self._closed = False
         if enabled:
             self._q: queue.Queue = queue.Queue(maxsize=depth)
             self._stop = threading.Event()
@@ -115,7 +117,12 @@ class HostPrefetcher:
                     return
             self._put(None)
         except BaseException as e:  # surfaced at the consumer
-            self._put(e)
+            if not self._put(e):
+                # the consumer is already gone (stopped early / closing):
+                # the queue put was refused, so park the exception on the
+                # prefetcher for close() to surface instead of letting it
+                # die silently with this daemon thread
+                self.error = e
 
     def __iter__(self) -> Iterator:
         if not self._enabled:
@@ -136,14 +143,34 @@ class HostPrefetcher:
                 raise item
             yield item
 
-    def close(self):
-        """Stop the worker and drop any staged chunks (idempotent)."""
-        if not self._enabled:
-            return
-        self._stop.set()
+    def _drain_queue(self):
+        """Drop staged chunks; keep the FIRST builder exception found."""
         try:
             while True:
-                self._q.get_nowait()
+                item = self._q.get_nowait()
+                if isinstance(item, BaseException) and self.error is None:
+                    self.error = item
         except queue.Empty:
             pass
-        self._thread.join(timeout=1.0)
+
+    def close(self):
+        """Stop the worker and drop any staged chunks (idempotent).
+
+        A builder exception the consumer never iterated far enough to see
+        — it stopped early, or the failure raced the shutdown — is
+        captured on ``self.error`` and emitted as a structured runlog
+        warning rather than dying silently with the daemon thread.
+        ``close`` never raises it: the engine closes from a ``finally``
+        block, where raising would mask the error already unwinding.
+        """
+        if not self._enabled or self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        self._drain_queue()             # unblock a worker stuck in _put
+        self._thread.join(timeout=5.0)
+        if self._thread.is_alive():
+            self._runlog.warning("prefetch.join_timeout")
+        self._drain_queue()             # anything parked while joining
+        if self.error is not None:
+            self._runlog.warning("prefetch.error", error=repr(self.error))

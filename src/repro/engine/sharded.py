@@ -83,7 +83,8 @@ def _unchecked_shard_map(fn, mesh, in_specs, out_specs):
 def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
                            uplink=None, downlink=None, eval_fn=None,
                            impl="auto", fused_collective=True,
-                           eval_sharded=True, telemetry=None):
+                           eval_sharded=True, telemetry=None,
+                           participation=False):
     """``shard_map``-wrapped superstep on ``mesh`` (client axes size > 1).
 
     Same call signature as the unsharded supersteps; the plain variant is
@@ -104,23 +105,28 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
     ax = shard.axis_name
     test_spec = P(ax) if eval_sharded else P()
     n_test = 2 if eval_fn is not None else 0
+    # pmask/pstale [K, C] split over the client axes, exactly like sizes
+    part_specs = (P(None, ax), P(None, ax)) if participation else ()
 
     if uplink is None:
         inner = make_plain_superstep(bundle, fl, mode, n_rounds,
                                      eval_fn=eval_fn, impl=impl,
                                      shard=shard, fused=fused_collective,
-                                     telemetry=telemetry)
+                                     telemetry=telemetry,
+                                     participation=participation)
         in_specs = (P(), P(None, ax), P(None, ax), P()) \
-            + (test_spec,) * n_test
+            + part_specs + (test_spec,) * n_test
         out_specs = (P(), P())
     else:
         inner = make_compressed_superstep(bundle, fl, mode, n_rounds,
                                           uplink, downlink, eval_fn=eval_fn,
                                           impl=impl, shard=shard,
                                           fused=fused_collective,
-                                          telemetry=telemetry)
+                                          telemetry=telemetry,
+                                          participation=participation)
         in_specs = (P(), P(ax), P(), P(None, ax), P(None, ax),
-                    P(), P(), P(), P()) + (test_spec,) * n_test
+                    P(), P(), P(), P()) + part_specs \
+            + (test_spec,) * n_test
         out_specs = (P(), P(), P(ax), P())
 
     return _unchecked_shard_map(inner, mesh, in_specs, out_specs)

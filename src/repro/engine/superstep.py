@@ -89,7 +89,7 @@ def _size_total(n_examples):
 
 def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
                          impl="auto", shard=None, fused=False,
-                         telemetry=None):
+                         telemetry=None, participation=False):
     """Uncompressed K-round superstep.
 
     Returns ``superstep(global_state, batches, sizes, lrs[, test_batch,
@@ -102,32 +102,61 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
     positionally sharded for a shard-aware evaluator).  ``fused=True``
     (sharded only) runs the round's aggregation as ONE packed psum with
     the weight total pipelined one round ahead (see module docstring).
+
+    ``participation=True`` inserts ``pmask [K, C]`` / ``pstale [K, C]``
+    after ``lrs`` (this shard's positional slice under ``shard``, like
+    sizes) and scans them through the participation-aware round fn; the
+    sizes arriving here are already mask-and-staleness-weighted by the
+    engine, so weight plumbing — including the fused pipelined total — is
+    untouched.
     """
     if fused:
         assert shard is not None, "fused collectives require a shard"
         return _make_fused_plain_superstep(bundle, fl, mode, n_rounds,
                                            eval_fn=eval_fn, impl=impl,
-                                           shard=shard, telemetry=telemetry)
+                                           shard=shard, telemetry=telemetry,
+                                           participation=participation)
     round_fn = make_round_fn(bundle, fl, mode, impl=impl, shard=shard,
-                             telemetry=telemetry)
+                             telemetry=telemetry,
+                             participation=participation)
 
-    def one_round(state, b, n, lr, test):
-        state, metrics = round_fn(state, b, n, lr)
+    def one_round(state, xs, test):
+        state, metrics = round_fn(state, *xs)
         if eval_fn is not None:
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, metrics
 
+    if participation:
+        if n_rounds == 1:
+            def superstep(global_state, batches, sizes, lrs, pmask, pstale,
+                          *test):
+                b0 = jax.tree.map(lambda a: a[0], batches)
+                state, m = one_round(
+                    global_state,
+                    (b0, sizes[0], lrs[0], pmask[0], pstale[0]), test)
+                return state, _stack1(m)
+            return superstep
+
+        def superstep(global_state, batches, sizes, lrs, pmask, pstale,
+                      *test):
+            def body(state, xs):
+                return one_round(state, xs, test)
+
+            return jax.lax.scan(body, global_state,
+                                (batches, sizes, lrs, pmask, pstale))
+
+        return superstep
+
     if n_rounds == 1:
         def superstep(global_state, batches, sizes, lrs, *test):
             b0 = jax.tree.map(lambda a: a[0], batches)
-            state, m = one_round(global_state, b0, sizes[0], lrs[0], test)
+            state, m = one_round(global_state, (b0, sizes[0], lrs[0]), test)
             return state, _stack1(m)
         return superstep
 
     def superstep(global_state, batches, sizes, lrs, *test):
         def body(state, xs):
-            b, n, lr = xs
-            return one_round(state, b, n, lr, test)
+            return one_round(state, xs, test)
 
         return jax.lax.scan(body, global_state, (batches, sizes, lrs))
 
@@ -135,19 +164,51 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
 
 
 def _make_fused_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn,
-                                impl, shard, telemetry=None):
+                                impl, shard, telemetry=None,
+                                participation=False):
     """One-psum-per-round uncompressed superstep (shard_map body)."""
     local_fn, finish_fn = make_round_parts(bundle, fl, mode, impl=impl,
-                                           shard=shard, telemetry=telemetry)
+                                           shard=shard, telemetry=telemetry,
+                                           participation=participation)
 
-    def one_round(state, total, b, n, lr, n_next, test):
-        contribs = local_fn(state, b, total, n, lr)
+    def one_round(state, total, b, n, lr, n_next, test, pm=None, ps=None):
+        if participation:
+            contribs = local_fn(state, b, total, n, lr, pm, ps)
+        else:
+            contribs = local_fn(state, b, total, n, lr)
         summed = fused_psum({"round": contribs,
                              "total": _size_total(n_next)}, shard)
         state, metrics = finish_fn(state, summed["round"])
         if eval_fn is not None:
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, summed["total"], metrics
+
+    if participation:
+        def superstep(global_state, batches, sizes, lrs, pmask, pstale,
+                      *test):
+            total = fused_psum({"total": _size_total(sizes[0])},
+                               shard)["total"]
+            if n_rounds == 1:
+                b0 = jax.tree.map(lambda a: a[0], batches)
+                state, _, m = one_round(global_state, total, b0, sizes[0],
+                                        lrs[0], sizes[0], test,
+                                        pmask[0], pstale[0])
+                return state, _stack1(m)
+            sizes_next = jnp.roll(sizes, -1, axis=0)
+
+            def body(carry, xs):
+                state, total = carry
+                b, n, lr, n_next, pm, ps = xs
+                state, total, m = one_round(state, total, b, n, lr, n_next,
+                                            test, pm, ps)
+                return (state, total), m
+
+            (state, _), mstack = jax.lax.scan(
+                body, (global_state, total),
+                (batches, sizes, lrs, sizes_next, pmask, pstale))
+            return state, mstack
+
+        return superstep
 
     def superstep(global_state, batches, sizes, lrs, *test):
         # prologue: round 0's weight total (later rounds' ride the scan)
@@ -299,7 +360,8 @@ def _slice_positional(full_tree, shard, c_loc):
 
 def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
                               *, eval_fn=None, impl="auto", shard=None,
-                              fused=False, telemetry=None):
+                              fused=False, telemetry=None,
+                              participation=False):
     """Compressed (codec-routed) K-round superstep.
 
     Returns ``superstep(global_state, ef_all, mirror, batches, sizes, lrs,
@@ -317,15 +379,23 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
     :func:`ef_gather_exchange` / :func:`ef_scatter_exchange` (three
     collectives per round) or, with ``fused=True``, one packed psum per
     round (see module docstring); ``cids`` stays the full round sample.
+
+    ``participation=True`` inserts ``pmask [K, C]`` / ``pstale [K, C]``
+    after ``round_key`` (this shard's positional slice under ``shard``).
+    A masked client's EF row comes back equal to its incoming value (the
+    round fn rolls the update back), so the unchanged scatter path writes
+    the residual forward untouched.
     """
     if fused:
         assert shard is not None, "fused collectives require a shard"
         return _make_fused_compressed_superstep(
             bundle, fl, mode, n_rounds, uplink, downlink, eval_fn=eval_fn,
-            impl=impl, shard=shard, telemetry=telemetry)
+            impl=impl, shard=shard, telemetry=telemetry,
+            participation=participation)
     round_fn = make_compressed_round_fn(bundle, fl, mode, uplink, downlink,
                                         impl=impl, shard=shard,
-                                        telemetry=telemetry)
+                                        telemetry=telemetry,
+                                        participation=participation)
 
     def gather_rows(ef_all, cids, c_loc):
         if shard is None:
@@ -347,15 +417,49 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
                                                 impl=impl),
             ef_all, new_ef)
 
-    def one_round(state, ef_all, mirror, b, n, lr, cids, r, round_key, test):
+    def one_round(state, ef_all, mirror, b, n, lr, cids, r, round_key, test,
+                  pm=None, ps=None):
         ef_round = gather_rows(ef_all, cids, n.shape[0])
         key_r = jax.random.fold_in(round_key, r)
-        state, metrics, new_ef, mirror = round_fn(state, b, n, lr, ef_round,
-                                                  mirror, key_r)
+        if participation:
+            state, metrics, new_ef, mirror = round_fn(
+                state, b, n, lr, ef_round, mirror, key_r, pm, ps)
+        else:
+            state, metrics, new_ef, mirror = round_fn(
+                state, b, n, lr, ef_round, mirror, key_r)
         ef_all = scatter_rows(ef_all, cids, new_ef)
         if eval_fn is not None:
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, ef_all, mirror, metrics
+
+    if participation:
+        if n_rounds == 1:
+            def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                          cids, round_idx, round_key, pmask, pstale, *test):
+                b0 = jax.tree.map(lambda a: a[0], batches)
+                state, ef_all, mirror, m = one_round(
+                    global_state, ef_all, mirror, b0, sizes[0], lrs[0],
+                    cids[0], round_idx[0], round_key, test,
+                    pmask[0], pstale[0])
+                return state, _stack1(m), ef_all, mirror
+            return superstep
+
+        def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                      cids, round_idx, round_key, pmask, pstale, *test):
+            def body(carry, xs):
+                state, ef_all, mirror = carry
+                b, n, lr, cid, r, pm, ps = xs
+                state, ef_all, mirror, m = one_round(
+                    state, ef_all, mirror, b, n, lr, cid, r, round_key,
+                    test, pm, ps)
+                return (state, ef_all, mirror), m
+
+            (state, ef_all, mirror), mstack = jax.lax.scan(
+                body, (global_state, ef_all, mirror),
+                (batches, sizes, lrs, cids, round_idx, pmask, pstale))
+            return state, mstack, ef_all, mirror
+
+        return superstep
 
     if n_rounds == 1:
         def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
@@ -386,7 +490,7 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
 
 def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
                                      downlink, *, eval_fn, impl, shard,
-                                     telemetry=None):
+                                     telemetry=None, participation=False):
     """One-psum-per-round compressed superstep (shard_map body).
 
     Pipelining layout: a per-chunk prologue psum seeds round 0's gathered
@@ -396,16 +500,26 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
     next-round slots are computed from rolled inputs and discarded —
     keeping the scan body uniform costs one dead [C, n] lane in the final
     psum of each chunk.
+
+    Participation keeps this layout intact: masked clients are zeroed by
+    the pre-weighted sizes (so the pipelined totals need no change), a
+    masked client's ``new_ef`` equals its incoming row (the round fn
+    rolls the update back), and the mask-weighted loss sums are two f32
+    lanes in the same packed psum — still exactly ONE psum per round.
     """
     local_fn, finish_fn = make_compressed_round_parts(
         bundle, fl, mode, uplink, downlink, impl=impl, shard=shard,
-        telemetry=telemetry)
+        telemetry=telemetry, participation=participation)
 
     def one_round(state, ef_all, mirror, ef_rows, total, b, n, lr, cid,
-                  cid_next, n_next, r, round_key, test):
+                  cid_next, n_next, r, round_key, test, pm=None, ps=None):
         key_r = jax.random.fold_in(round_key, r)
-        contribs, aux = local_fn(state, b, total, n, lr, ef_rows, mirror,
-                                 key_r)
+        if participation:
+            contribs, aux = local_fn(state, b, total, n, lr, ef_rows,
+                                     mirror, key_r, pm, ps)
+        else:
+            contribs, aux = local_fn(state, b, total, n, lr, ef_rows,
+                                     mirror, key_r)
         summed = fused_psum({
             "round": contribs,
             "scat": jax.tree.map(
@@ -427,21 +541,55 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, ef_all, aux["bcast"], ef_next, summed["total"], metrics
 
-    def superstep(global_state, ef_all, mirror, batches, sizes, lrs, cids,
-                  round_idx, round_key, *test):
-        # prologue: round 0's EF rows + weight total in one psum
+    def _prologue(ef_all, cids, sizes):
+        # round 0's EF rows + weight total in one psum
         seed = fused_psum({
             "gather": jax.tree.map(
                 lambda t: _ef_gather_contrib(t, cids[0], shard, impl=impl),
                 ef_all),
             "total": _size_total(sizes[0]),
         }, shard)
-        c_loc = sizes.shape[1]
-        ef_rows = _slice_positional(seed["gather"], shard, c_loc)
+        return _slice_positional(seed["gather"], shard,
+                                 sizes.shape[1]), seed["total"]
+
+    if participation:
+        def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                      cids, round_idx, round_key, pmask, pstale, *test):
+            ef_rows, total = _prologue(ef_all, cids, sizes)
+            if n_rounds == 1:
+                b0 = jax.tree.map(lambda a: a[0], batches)
+                state, ef_all, mirror, _, _, m = one_round(
+                    global_state, ef_all, mirror, ef_rows, total, b0,
+                    sizes[0], lrs[0], cids[0], cids[0], sizes[0],
+                    round_idx[0], round_key, test, pmask[0], pstale[0])
+                return state, _stack1(m), ef_all, mirror
+
+            cids_next = jnp.roll(cids, -1, axis=0)
+            sizes_next = jnp.roll(sizes, -1, axis=0)
+
+            def body(carry, xs):
+                state, ef_all, mirror, ef_rows, total = carry
+                b, n, lr, cid, cid_next, n_next, r, pm, ps = xs
+                state, ef_all, mirror, ef_rows, total, m = one_round(
+                    state, ef_all, mirror, ef_rows, total, b, n, lr, cid,
+                    cid_next, n_next, r, round_key, test, pm, ps)
+                return (state, ef_all, mirror, ef_rows, total), m
+
+            (state, ef_all, mirror, _, _), mstack = jax.lax.scan(
+                body, (global_state, ef_all, mirror, ef_rows, total),
+                (batches, sizes, lrs, cids, cids_next, sizes_next,
+                 round_idx, pmask, pstale))
+            return state, mstack, ef_all, mirror
+
+        return superstep
+
+    def superstep(global_state, ef_all, mirror, batches, sizes, lrs, cids,
+                  round_idx, round_key, *test):
+        ef_rows, total = _prologue(ef_all, cids, sizes)
         if n_rounds == 1:
             b0 = jax.tree.map(lambda a: a[0], batches)
             state, ef_all, mirror, _, _, m = one_round(
-                global_state, ef_all, mirror, ef_rows, seed["total"], b0,
+                global_state, ef_all, mirror, ef_rows, total, b0,
                 sizes[0], lrs[0], cids[0], cids[0], sizes[0], round_idx[0],
                 round_key, test)
             return state, _stack1(m), ef_all, mirror
@@ -458,7 +606,7 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
             return (state, ef_all, mirror, ef_rows, total), m
 
         (state, ef_all, mirror, _, _), mstack = jax.lax.scan(
-            body, (global_state, ef_all, mirror, ef_rows, seed["total"]),
+            body, (global_state, ef_all, mirror, ef_rows, total),
             (batches, sizes, lrs, cids, cids_next, sizes_next, round_idx))
         return state, mstack, ef_all, mirror
 

@@ -3,4 +3,7 @@ from repro.fl.api import (Algorithm, ALGORITHM_NAMES,  # noqa: F401
                           register_algorithm)
 from repro.fl.comm import CommLog, tree_bytes  # noqa: F401
 from repro.fl.newclient import newclient_convergence  # noqa: F401
+from repro.fl.participation import (ParticipationPolicy,  # noqa: F401
+                                    RoundParticipation, make_policy,
+                                    register_policy, registered_policies)
 from repro.fl.server import ServerResult, evaluate, run_federated  # noqa: F401

@@ -65,6 +65,9 @@ class EngineOptions:
     telemetry: Any = False                  # True | tap names | Telemetry
     runlog: Any = None                      # JSONL path | RunLog sink
     profile_dir: Optional[str] = None       # jax.profiler trace directory
+    # robustness — checkpoint + stop cleanly at the first chunk boundary
+    # after a non-finite metric value (costs the metrics overlap when on)
+    halt_on_nonfinite: bool = False
 
 
 @dataclass(frozen=True)
@@ -127,6 +130,7 @@ class FederatedTrainer:
             fused_collective=o.engine.fused_collective,
             sharded_eval=o.engine.sharded_eval,
             telemetry=o.engine.telemetry, runlog=o.engine.runlog,
+            halt_on_nonfinite=o.engine.halt_on_nonfinite,
             profile_dir=o.engine.profile_dir)
         return self._result
 

@@ -45,7 +45,8 @@ class CommLog:
     def log_round(self, global_state, n_clients: int, metrics: Dict, *,
                   wire_up: Optional[int] = None,
                   wire_down: Optional[int] = None,
-                  n_down: Optional[int] = None):
+                  n_down: Optional[int] = None,
+                  n_up: Optional[int] = None):
         """Account one round.
 
         ``wire_up`` / ``wire_down``: codec-reported bytes per client for the
@@ -61,6 +62,12 @@ class CommLog:
         there, not just the round's sampled clients.  The fusion module is
         only needed by the round's participants, so its raw bytes are
         charged to ``n_clients`` receivers in both directions.
+        ``n_up``: uploaders this round; defaults to ``n_clients``.  A
+        partial-participation round (deadline / buffered-async policies,
+        chaos dropouts) only receives uploads from the clients that
+        actually arrived — dropped clients were still *broadcast to*
+        (they started the round), so the downlink keeps charging the full
+        cohort while the uplink charges ``n_up``.
         """
         if global_state is None:
             if self._model_b is None:
@@ -76,8 +83,9 @@ class CommLog:
         n_down = n_clients if n_down is None else n_down
         down = (n_down * (model_b if wire_down is None else wire_down)
                 + n_clients * fusion_b)
-        up = n_clients * ((model_b if wire_up is None else wire_up)
-                          + fusion_b)
+        n_up = n_clients if n_up is None else n_up
+        up = n_up * ((model_b if wire_up is None else wire_up)
+                     + fusion_b)
         self.rounds += 1
         self.bytes_down += down
         self.bytes_up += up

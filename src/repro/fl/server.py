@@ -95,6 +95,7 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   fused_collective: bool = True,
                   sharded_eval: bool = True,
                   telemetry=False, runlog=None,
+                  halt_on_nonfinite: bool = False,
                   profile_dir: Optional[str] = None) -> ServerResult:
     """Back-compat wrapper over :class:`repro.fl.api.FederatedTrainer`.
 
@@ -106,6 +107,11 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
     ``shard_map`` under ``mesh``, snapshot-overlapped boundary eval.  On
     a single device the results are identical to
     :func:`run_federated_reference` on the same seed/config.
+
+    Partial participation (``fl.participation`` other than ``full_sync``,
+    or a chaos-configured ``data``) and ``halt_on_nonfinite`` are
+    engine-only robustness features — the reference loop predates them
+    and refuses such configs rather than silently diverging.
     """
     opts = RunOptions(
         mode=mode, seed=seed, verbose=verbose,
@@ -118,6 +124,7 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                              fused_collective=fused_collective,
                              sharded_eval=sharded_eval,
                              telemetry=telemetry, runlog=runlog,
+                             halt_on_nonfinite=halt_on_nonfinite,
                              profile_dir=profile_dir))
     return FederatedTrainer(bundle, fl, data, opts).fit(rounds,
                                                         callback=callback)
@@ -145,6 +152,12 @@ def run_federated_reference(bundle: ModelBundle, fl: FLConfig,
     from repro.checkpoint.io import (load_tree, restore_server_state,
                                      save_server_state, save_tree)
 
+    if getattr(data, "chaos", None) is not None \
+            or getattr(fl, "participation", "full_sync") != "full_sync":
+        raise NotImplementedError(
+            "partial participation / chaos injection is an engine feature "
+            "(repro.engine); the reference loop has no fault schedule and "
+            "would silently diverge from the engine's rng stream")
     if eval_fn is None:
         eval_fn = evaluate
     key = jax.random.PRNGKey(seed)

@@ -54,7 +54,7 @@ def run_engine(args, cfg, fl) -> None:
     overlap/adaptive chunk sizing included.  On one device this
     degenerates to the single-device engine.
     """
-    from repro.data.federated import FederatedDataset
+    from repro.data.federated import ChaosConfig, FederatedDataset
     from repro.fl.api import (EngineOptions, EvalOptions, FederatedTrainer,
                               RunOptions)
     from repro.launch.mesh import client_axes, make_engine_mesh
@@ -66,9 +66,25 @@ def run_engine(args, cfg, fl) -> None:
     # the sampled-client axis must split evenly over the mesh
     fl = dataclasses.replace(
         fl, clients_per_round=max(fl.clients_per_round, shards)
-        // shards * shards)
-    n_clients = 2 * fl.clients_per_round
+        // shards * shards,
+        participation=args.participation,
+        over_provision=args.over_provision,
+        buffer_k=args.buffer_k,
+        staleness_alpha=args.staleness_alpha)
+    # over-provisioned cohorts must still divide over the shards; size the
+    # federation off the policy's cohort so sampling never starves
+    from repro.fl.participation import make_policy
+    c_round = make_policy(fl.participation).cohort_size(
+        fl.clients_per_round, fl)
+    c_round = -(-c_round // shards) * shards
+    n_clients = 2 * max(fl.clients_per_round, c_round)
     bundle = make_bundle(cfg, jnp.float32)
+    chaos = None
+    if args.chaos:
+        chaos = ChaosConfig(speed_sigma=args.chaos_speed_sigma,
+                            jitter=args.chaos_jitter,
+                            dropout=args.chaos_dropout,
+                            truncation=args.chaos_truncation)
 
     toks, src = token_stream(
         max(n_clients * fl.local_batch * 8, 128), args.seq_len,
@@ -76,9 +92,12 @@ def run_engine(args, cfg, fl) -> None:
     test_toks, _ = token_stream(64, args.seq_len, vocab=cfg.vocab_size,
                                 n_sources=n_clients, seed=1)
     data = FederatedDataset(source_partition(toks, src, n_clients),
-                            {"tokens": test_toks}, seed=0)
+                            {"tokens": test_toks}, seed=0, chaos=chaos)
     print(f"engine mesh {dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"clients/round={fl.clients_per_round} federation={n_clients}")
+          f"clients/round={fl.clients_per_round} federation={n_clients}"
+          + (f" participation={fl.participation}"
+             if fl.participation != "full_sync" else "")
+          + (" chaos=on" if chaos is not None else ""))
     trainer = FederatedTrainer(bundle, fl, data, RunOptions(
         seed=0, verbose=True,
         eval=EvalOptions(every=max(args.rounds // 2, 1), examples=64),
@@ -86,6 +105,7 @@ def run_engine(args, cfg, fl) -> None:
                              mesh=mesh if shards > 1 else None,
                              telemetry=args.telemetry,
                              runlog=args.runlog,
+                             halt_on_nonfinite=args.halt_on_nonfinite,
                              profile_dir=args.profile)))
     t0 = time.perf_counter()
     res = trainer.fit(args.rounds)
@@ -124,6 +144,32 @@ def main() -> None:
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="engine only: write a jax.profiler trace for the "
                          "whole run into DIR")
+    ap.add_argument("--participation", default="full_sync",
+                    help="engine only: round participation policy "
+                         "(full_sync | deadline | buffered_async | any "
+                         "registered name)")
+    ap.add_argument("--over-provision", type=float, default=1.5,
+                    help="deadline policy: cohort over-sampling factor")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="buffered_async policy: close the round at the "
+                         "K-th arrival (0 -> clients_per_round // 2)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="buffered_async policy: staleness discount "
+                         "exponent (1+s)^-alpha")
+    ap.add_argument("--chaos", action="store_true",
+                    help="engine only: inject deterministic client faults "
+                         "(speed skew, dropouts, truncated local work)")
+    ap.add_argument("--chaos-speed-sigma", type=float, default=1.0,
+                    help="lognormal sigma of static per-client speeds")
+    ap.add_argument("--chaos-jitter", type=float, default=0.1,
+                    help="lognormal sigma of per-round completion jitter")
+    ap.add_argument("--chaos-dropout", type=float, default=0.05,
+                    help="per-round client dropout probability")
+    ap.add_argument("--chaos-truncation", type=float, default=0.0,
+                    help="probability a client truncates its local work")
+    ap.add_argument("--halt-on-nonfinite", action="store_true",
+                    help="engine only: checkpoint and stop cleanly at the "
+                         "first chunk boundary after a non-finite metric")
     args = ap.parse_args()
 
     cfg = ARCH_CONFIGS[args.arch]

@@ -79,6 +79,8 @@ class ClientTapCtx:
     delta: Any = None           # tree — PRE-compression update (compressed)
     decoded: Any = None         # tree — POST-compression decoded update
     ef: Any = None              # tree — the client's NEW EF residual
+    pmask: Any = None           # scalar — 0/1 participation mask
+    staleness: Any = None       # scalar — rounds late (participation)
 
 
 @dataclass(frozen=True)
@@ -189,6 +191,31 @@ class WeightTap(TelemetryTap):
                     ctx.n_clients // max(ctx.n_shards, 1))}
 
 
+class ParticipationTap(TelemetryTap):
+    """Partial-cohort health: how many of the sampled lanes contributed,
+    how many were dropped/late out of the round, and the mean staleness
+    of the contributions that did land (buffered-async discounting).
+    Active only when the participation axis is on (the engine adds
+    ``pmask``/``staleness`` to ``available``), so full-sync/chaos-off
+    builds stay byte-identical."""
+
+    name = "participation"
+    kinds = ("plain", "compressed")
+    requires = ("pmask", "staleness")
+
+    def client_sums(self, ctx):
+        m = jnp.asarray(ctx.pmask, jnp.float32)
+        return {"arrived": m,
+                "stale_sum": jnp.asarray(ctx.staleness, jnp.float32) * m}
+
+    def finish(self, summed, ctx):
+        arrived = summed["participation.arrived"]
+        return {"effective_cohort": arrived,
+                "dropped_clients": jnp.float32(ctx.n_clients) - arrived,
+                "mean_staleness": summed["participation.stale_sum"]
+                / jnp.maximum(arrived, 1.0)}
+
+
 _TAPS: Dict[str, TelemetryTap] = {}
 
 
@@ -206,7 +233,8 @@ def registered_taps() -> Tuple[str, ...]:
     return tuple(sorted(_TAPS))
 
 
-for _t in (DeltaNormTap(), EFResidualTap(), UpdateNormTap(), WeightTap()):
+for _t in (DeltaNormTap(), EFResidualTap(), UpdateNormTap(), WeightTap(),
+           ParticipationTap()):
     register_tap(_t)
 
 

@@ -139,7 +139,11 @@ def test_sample_clients_unique_and_guarded():
     for _ in range(50):
         cids = data.sample_clients(4)
         assert len(np.unique(cids)) == len(cids)
-    assert len(data.sample_clients(100)) == 6  # capped at n_clients, unique
+    # oversampling raises instead of silently clamping (the old min()
+    # behavior was exactly the silent-partial-participation failure the
+    # participation policies make explicit)
+    with pytest.raises(ValueError, match="cannot sample"):
+        data.sample_clients(100)
 
     class DupRng:
         def choice(self, n, size, replace):

@@ -1,0 +1,608 @@
+"""Participation policies + chaos injection (PR 7 robustness).
+
+Pins, in order of importance:
+
+* chaos-off / ``full_sync`` is BITWISE the pre-participation engine —
+  final model, CommLog history and the checkpointed EF state all equal
+  the reference loop, per mode x codec (the participation plumbing is
+  weight-borne and completely absent from the traced program when off);
+* the chaos fault schedule is a pure function of (seed, round index):
+  replayable through ``skip_round_sampling``, so interrupt+resume lands
+  on the identical schedule and the identical model;
+* masked clients' error-feedback residuals are carried forward untouched;
+* the masked partial-cohort fused round still runs exactly ONE psum per
+  round with chaos + telemetry on (jaxpr-counted on a forced 2-device
+  host), and the sharded participation run matches the single-device one;
+* policy math (deadline selection, buffered-async staleness discount);
+* the robustness satellites: prefetcher shutdown hardening, checkpoint
+  save retry, ``halt_on_nonfinite``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import CNN_CONFIGS
+from repro.configs.base import FLConfig
+from repro.data.federated import ChaosConfig, FederatedDataset
+from repro.data.partition import iid_partition
+from repro.data.synth import class_images
+from repro.fl.participation import (BufferedAsyncPolicy, DeadlinePolicy,
+                                    FullSyncPolicy, ParticipationPolicy,
+                                    make_policy, register_policy,
+                                    registered_policies)
+from repro.fl.server import run_federated, run_federated_reference
+from repro.models.registry import make_bundle
+
+_BUNDLE = None
+
+
+def _bundle():
+    global _BUNDLE
+    if _BUNDLE is None:
+        cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"],
+                                  input_shape=(8, 8, 1), conv_channels=(4,),
+                                  fc_units=(8,), dropout=0.0)
+        _BUNDLE = make_bundle(cfg)
+    return _BUNDLE
+
+
+CHAOS = ChaosConfig(speed_sigma=1.0, jitter=0.2, dropout=0.3,
+                    truncation=0.3, seed=7)
+
+
+def _data(seed=3, chaos=None):
+    x, y = class_images(24, n_classes=4, shape=(8, 8, 1), seed=0)
+    return FederatedDataset(iid_partition(x, y, 8),
+                            {"x": x[:16], "y": y[:16]}, seed=seed,
+                            chaos=chaos)
+
+
+def _fl(**kw):
+    kw.setdefault("clients_per_round", 4)
+    kw.setdefault("lr", 0.05)
+    return FLConfig(algorithm=kw.pop("algorithm", "fedavg"),
+                    local_steps=2, local_batch=4, **kw)
+
+
+def _same_state(a, b):
+    for x, y in zip(jax.tree.leaves(a.global_state),
+                    jax.tree.leaves(b.global_state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# registry
+
+
+def test_participation_registry():
+    assert set(registered_policies()) >= {"full_sync", "deadline",
+                                          "buffered_async"}
+    assert isinstance(make_policy("deadline"), DeadlinePolicy)
+    with pytest.raises(ValueError, match="unknown participation policy"):
+        make_policy("nope")
+
+    class Custom(ParticipationPolicy):
+        name = "custom_probe"
+        select = FullSyncPolicy.select
+
+    register_policy("custom_probe", Custom)
+    assert isinstance(make_policy("custom_probe"), Custom)
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy("custom_probe", Custom)
+    register_policy("custom_probe", Custom, overwrite=True)
+    # config validation falls back to the live registry for plugins
+    fl = _fl(participation="custom_probe")
+    assert fl.participation == "custom_probe"
+    with pytest.raises(AssertionError):
+        _fl(participation="definitely_not_registered")
+
+
+# ---------------------------------------------------------------------------
+# policy math
+
+
+def test_participation_policy_math():
+    fl = _fl(over_provision=1.5, buffer_k=2, staleness_alpha=0.5)
+    arrival = np.array([1.0, 4.0, 0.5, 2.0, 8.0, 0.25], np.float32)
+    dropped = np.array([False, False, True, False, False, False])
+
+    full = FullSyncPolicy().select(arrival, dropped, fl, 4)
+    assert full.round_time == pytest.approx(8.0)   # slowest survivor
+    assert full.n_arrived == 5
+    assert full.mask.tolist() == [1, 1, 0, 1, 1, 1]
+    assert full.weight.tolist() == [1] * 6 and full.staleness.max() == 0
+
+    dl = DeadlinePolicy()
+    assert dl.cohort_size(4, fl) == 6
+    sel = dl.select(arrival, dropped, fl, 4)
+    # 4 fastest ALIVE clients: 0.25, 1.0, 2.0, 4.0 (0.5 is dropped)
+    assert sel.mask.tolist() == [1, 1, 0, 1, 0, 1]
+    assert sel.round_time == pytest.approx(4.0)
+    assert sel.n_arrived == 4
+
+    ba = BufferedAsyncPolicy().select(arrival, dropped, fl, 4)
+    # K=2: round closes at the 2nd alive arrival, t=1.0; laggards are
+    # staleness-discounted but still contribute
+    assert ba.round_time == pytest.approx(1.0)
+    assert ba.mask.tolist() == [1, 1, 0, 1, 1, 1]
+    s = ba.staleness
+    assert s[0] == pytest.approx(0.0) and s[5] == pytest.approx(0.0)
+    assert s[1] == pytest.approx(3.0) and s[4] == pytest.approx(7.0)
+    np.testing.assert_allclose(ba.weight, (1 + s) ** -0.5, rtol=1e-6)
+
+    # all-dropped guard: the fastest client is un-dropped
+    sel = FullSyncPolicy().select(np.array([3.0, 1.0, 2.0], np.float32),
+                                  np.array([True, True, True]), fl, 3)
+    assert sel.mask.tolist() == [0, 1, 0] and sel.n_arrived == 1
+
+
+# ---------------------------------------------------------------------------
+# chaos layer determinism
+
+
+def test_chaos_draws_deterministic_and_replayable():
+    fl = _fl()
+    d1, d2 = _data(chaos=CHAOS), _data(chaos=CHAOS)
+    out1 = d1.round_chunk(3, 4, fl.local_steps, fl.local_batch,
+                          participation=lambda d: FullSyncPolicy().select(
+                              d.arrival, d.dropped, fl, 4))
+    out2 = d2.round_chunk(3, 4, fl.local_steps, fl.local_batch,
+                          participation=lambda d: FullSyncPolicy().select(
+                              d.arrival, d.dropped, fl, 4))
+    for a, b in zip(jax.tree.leaves(out1), jax.tree.leaves(out2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    part = out1[3]
+    assert part["mask"].shape == (3, 4) and part["round_time"].shape == (3,)
+    assert part["n_arrived"].dtype == np.int32
+
+    # skip_round_sampling replays the chaos draws too: a fresh dataset
+    # skipped past 2 rounds produces round 3 exactly
+    d3 = _data(chaos=CHAOS)
+    d3.skip_round_sampling(2, 4, fl.local_steps, fl.local_batch)
+    tail = d3.round_chunk(1, 4, fl.local_steps, fl.local_batch,
+                          participation=lambda d: FullSyncPolicy().select(
+                              d.arrival, d.dropped, fl, 4))
+    np.testing.assert_array_equal(tail[0][0], out1[0][2])       # cids
+    np.testing.assert_array_equal(tail[3]["mask"][0], part["mask"][2])
+    np.testing.assert_array_equal(tail[3]["round_time"][0],
+                                  part["round_time"][2])
+
+
+def test_chaos_stream_independent_of_reader():
+    """Chaos draws are consumed iff chaos is configured — never dependent
+    on whether a participation callable is reading them — so the batch
+    stream is a pure function of (seed, chaos-on?, round)."""
+    fl = _fl()
+    with_cb = _data(chaos=CHAOS)
+    without_cb = _data(chaos=CHAOS)
+    a = with_cb.round_chunk(2, 4, fl.local_steps, fl.local_batch,
+                            participation=lambda d: FullSyncPolicy().select(
+                                d.arrival, d.dropped, fl, 4))
+    b = without_cb.round_chunk(2, 4, fl.local_steps, fl.local_batch)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[2], b[2])
+
+
+def test_chaos_off_consumes_nothing():
+    """A chaos-less dataset's rng stream is untouched by the chaos hooks
+    — the bitwise-equivalence precondition for every existing run."""
+    fl = _fl()
+    plain, hooked = _data(), _data()
+    a = plain.round_chunk(2, 4, fl.local_steps, fl.local_batch)
+    b = hooked.round_chunk(2, 4, fl.local_steps, fl.local_batch,
+                           participation=lambda d: FullSyncPolicy().select(
+                               np.ones(4, np.float32) if d is None
+                               else d.arrival,
+                               np.zeros(4, bool) if d is None
+                               else d.dropped, fl, 4))
+    np.testing.assert_array_equal(a[0], b[0])
+    for k in a[1]:
+        np.testing.assert_array_equal(a[1][k], b[1][k])
+    # and the participation outcome is the trivial all-in round
+    assert b[3]["mask"].min() == 1.0 and b[3]["weight"].min() == 1.0
+
+
+def test_sample_clients_overdraw_raises_participation_hint():
+    data = _data()
+    with pytest.raises(ValueError, match="over_provision"):
+        data.sample_clients(100)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence pins
+
+
+@pytest.mark.parametrize("mode", ["client_parallel", "client_sequential"])
+@pytest.mark.parametrize("codec", ["identity", "topk"])
+def test_chaos_off_full_sync_bitwise(tmp_path, mode, codec):
+    """Acceptance: the default config (full_sync, no chaos) is bitwise
+    the pre-participation engine — model, CommLog history AND the
+    checkpointed EF state equal the reference loop."""
+    bundle = _bundle()
+    fl = _fl(uplink_codec=codec, topk_frac=0.1, participation="full_sync")
+    kw = dict(rounds=4, seed=1, eval_every=2, mode=mode)
+    eng = run_federated(bundle, fl, _data(), superstep_rounds=2,
+                        checkpoint_dir=str(tmp_path / "eng"), **kw)
+    ref = run_federated_reference(bundle, fl, _data(),
+                                  checkpoint_dir=str(tmp_path / "ref"),
+                                  **kw)
+    _same_state(ref, eng)
+    assert ref.comm.history == eng.comm.history
+    assert ref.comm.bytes_up == eng.comm.bytes_up
+    for fname in (("state.npz", "ef.npz") if codec == "topk"
+                  else ("state.npz",)):
+        a = np.load(tmp_path / "eng" / fname)
+        b = np.load(tmp_path / "ref" / fname)
+        assert sorted(a.files) == sorted(b.files)
+        for k in a.files:
+            np.testing.assert_array_equal(a[k], b[k])
+
+
+@pytest.mark.parametrize("policy", ["deadline", "buffered_async"])
+@pytest.mark.parametrize("codec", ["identity", "topk"])
+def test_participation_chunk_invariant(policy, codec):
+    """Participation runs are superstep-chunk-size invariant, like every
+    other engine result (the fault schedule is host-side and the masking
+    is weight-borne inside the per-round math)."""
+    bundle = _bundle()
+    fl = _fl(participation=policy, over_provision=1.5, buffer_k=2,
+             uplink_codec=codec, topk_frac=0.1)
+    kw = dict(rounds=4, seed=1, eval_every=2)
+    r1 = run_federated(bundle, fl, _data(chaos=CHAOS), superstep_rounds=1,
+                       **kw)
+    r4 = run_federated(bundle, fl, _data(chaos=CHAOS), superstep_rounds=4,
+                       **kw)
+    _same_state(r1, r4)
+    assert r1.comm.history == r4.comm.history
+    assert r1.stats["participation"] == policy
+
+
+def test_chaos_resume_identical_fault_schedule(tmp_path):
+    """Interrupt + resume replays the identical fault schedule: the
+    resumed run's per-round sim_time/arrived and the final model equal an
+    uninterrupted run's."""
+    bundle = _bundle()
+    fl = _fl(participation="deadline", over_provision=1.5,
+             uplink_codec="topk", topk_frac=0.1)
+    kw = dict(seed=1, eval_every=2, superstep_rounds=2)
+    full = run_federated(bundle, fl, _data(chaos=CHAOS), rounds=6, **kw)
+    run_federated(bundle, fl, _data(chaos=CHAOS), rounds=2,
+                  checkpoint_dir=str(tmp_path), checkpoint_every=2, **kw)
+    resumed = run_federated(bundle, fl, _data(chaos=CHAOS), rounds=6,
+                            checkpoint_dir=str(tmp_path),
+                            checkpoint_every=2, **kw)
+    _same_state(full, resumed)
+    tail = [(h["sim_time"], h["arrived"]) for h in full.comm.history][2:]
+    assert tail == [(h["sim_time"], h["arrived"])
+                    for h in resumed.comm.history]
+
+
+def test_chaos_partial_uplink_accounting():
+    """Dropped clients never upload: bytes_up charges n_arrived clients,
+    the downlink still charges the full (over-provisioned) cohort."""
+    bundle = _bundle()
+    fl = _fl(participation="deadline", over_provision=1.5)
+    res = run_federated(bundle, fl, _data(chaos=CHAOS), rounds=4, seed=1,
+                        eval_every=2, superstep_rounds=2, telemetry=True)
+    assert res.stats["round_cohort"] == 6
+    model_b = res.comm._model_b
+    for h in res.comm.history:
+        assert h["bytes_up"] == int(h["arrived"]) * model_b
+        assert h["bytes_down"] == 6 * model_b
+        assert h["arrived"] == h["tele/effective_cohort"]
+        assert h["tele/dropped_clients"] == 6 - h["arrived"]
+        assert h["sim_time"] > 0
+
+
+def test_chaos_telemetry_staleness_consistency():
+    bundle = _bundle()
+    fl = _fl(participation="buffered_async", buffer_k=2)
+    res = run_federated(bundle, fl, _data(chaos=CHAOS), rounds=4, seed=1,
+                        eval_every=2, superstep_rounds=2, telemetry=True)
+    assert any(h["tele/mean_staleness"] > 0 for h in res.comm.history)
+    assert all(np.isfinite(h["local_loss"]) for h in res.comm.history)
+
+
+def test_participation_ef_preserved_for_masked_clients():
+    """A masked (dropped/late) client's EF residual must come back
+    bit-identical — its update never reached the server, so its deferred
+    error must not change."""
+    from repro.compress import make_codec
+    from repro.core.rounds import (init_global_state,
+                                   make_compressed_round_fn)
+    bundle = _bundle()
+    fl = _fl(uplink_codec="topk", topk_frac=0.1)
+    uplink = make_codec("topk", topk_frac=0.1)
+    downlink = make_codec("identity")
+    state = init_global_state(bundle, fl, jax.random.PRNGKey(0))
+    uplink.bind(state["model"])
+    downlink.bind(state["model"])
+    rng = np.random.default_rng(0)
+    C, S, B = 4, fl.local_steps, fl.local_batch
+    batches = {"x": rng.normal(size=(C, S, B, 8, 8, 1)).astype(np.float32),
+               "y": rng.integers(0, 4, size=(C, S, B))}
+    ef = jax.tree.map(
+        lambda z: rng.normal(size=(C,) + z.shape).astype(np.float32) * 0.1,
+        uplink.init_state())
+    pmask = np.array([1.0, 0.0, 1.0, 0.0], np.float32)
+    round_fn = make_compressed_round_fn(bundle, fl, "client_parallel",
+                                        uplink, downlink,
+                                        participation=True)
+    _, _, new_ef, _ = jax.jit(round_fn)(
+        state, {k: np.asarray(v) for k, v in batches.items()},
+        np.full((C,), float(B * S), np.float32) * pmask,
+        np.float32(0.05), ef, state["model"], jax.random.PRNGKey(1),
+        pmask, np.zeros((C,), np.float32))
+    for old, new in zip(jax.tree.leaves(ef), jax.tree.leaves(new_ef)):
+        old, new = np.asarray(old), np.asarray(new)
+        np.testing.assert_array_equal(old[1], new[1])   # masked: untouched
+        np.testing.assert_array_equal(old[3], new[3])
+        assert not np.array_equal(old[0], new[0])       # active: updated
+        assert not np.array_equal(old[2], new[2])
+
+
+def test_reference_loop_refuses_chaos():
+    bundle = _bundle()
+    with pytest.raises(NotImplementedError, match="engine feature"):
+        run_federated_reference(bundle, _fl(), _data(chaos=CHAOS), rounds=1)
+    with pytest.raises(NotImplementedError, match="engine feature"):
+        run_federated_reference(bundle, _fl(participation="deadline"),
+                                _data(), rounds=1)
+
+
+# ---------------------------------------------------------------------------
+# robustness satellites
+
+
+def test_prefetcher_surfaces_poisoned_builder():
+    from repro.engine.pipeline import HostPrefetcher
+
+    def poisoned(r0, r1):
+        if r0 >= 2:
+            raise RuntimeError("disk on fire")
+        return {"r0": r0}
+
+    # consumed far enough: the exception is raised at the iteration site
+    pf = HostPrefetcher(poisoned, [(0, 2), (2, 4)])
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        list(pf)
+    pf.close()
+
+    # consumer stops EARLY: the exception must not die with the worker —
+    # close() captures it on .error (and close is idempotent)
+    pf = HostPrefetcher(poisoned, [(0, 2), (2, 4), (4, 6)])
+    it = iter(pf)
+    next(it)
+    pf.close()
+    pf.close()
+    assert isinstance(pf.error, RuntimeError)
+
+
+def test_checkpoint_save_retries_transient_oserror(tmp_path, monkeypatch):
+    from repro.checkpoint.io import save_tree
+    from repro.obs.runlog import RunLog
+
+    calls = {"n": 0}
+    real_savez = np.savez
+
+    def flaky(path, **kw):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("flaky fs")
+        return real_savez(path, **kw)
+
+    monkeypatch.setattr(np, "savez", flaky)
+    monkeypatch.setattr("repro.checkpoint.io._SAVE_BACKOFF_S", 0.001)
+    rl = RunLog()
+    save_tree(str(tmp_path / "t.npz"), {"a": np.arange(3)}, runlog=rl)
+    assert calls["n"] == 3
+    retries = [r for r in rl.records()
+               if r.get("name") == "checkpoint.save_retries"]
+    assert len(retries) == 2
+    loaded = np.load(tmp_path / "t.npz")
+    np.testing.assert_array_equal(loaded["a"], np.arange(3))
+
+    # persistent failure still raises (bounded retry, not a spin)
+    calls["n"] = -10**9
+    with pytest.raises(OSError, match="flaky fs"):
+        save_tree(str(tmp_path / "t2.npz"), {"a": np.arange(3)})
+
+
+def test_halt_on_nonfinite_checkpoints_and_stops(tmp_path):
+    """A diverging run (lr blown up) halts at the first chunk boundary
+    after the non-finite metric instead of training onward on garbage,
+    and leaves a resumable checkpoint at the halt boundary."""
+    bundle = _bundle()
+    fl = _fl(lr=float("inf"))   # inf*grad -> inf-inf -> NaN in round 1
+    res = run_federated(bundle, fl, _data(), rounds=8, seed=1,
+                        eval_every=4, superstep_rounds=2,
+                        checkpoint_dir=str(tmp_path), checkpoint_every=8,
+                        halt_on_nonfinite=True)
+    assert res.stats["halted_at"] == 2       # NaN in round 1, chunk = 2
+    assert len(res.comm.history) == res.stats["halted_at"]
+    meta = json.loads((tmp_path / "meta.json").read_text())
+    assert meta["round"] == res.stats["halted_at"] and meta["halted"]
+
+    # default: no halt, the run completes (history pins are unaffected)
+    res2 = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                         eval_every=4, superstep_rounds=2)
+    assert res2.stats["halted_at"] is None
+    assert len(res2.comm.history) == 4
+
+
+# ---------------------------------------------------------------------------
+# forced multi-device: sharded participation equivalence + one-psum pin
+
+
+def _forced_host_env(n_devices):
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src")
+    env = dict(os.environ)
+    kept = [t for t in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in t]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n_devices}"])
+    env["REPRO_ALLOW_FORCED_DEVICES"] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+    return env
+
+
+_SHARDED_CHAOS_SCRIPT = textwrap.dedent("""
+    import jax
+    import numpy as np
+    assert jax.device_count() == 2, jax.devices()
+    from test_participation import CHAOS, _bundle, _data, _fl
+    from repro.fl.server import run_federated
+    from repro.launch.mesh import make_engine_mesh
+
+    bundle = _bundle()
+    mesh = make_engine_mesh()
+    kw = dict(rounds=4, seed=1, eval_every=2, superstep_rounds=2)
+
+    # chaos-off full_sync: sharded == sharded (the refactored plumbing is
+    # inert), and the participation args never enter the traced program
+    fl = _fl(uplink_codec="topk", topk_frac=0.1)
+    base = run_federated(bundle, fl, _data(), mesh=mesh, **kw)
+    again = run_federated(bundle, fl, _data(), mesh=mesh, **kw)
+    for a, b in zip(jax.tree.leaves(base.global_state),
+                    jax.tree.leaves(again.global_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert base.comm.history == again.comm.history
+
+    # chaos + deadline: sharded matches single-device (same host fault
+    # schedule; aggregation order differs -> allclose), byte-exact comm
+    fl = _fl(participation="deadline", over_provision=1.5,
+             uplink_codec="topk", topk_frac=0.1)
+    single = run_federated(bundle, fl, _data(chaos=CHAOS), **kw)
+    sharded = run_federated(bundle, fl, _data(chaos=CHAOS), mesh=mesh,
+                            telemetry=True, **kw)
+    assert sharded.stats["client_shards"] == 2
+    assert sharded.stats["participation"] == "deadline"
+    for a, b in zip(jax.tree.leaves(single.global_state),
+                    jax.tree.leaves(sharded.global_state)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=1e-6)
+    assert single.comm.bytes_up == sharded.comm.bytes_up
+    assert single.comm.bytes_down == sharded.comm.bytes_down
+    assert [h["sim_time"] for h in single.comm.history] == \\
+           [h["sim_time"] for h in sharded.comm.history]
+    print("SHARDED-CHAOS-OK")
+""")
+
+
+def test_sharded_participation_forced_2dev():
+    env = _forced_host_env(2)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_CHAOS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED-CHAOS-OK" in out.stdout
+
+
+_ONE_PSUM_CHAOS_SCRIPT = textwrap.dedent("""
+    import jax
+    import jax.numpy as jnp
+    assert jax.device_count() == 2, jax.devices()
+    from test_participation import _bundle, _fl
+    from repro.compress import make_codec
+    from repro.core.rounds import init_global_state
+    from repro.engine.sharded import client_sharding, make_sharded_superstep
+    from repro.launch.mesh import make_engine_mesh
+    from repro.obs.telemetry import make_telemetry
+
+    def count_psums(jaxpr):
+        n = 0
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "psum":
+                n += 1
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    if hasattr(j, "jaxpr"):
+                        n += count_psums(j.jaxpr)
+                    elif hasattr(j, "eqns"):
+                        n += count_psums(j)
+        return n
+
+    def scan_bodies(jaxpr, out):
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.append(eqn.params["jaxpr"].jaxpr)
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    inner = (j.jaxpr if hasattr(j, "jaxpr")
+                             else (j if hasattr(j, "eqns") else None))
+                    if inner is not None:
+                        scan_bodies(inner, out)
+        return out
+
+    mesh = make_engine_mesh()
+    shard = client_sharding(mesh)
+    fl = _fl(participation="deadline", over_provision=1.5,
+             uplink_codec="topk", topk_frac=0.1)
+    bundle = _bundle()
+    uplink = make_codec("topk", topk_frac=0.1)
+    downlink = make_codec("identity")
+    state = jax.eval_shape(lambda k: init_global_state(bundle, fl, k),
+                           jax.random.PRNGKey(0))
+    uplink.bind(state["model"])
+    downlink.bind(state["model"])
+    K, C, S, B = 4, 6, fl.local_steps, fl.local_batch   # cohort C' = 6
+    tele = make_telemetry("compressed", n_clients=C,
+                          n_shards=shard.n_shards,
+                          available=frozenset(("ef", "pmask", "staleness")))
+    assert any(t.name == "participation" for t in tele.taps)
+    n_loc = 8 // shard.n_shards
+    ef = [jax.ShapeDtypeStruct(
+              ((n_loc + 1) * shard.n_shards,) + z.shape, z.dtype)
+          for z in jax.eval_shape(uplink.init_state)]
+    args = (state, ef, state["model"],
+            {"x": jax.ShapeDtypeStruct((K, C, S, B, 8, 8, 1), jnp.float32),
+             "y": jax.ShapeDtypeStruct((K, C, S, B), jnp.int32)},
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, C), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+            jax.ShapeDtypeStruct((K, C), jnp.float32),   # pmask
+            jax.ShapeDtypeStruct((K, C), jnp.float32))   # pstale
+    fn = make_sharded_superstep(bundle, fl, "client_parallel", K, mesh,
+                                uplink=uplink, downlink=downlink,
+                                fused_collective=True, telemetry=tele,
+                                participation=True)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    bodies = scan_bodies(jaxpr.jaxpr, [])
+    body = max(bodies, key=lambda b: len(b.eqns))
+    per_round = count_psums(body)
+    total = count_psums(jaxpr.jaxpr)
+    assert per_round == 1, f"masked fused round has {per_round} psums"
+    assert total == 2, f"superstep has {total} psums"
+    print("CHAOS-ONE-PSUM-OK")
+""")
+
+
+def test_masked_fused_round_still_one_psum():
+    """Acceptance: the partial-cohort round with chaos masking, staleness
+    weights AND telemetry on still executes exactly ONE psum per round —
+    masking is weight-borne and the masked-loss/tap lanes ride the
+    existing collective."""
+    env = _forced_host_env(2)
+    out = subprocess.run([sys.executable, "-c", _ONE_PSUM_CHAOS_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "CHAOS-ONE-PSUM-OK" in out.stdout
