@@ -44,6 +44,15 @@ Each multi-device point additionally records the fused-vs-unfused
 collective ratio (the one-psum round vs the three-collective oracle) and
 the sharded-eval eval-every-round ratio; the ``--check`` gate arms on
 those once the committed baseline records them.
+
+``--n-sweep [N1,N2,...]`` is the cohort-paged EF store's headline run:
+rounds/sec at a FIXED cohort while the federation size N sweeps (default
+10^3 -> 10^5, CI-sized; the store design extends to 10^6 — the per-chunk
+page is K*C rows whatever N is).  The sweep runs ``ef_store="host"`` on a
+:class:`repro.data.federated.TemplateClients` lazy federation (O(C) host
+data too) and exits non-zero unless (a) the staged EF page bytes are
+IDENTICAL at every N — the O(C·n) device-memory pin — and (b) rounds/sec
+at the largest N stays >= 0.9x the smallest N.
 """
 from __future__ import annotations
 
@@ -140,13 +149,22 @@ def _timed(run, rounds):
     return time.perf_counter() - t0, res
 
 
-def _rps(run, r1, r2):
+def _rps(run, r1, r2, repeats=None):
     """Steady-state rounds/sec via the two-length compile-cancel trick."""
     _timed(run, r1)                      # warmup: process-global op caches
+    want = repeats or REPEATS
     samples = []
-    for _ in range(REPEATS):
+    for attempt in range(3 * want):
         t1, _ = _timed(run, r1)
         t2, res = _timed(run, r2)
+        # a non-positive delta means compile/scheduling jitter swallowed
+        # the steady-state signal entirely — that sample carries no
+        # information, so resample instead of clamping it to nonsense
+        if t2 - t1 > 0:
+            samples.append((r2 - r1) / (t2 - t1))
+            if len(samples) >= want:
+                break
+    if not samples:                       # pathologically noisy host
         samples.append((r2 - r1) / max(t2 - t1, 1e-9))
     return float(np.median(samples)), res
 
@@ -286,6 +304,77 @@ def run_mesh_sweep(devices, out_dir: str) -> dict:
           if "sharded_eval_ratio" in p]
     if ev:
         out["sharded_eval_ratio_max"] = max(ev)
+    return out
+
+
+def run_n_sweep(ns, r1: int = 50, r2: int = 450) -> dict:
+    """Rounds/sec + EF device memory as N sweeps at a fixed cohort.
+
+    With the dense table, every point would stage (and checkpoint-sync)
+    an ``[N, n]`` device buffer — throughput and memory both scale with
+    N.  With the paged store the device only ever sees the chunk's
+    ``[K*C, n]`` page, so both curves must be FLAT.  ``dense_table_bytes``
+    records what the dense backing would have allocated at each N (the
+    page bytes / dense bytes gap is the tentpole's memory headline).
+    """
+    import tempfile
+
+    from repro.data.federated import TemplateClients
+    from repro.data.synth import class_images
+
+    # Every point compiles the SAME programs (page shapes are cohort-
+    # sized, independent of N — that is the tentpole), but each engine
+    # run jits fresh function objects, so without a persistent cache
+    # every timed run would recompile ~1s of XLA whose run-to-run jitter
+    # swamps the ~ms-scale steady-state signal the flatness gate needs.
+    # Scoped to the n-sweep: the full bench path has tripped allocator
+    # crashes with the cache enabled on this jax build, and its gates
+    # are ratio-based (noise cancels) rather than flatness-based.
+    cache_dir = tempfile.mkdtemp(prefix="nsweep_xla_cache_")
+    jax.config.update("jax_compilation_cache_dir", cache_dir)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.0)
+
+    K = 10
+    cfg = _bundle(True)
+    bundle = make_bundle(cfg)
+    fl = FLConfig(algorithm="fedavg", uplink_codec="topk", topk_frac=0.05,
+                  clients_per_round=8, local_steps=1, local_batch=4, lr=0.05)
+    x, y = class_images(12, n_classes=10, shape=cfg.input_shape, seed=0,
+                        noise=0.2, template_seed=0)
+    xt, yt = class_images(8, n_classes=10, shape=cfg.input_shape, seed=1,
+                          noise=0.2, template_seed=0)
+    template = {"x": x, "y": y}
+
+    def data(n):
+        return FederatedDataset(TemplateClients(template, n),
+                                {"x": xt, "y": yt}, seed=0)
+
+    points = []
+    for n in ns:
+        def run_point(rounds, n=n):
+            return run_federated(bundle, fl, data(n), rounds=rounds, seed=0,
+                                 eval_every=0, superstep_rounds=K,
+                                 ef_store="host")
+
+        rps, res = _rps(run_point, r1, r2, repeats=5)
+        page = res.stats["ef_page_bytes"]
+        row = page // (K * fl.clients_per_round)   # page rows = K*C
+        points.append({"n_clients": int(n), "rps": round(rps, 2),
+                       "ef_page_bytes": int(page),
+                       "dense_table_bytes": int(n) * row,
+                       "ef_store_rows": res.stats["ef_store_rows"]})
+        print(f"N={n:>9,d}: {rps:7.2f} r/s  page={page / 1024:.1f} KiB  "
+              f"dense table would be {n * row / (1 << 20):.1f} MiB")
+    rps_lo, rps_hi = points[0]["rps"], points[-1]["rps"]
+    pages = {p["ef_page_bytes"] for p in points}
+    out = {"points": points, "cohort": fl.clients_per_round,
+           "chunk_rounds": K, "ef_store": "host",
+           "rps_flatness": round(rps_hi / max(rps_lo, 1e-9), 3),
+           "flat": bool(rps_hi >= 0.9 * rps_lo),
+           "page_bytes_constant": len(pages) == 1}
+    print(f"n-sweep flatness: rps@maxN / rps@minN = {out['rps_flatness']} "
+          f"(gate >= 0.9)   page bytes constant: "
+          f"{out['page_bytes_constant']}")
     return out
 
 
@@ -442,6 +531,11 @@ def main():
     ap.add_argument("--mesh", default=None, metavar="data=N",
                     help="time ONE sharded-engine point on an N-device "
                          "forced host mesh (writes {'mesh_point': ...})")
+    ap.add_argument("--n-sweep", nargs="?", const="1000,10000,100000",
+                    default=None, metavar="N1,N2,...",
+                    help="sweep federation size at fixed cohort with the "
+                         "cohort-paged EF store; exits non-zero unless "
+                         "rounds/sec and EF page bytes stay flat in N")
     ap.add_argument("--mesh-sweep", default=None, metavar="data=1,2,4",
                     help="run the mesh point per device count in "
                          "subprocesses and add 'mesh_scaling' to the "
@@ -458,6 +552,22 @@ def main():
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {args.out}")
+        return
+
+    if args.n_sweep:
+        ns = [int(s) for s in args.n_sweep.split(",")]
+        report = {"n_sweep": run_n_sweep(ns)}
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {args.out}")
+        sweep = report["n_sweep"]
+        if not sweep["page_bytes_constant"]:
+            raise SystemExit("FAIL: EF page bytes vary with N — the paged "
+                             "store is not O(C*n)")
+        if not sweep["flat"]:
+            raise SystemExit("FAIL: rounds/sec not flat across the N sweep "
+                             f"(ratio {sweep['rps_flatness']} < 0.9)")
         return
 
     report = run(quick=args.quick,

@@ -5,7 +5,11 @@ the :class:`repro.obs.RunLog` span/event stream (``--runlog``) and the
 :meth:`repro.fl.comm.CommLog.save` round history (``--comm``); either
 alone works.  Prints the rendered report and, with ``--out``, writes the
 full report dict as JSON (the same shape ``bench_engine.py`` embeds
-under its ``observability`` key).
+under its ``observability`` key).  Cohort-paged runs
+(``ef_store="host"``) additionally get an ``ef_page`` section — rows
+gathered/written back/patched, gather seconds on the dispatch thread and
+writeback seconds on the lane's worker thread — folded from the
+``ef.page.*`` counters and spans the engine emits.
 
     PYTHONPATH=src python -m benchmarks.obs_report \
         --runlog benchmarks/artifacts/runlog.jsonl \

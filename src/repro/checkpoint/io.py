@@ -120,6 +120,26 @@ def insert_scratch_rows(tree, n_shards: int):
     return jax.tree.map(one, tree)
 
 
+def ef_disk_layout(ef, *, n_shards: int = 1, n_clients: int = None):
+    """Normalize any engine EF backing to the compact on-disk ``[N, ...]``
+    layout ``ef.npz`` has always used.
+
+    Accepts the single-device dense table, the sharded resident
+    scratch-row table (``n_shards > 1`` — scratch rows dropped), or a
+    cohort-paged host store (anything with ``to_dense(n_clients)``,
+    i.e. :class:`repro.engine.efstore.HostEFStore`).  Because every
+    backing round-trips through this one format, checkpoints written by
+    a dense run resume under a paged one and vice versa — the store
+    layout is a runtime knob, not a persistence format.
+    """
+    if hasattr(ef, "to_dense"):
+        assert n_clients is not None, "paged EF store needs n_clients"
+        return ef.to_dense(n_clients)
+    if n_shards > 1:
+        return strip_scratch_rows(ef, n_shards)
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), ef)
+
+
 def save_server_state(dirpath: str, global_state, round_idx: int,
                       extra: Dict | None = None, runlog=None) -> None:
     os.makedirs(dirpath, exist_ok=True)

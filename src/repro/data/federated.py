@@ -13,6 +13,37 @@ from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+# Above this federation size, ``sample_clients`` switches from numpy's
+# permutation-based ``choice`` (O(N) per round — it shuffles the whole id
+# space) to Floyd's O(C) without-replacement draw.  The threshold keeps
+# every test- and paper-scale dataset on the original ``choice`` stream so
+# the bitwise reference pins are untouched; only federations too large to
+# have pinned histories take the fast path.
+_FLOYD_THRESHOLD = 4096
+
+
+class TemplateClients:
+    """A lazy federation: ``n`` virtual clients sharing one template shard.
+
+    The million-client benches need a federation whose *size* is real but
+    whose per-client data never materializes N copies: this sequence
+    answers ``len`` with ``n`` and every ``[i]`` with the same template
+    dict.  Combined with the cohort-paged EF store and Floyd sampling,
+    a 10^6-client run allocates O(C) host memory for data, not O(N).
+    """
+
+    def __init__(self, template: Dict[str, np.ndarray], n: int):
+        self._template = dict(template)
+        self._n = int(n)
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __getitem__(self, i) -> Dict[str, np.ndarray]:
+        if not 0 <= int(i) < self._n:
+            raise IndexError(i)
+        return self._template
+
 
 @dataclass(frozen=True)
 class ChaosConfig:
@@ -65,6 +96,7 @@ class FederatedDataset:
                  chaos: Optional[ChaosConfig] = None):
         self.clients = clients
         self.test = test
+        self._sizes = None          # client_sizes cache (shards are frozen)
         self._seed = seed
         self._rng = np.random.default_rng(seed)
         self.chaos = chaos
@@ -81,8 +113,18 @@ class FederatedDataset:
         return len(self.clients)
 
     def client_sizes(self) -> np.ndarray:
-        key = "x" if "x" in self.clients[0] else "tokens"
-        return np.array([len(c[key]) for c in self.clients], np.float32)
+        """Per-client example counts [N] — computed once and cached (the
+        shards never change size); :class:`TemplateClients` federations
+        fill the vector without touching N dicts."""
+        if self._sizes is None:
+            key = "x" if "x" in self.clients[0] else "tokens"
+            if isinstance(self.clients, TemplateClients):
+                self._sizes = np.full(self.n_clients,
+                                      len(self.clients[0][key]), np.float32)
+            else:
+                self._sizes = np.array([len(c[key]) for c in self.clients],
+                                       np.float32)
+        return self._sizes
 
     def sample_clients(self, n: int) -> np.ndarray:
         """Sample n distinct client ids.  Uniqueness is load-bearing: the
@@ -94,13 +136,35 @@ class FederatedDataset:
         Raises ``ValueError`` when ``n > n_clients``: a cohort quietly
         shrinking (the old behavior clamped with ``min``) is exactly the
         silent-partial-participation failure mode the participation
-        policies make explicit."""
+        policies make explicit.
+
+        Cost: federations at or below ``_FLOYD_THRESHOLD`` use numpy's
+        permutation ``choice`` (the stream every pinned history was
+        recorded on); above it, Floyd's algorithm draws the n distinct
+        ids in O(n) rng calls, so sampling cost follows the COHORT, not
+        the federation — a 10^6-client round samples as fast as a
+        10^3-client one.  Both paths ride ``self._rng``, so
+        ``skip_round_sampling`` (which calls back into this method)
+        replays either stream exactly."""
         if n > self.n_clients:
             raise ValueError(
                 f"cannot sample {n} distinct clients from a federation of "
                 f"{self.n_clients}; lower clients_per_round (or "
                 f"over_provision for the deadline policy)")
-        cids = self._rng.choice(self.n_clients, size=n, replace=False)
+        n_total = self.n_clients
+        if n_total > _FLOYD_THRESHOLD:
+            # Floyd's without-replacement draw: uniform over n-subsets,
+            # one bounded integer draw per picked id.
+            seen = set()
+            picks = []
+            for j in range(n_total - n, n_total):
+                t = int(self._rng.integers(0, j + 1))
+                pick = t if t not in seen else j
+                seen.add(pick)
+                picks.append(pick)
+            cids = np.array(picks, np.int64)
+        else:
+            cids = self._rng.choice(n_total, size=n, replace=False)
         assert len(np.unique(cids)) == len(cids), \
             f"sample_clients returned duplicate cids: {cids}"
         return cids

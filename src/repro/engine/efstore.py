@@ -1,0 +1,384 @@
+"""Cohort-paged error-feedback store: O(C·n) device memory at any N.
+
+The engine's compressed path keeps one error-feedback residual row per
+client.  The dense backing (``[N, n]`` on device, row-sharded with
+resident scratch rows on a mesh) caps federation size at what fits in
+HBM — a 1M-client × 1M-param federation is 4 TB.  This module replaces
+the *backing store* without touching the jitted round math, which is
+already cohort-shaped (per-round ``ef_gather``/``ef_scatter`` by cid,
+one fused psum per round):
+
+* :class:`HostEFStore` — host-resident rows keyed by client id.  An
+  absent key IS the all-zero row (EF state initializes to zeros), so
+  memory is O(touched-clients · n), not O(N · n), and a fresh store is
+  bitwise-identical to a fresh dense table.
+* :func:`plan_chunk_static` — pure function from a chunk's sampled
+  ``cids [K, C]`` to a :class:`PagePlan`: every unique client gets one
+  *virtual cid* (a page slot), so the superstep's gather/scatter/match
+  logic runs unchanged on a ``[P, n]`` page (``P = K*C`` slots) instead
+  of the ``[N, n]`` table.  The mapping is injective within the chunk,
+  which is all the round math ever relied on; on a mesh a client's slot
+  lives on its *owner* shard (``cid % S`` — any fixed map works) and
+  the page keeps the resident scratch-row layout ``[(P_loc+1)*S, n]``,
+  so the sharded ownership arithmetic (``n_loc = table.shape[0] - 1``)
+  is also unchanged.
+* :class:`EFPager` — the pipeline glue.  ``stage`` (prefetch thread)
+  gathers the next chunk's rows from the store into a zeroed page while
+  the current chunk trains; ``complete`` (dispatch thread) hands the
+  chunk's output page to a :class:`repro.engine.pipeline.WritebackLane`
+  that copies the updated rows back to the store off-thread; ``patch``
+  (dispatch thread) overwrites, ON DEVICE, the rows of the incoming page
+  whose clients were updated by the immediately-previous chunk — staging
+  only waits for write-backs through chunk j-2, so gather/write-back/
+  train all overlap, and the j-1 overlap window is closed by the patch
+  instead of a host sync.  The patch also launders the host-staged page
+  into a jit-output buffer, keeping the superstep's unconditional EF
+  donation safe on every backend.
+
+Bitwise contract: a paged run equals the dense run bit for bit.  Page
+rows hold the exact dense-row values (gathered, or patched from the
+previous chunk's output); virtual cids preserve the match/ownership
+structure; and the fused psum of {one shard's row, zeros elsewhere} is
+bitwise position-independent (0 + x == x exactly, including the
+signed-zero corner where (-0.) + (+0.) == +0. regardless of operand
+order).  ``tests/test_efstore.py`` pins this per mode × codec, single-
+device and sharded, across checkpoint-resume.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.engine.pipeline import WritebackLane
+from repro.kernels import ops
+
+__all__ = ["HostEFStore", "PagePlan", "plan_chunk_static", "EFPager"]
+
+
+class HostEFStore:
+    """Host-resident per-client EF rows, keyed by client id.
+
+    ``template`` is the per-client row pytree (``uplink.init_state()`` —
+    leaf shapes WITHOUT the leading client axis).  Rows are stored as
+    per-leaf numpy copies; an absent cid means the all-zero row, so
+    ``from_dense`` drops zero rows and a never-trained federation costs
+    no host memory at all.
+    """
+
+    def __init__(self, template):
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self._treedef = treedef
+        self._shapes = [tuple(np.shape(z)) for z in leaves]
+        self._dtypes = [np.dtype(jnp.asarray(z).dtype) for z in leaves]
+        self._rows: Dict[int, List[np.ndarray]] = {}
+        self.hits = 0            # page rows served from a stored row
+        self.misses = 0          # page rows that were implicit zeros
+        self.writeback_rows = 0  # rows written back across the run
+
+    @property
+    def n_rows(self) -> int:
+        return len(self._rows)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self._shapes)
+
+    def row_nbytes(self) -> int:
+        """Bytes of ONE client's row across all leaves (the O(C·n) unit)."""
+        return sum(int(np.prod(s, dtype=np.int64)) * d.itemsize
+                   for s, d in zip(self._shapes, self._dtypes))
+
+    def gather(self, cids, buffers: List[np.ndarray], rows) -> None:
+        """Fill row ``rows[i]`` of every (pre-zeroed) leaf buffer with
+        client ``cids[i]``'s stored row; a miss leaves the zeros."""
+        for cid, ri in zip(np.asarray(cids).tolist(), np.asarray(rows).tolist()):
+            stored = self._rows.get(cid)
+            if stored is None:
+                self.misses += 1
+                continue
+            self.hits += 1
+            for buf, leaf in zip(buffers, stored):
+                buf[ri] = leaf
+
+    def update(self, cids, buffers: List[np.ndarray], rows) -> None:
+        """Store client ``cids[i]``'s row from row ``rows[i]`` of every
+        leaf buffer.  Rows are COPIED — views would pin the whole page."""
+        for cid, ri in zip(np.asarray(cids).tolist(), np.asarray(rows).tolist()):
+            self._rows[cid] = [np.array(buf[ri]) for buf in buffers]
+        self.writeback_rows += len(cids)
+
+    def to_dense(self, n_clients: int):
+        """The compact ``[N, ...]`` numpy tree (the ef.npz disk layout)."""
+        leaves = [np.zeros((n_clients,) + s, d)
+                  for s, d in zip(self._shapes, self._dtypes)]
+        for cid, stored in self._rows.items():
+            for arr, leaf in zip(leaves, stored):
+                arr[cid] = leaf
+        return jax.tree_util.tree_unflatten(self._treedef, leaves)
+
+    def from_dense(self, dense) -> None:
+        """Load from a compact ``[N, ...]`` tree, keeping only non-zero
+        rows (a zero row is bitwise-identical to an absent one)."""
+        leaves = [np.asarray(x) for x in jax.tree_util.tree_leaves(dense)]
+        nonzero = np.zeros(leaves[0].shape[0], bool)
+        for arr in leaves:
+            nonzero |= arr.reshape(arr.shape[0], -1).any(axis=1)
+        self._rows.clear()
+        for cid in np.nonzero(nonzero)[0].tolist():
+            self._rows[cid] = [np.array(arr[cid]) for arr in leaves]
+
+
+@dataclass(frozen=True)
+class PagePlan:
+    """One chunk's cid -> page-slot assignment (host-side, static).
+
+    ``vcids [K, C]`` replace the real cids as the superstep's ``cids``
+    input; ``uniq``/``slots``/``rows`` describe, per unique client, its
+    block-local slot and its physical row in the staged page arrays.
+    ``p_loc`` is the per-shard slot capacity (``K*C`` — in the worst
+    case every sampled client is owned by one shard), ``page_rows`` the
+    staged leading dim: ``p_loc`` unsharded, ``(p_loc+1)*S`` sharded
+    (one resident scratch row per shard block, exactly like the dense
+    resident layout).
+    """
+
+    index: int            # chunk sequence number (-1: calibration)
+    cids: np.ndarray      # [K, C] real client ids
+    vcids: np.ndarray     # [K, C] int32 virtual (page-relative) ids
+    uniq: np.ndarray      # unique real cids (sorted)
+    slots: np.ndarray     # block-local slot of each uniq entry
+    rows: np.ndarray      # physical page row of each uniq entry
+    p_loc: int
+    n_shards: int
+    page_rows: int
+
+
+def plan_chunk_static(cids, n_shards: int = 1, *, index: int = -1) -> PagePlan:
+    """Assign every unique client in ``cids [K, C]`` a page slot.
+
+    Pure function of (cids, n_shards) — the engine's chunk-size
+    calibration builds throwaway plans through it without touching any
+    store or pager state.  A client sampled in several rounds of the
+    chunk keeps ONE slot (the scan's cross-round EF match logic relies
+    on cid identity); distinct clients get distinct slots (within-round
+    uniqueness is what the scatter relies on).  Sharded, a client's slot
+    lives on shard ``cid % n_shards`` — stable across chunks, so the
+    cross-chunk device patch never crosses a shard boundary.
+    """
+    cids = np.asarray(cids)
+    k, c = cids.shape
+    p_loc = k * c
+    flat = cids.reshape(-1)
+    uniq = np.unique(flat)
+    if n_shards == 1:
+        slots = np.arange(len(uniq), dtype=np.int64)
+        v = slots
+        rows = slots
+        page_rows = p_loc
+    else:
+        owner = uniq % n_shards
+        slots = np.empty(len(uniq), np.int64)
+        v = np.empty(len(uniq), np.int64)
+        rows = np.empty(len(uniq), np.int64)
+        for s in range(n_shards):
+            idx = np.nonzero(owner == s)[0]
+            slots[idx] = np.arange(len(idx))
+            v[idx] = s * p_loc + slots[idx]
+            rows[idx] = s * (p_loc + 1) + slots[idx]
+        page_rows = (p_loc + 1) * n_shards
+    # uniq is sorted, so searchsorted maps every sampled cid to its entry
+    vcids = v[np.searchsorted(uniq, flat)].reshape(k, c).astype(np.int32)
+    return PagePlan(index=index, cids=cids, vcids=vcids, uniq=uniq,
+                    slots=slots, rows=rows, p_loc=p_loc, n_shards=n_shards,
+                    page_rows=page_rows)
+
+
+def _patch_map(prev: PagePlan, cur: PagePlan):
+    """use/src arrays patching ``cur``'s page from ``prev``'s output page.
+
+    ``use [page_rows]`` marks rows whose client was updated by the
+    previous chunk; ``src`` holds that client's BLOCK-LOCAL slot in the
+    previous page (owner shards are chunk-stable, so source and
+    destination live in the same shard block).
+    """
+    use = np.zeros(cur.page_rows, bool)
+    src = np.zeros(cur.page_rows, np.int32)
+    prev_slot = dict(zip(prev.uniq.tolist(), prev.slots.tolist()))
+    for cid, row in zip(cur.uniq.tolist(), cur.rows.tolist()):
+        j = prev_slot.get(cid)
+        if j is not None:
+            use[row] = True
+            src[row] = j
+    return use, src
+
+
+class EFPager:
+    """Prefetch-ahead staging + async write-back of cohort EF pages.
+
+    Overlap protocol (chunk index j, all indices in dispatch order):
+
+    * ``stage(j)`` — prefetch thread — waits until write-backs through
+      chunk j-2 completed (a :class:`WritebackLane` completion counter),
+      then gathers chunk j's rows from the store into a zeroed host
+      page.  Rows updated by chunk j-1 may be stale or torn here; every
+      one of them is in the patch set below, so the staleness window is
+      exactly the rows the device overwrites anyway.
+    * ``patch(j)`` — dispatch thread — jitted per-row select: rows of
+      the staged page whose client trained in chunk j-1 are replaced
+      from chunk j-1's OUTPUT page (still on device; never donated), the
+      rest keep their staged values.  Runs unconditionally (chunk 0
+      patches against zeros), so the superstep always donates a
+      jit-output buffer, not a host-staged one.
+    * ``complete(j)`` — dispatch thread — records chunk j's output page
+      as the next patch source and submits the write-back (one
+      ``jax.device_get`` of the page + ``store.update`` of the used
+      slots) to the lane.  The worker's device_get blocks until the
+      chunk's compute finishes — off the dispatch thread, which is the
+      point.
+
+    ``close()`` wakes any stage waiter (which aborts with a
+    RuntimeError, surfaced through the prefetcher's error path) and
+    drains pending write-backs, so a final ``flush`` + checkpoint after
+    close still sees a consistent store.
+    """
+
+    def __init__(self, store: HostEFStore, *, mesh=None, impl: str = "auto",
+                 runlog=None):
+        from repro.obs.runlog import as_runlog
+        self._store = store
+        self._mesh = mesh
+        self._impl = impl
+        self._rl = as_runlog(runlog)
+        self._shard = None
+        self._ef_sh = None
+        if mesh is not None:
+            from repro.engine.sharded import client_sharding
+            from repro.launch.sharding import ef_table_sharding
+            self._shard = client_sharding(mesh)
+            self._ef_sh = ef_table_sharding(mesh)
+        self.n_shards = self._shard.n_shards if self._shard is not None else 1
+        self._lane = WritebackLane(name="engine-ef-writeback", runlog=runlog)
+        self._patch_cache: Dict = {}
+        self._prev = None          # (PagePlan, device output page)
+        self._stage_count = 0
+        self.patched_rows = 0
+        self.page_rows_max = 0
+
+    @property
+    def store(self) -> HostEFStore:
+        return self._store
+
+    @property
+    def stall_s(self) -> float:
+        return self._lane.stall_s
+
+    # -- staging (prefetch thread) -------------------------------------
+    def zero_page(self, plan: PagePlan, *, pool=None) -> List[np.ndarray]:
+        """Zeroed host page leaf buffers for ``plan`` (pool-reusable)."""
+        bufs = []
+        for li, (s, d) in enumerate(zip(self._store._shapes,
+                                        self._store._dtypes)):
+            shape = (plan.page_rows,) + s
+            buf = (pool.take(f"ef_page/{li}", shape, d) if pool is not None
+                   else np.empty(shape, d))
+            buf[...] = 0
+            bufs.append(buf)
+        return bufs
+
+    def stage(self, cids, *, pool=None):
+        """Build chunk ``cids``'s (plan, host page tree); orders itself
+        after the write-backs it depends on (see class docstring)."""
+        index = self._stage_count
+        self._stage_count += 1
+        if index >= 2 and not self._lane.wait_done(index - 1):
+            raise RuntimeError(
+                "EF pager closed while staging chunk "
+                f"{index} (run shutting down)")
+        with self._rl.span("ef.page.gather", chunk=index,
+                           rows=int(np.asarray(cids).size)):
+            plan = plan_chunk_static(cids, self.n_shards, index=index)
+            bufs = self.zero_page(plan, pool=pool)
+            self._store.gather(plan.uniq, bufs, plan.rows)
+        self.page_rows_max = max(self.page_rows_max, plan.page_rows)
+        page = jax.tree_util.tree_unflatten(self._store._treedef, bufs)
+        return plan, page
+
+    # -- device patch (dispatch thread) --------------------------------
+    def _patch_fn(self, cur_rows: int, prev_rows: int):
+        key = (cur_rows, prev_rows)
+        fn = self._patch_cache.get(key)
+        if fn is None:
+            impl = self._impl
+
+            def body(prev, staged, use, src):
+                def one(p, s):
+                    m = use.reshape((-1,) + (1,) * (s.ndim - 1))
+                    return jnp.where(m, ops.ef_gather(p, src, impl=impl), s)
+                return jax.tree.map(one, prev, staged)
+
+            if self._shard is not None:
+                from repro.engine.sharded import _unchecked_shard_map
+                ax = self._shard.axis_name
+                body = _unchecked_shard_map(
+                    body, self._mesh, in_specs=(P(ax), P(ax), P(ax), P(ax)),
+                    out_specs=P(ax))
+            # donate only the staged page: prev is the previous chunk's
+            # output, still being read by its in-flight write-back.  On
+            # CPU the staged arrays alias host memory and XLA would
+            # refuse (warning per dispatch) — there the patch is a pure
+            # launder into a donation-safe jit-output buffer.
+            donate = (1,) if jax.default_backend() != "cpu" else ()
+            fn = jax.jit(body, donate_argnums=donate)
+            self._patch_cache[key] = fn
+        return fn
+
+    def _put_rows(self, x):
+        """Stage a per-page-row host array (row-sharded on a mesh)."""
+        if self._ef_sh is not None:
+            return jax.device_put(x, self._ef_sh)
+        return jnp.asarray(x)
+
+    def patch(self, plan: PagePlan, staged_page):
+        """The device page the superstep consumes: staged rows, with the
+        previous chunk's fresh updates selected in (see class docstring)."""
+        leaves = jax.tree_util.tree_leaves(staged_page)
+        cur_rows = leaves[0].shape[0]
+        if self._prev is None:
+            prev_page = jax.tree.map(jnp.zeros_like, staged_page)
+            prev_rows = cur_rows
+            use = np.zeros(cur_rows, bool)
+            src = np.zeros(cur_rows, np.int32)
+        else:
+            prev_plan, prev_page = self._prev
+            prev_rows = jax.tree_util.tree_leaves(prev_page)[0].shape[0]
+            use, src = _patch_map(prev_plan, plan)
+        self.patched_rows += int(use.sum())
+        return self._patch_fn(cur_rows, prev_rows)(
+            prev_page, staged_page, self._put_rows(use), self._put_rows(src))
+
+    # -- write-back (dispatch thread submits, lane worker runs) --------
+    def complete(self, plan: PagePlan, out_page) -> None:
+        """Record chunk ``plan``'s output page and write its rows back."""
+        self._prev = (plan, out_page)
+        store, rl = self._store, self._rl
+
+        def writeback():
+            with rl.span("ef.page.writeback", chunk=plan.index,
+                         rows=len(plan.uniq)):
+                host = [np.asarray(x) for x in
+                        jax.device_get(jax.tree_util.tree_leaves(out_page))]
+                store.update(plan.uniq, host, plan.rows)
+
+        self._lane.submit(writeback)
+
+    def flush(self) -> None:
+        """Wait until every submitted write-back landed in the store."""
+        self._lane.flush()
+
+    def close(self) -> None:
+        self._lane.close()

@@ -43,7 +43,19 @@ supersteps instead of one Python-dispatched round at a time:
   ``fold_in`` on device) and the per-round math are exactly those of the
   preserved reference loop (``repro.fl.server.run_federated_reference``);
   at chunk size 1 the single-device final model is bitwise-identical to
-  it.
+  it;
+* EF store — ``ef_store="device"`` keeps the dense ``[N, n]`` table (the
+  bitwise oracle); ``"host"`` swaps in the cohort-paged store
+  (``repro.engine.efstore``): only a ``[K*C, n]`` page of the sampled
+  cohort's rows ever touches the device, staged one chunk ahead through
+  the prefetch pipeline and written back asynchronously at chunk
+  boundaries, with a device-side patch closing the one-chunk overlap
+  window — device memory for EF becomes O(C·n), independent of the
+  federation size, and the paged run stays bitwise-equal to the dense
+  one.  ``"auto"`` (default) flips to the host store when the projected
+  dense table exceeds ``_EF_STORE_AUTO_BYTES``.  ``ef.npz`` keeps the
+  compact ``[N, n]`` format either way, so checkpoints resume across
+  store layouts.
 
 Semantics (checkpoint/resume layout, CommLog history, callback contract)
 match the reference loop; a non-None ``callback`` forces one-round chunks
@@ -65,6 +77,7 @@ import numpy as np
 from repro.compress import make_codec
 from repro.configs.base import FLConfig
 from repro.core.rounds import init_global_state
+from repro.engine.efstore import EFPager, HostEFStore, plan_chunk_static
 from repro.engine.evaljit import make_eval_fn, pad_eval_batch
 from repro.engine.metrics import MetricsPump
 from repro.engine.pipeline import HostPrefetcher, StagingPool
@@ -88,6 +101,19 @@ _NON_METRIC_KEYS = frozenset(
 # most this fraction of the chunk's device time, within [lo, hi]
 _AUTO_TARGET_OVERHEAD = 0.05
 _AUTO_BOUNDS = (8, 256)
+
+# ef_store="auto": keep the dense device table while the projected
+# [n_clients, n] EF footprint stays under this, page past it (1 GiB — a
+# dense table that size is already >10% of small-accelerator HBM, while
+# the paged path's per-chunk page is K*C rows regardless of N)
+_EF_STORE_AUTO_BYTES = 1 << 30
+
+# donate-safety without a host mirror: the broadcast mirror starts as a
+# device-side COPY of the staged model (both are donated into the
+# superstep; a shared buffer cannot be donated twice).  jnp.copy under
+# jit preserves the input's sharding, and no host-side np.asarray
+# duplicate of the model is retained for the lifetime of the run.
+_device_copy = jax.jit(lambda t: jax.tree.map(jnp.copy, t))
 
 
 @dataclass
@@ -175,6 +201,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                          overlap_eval: bool = True,
                          fused_collective: bool = True,
                          sharded_eval: bool = True,
+                         ef_store: str = "auto",
                          telemetry=False, runlog=None,
                          halt_on_nonfinite: bool = False,
                          profile_dir: Optional[str] = None) -> ServerResult:
@@ -189,9 +216,14 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     ``overlap_eval`` (snapshot-based eval dispatch; False reproduces the
     pre-overlap behaviour of evaluating the to-be-donated state),
     ``fused_collective`` (mesh only: ONE packed psum per round instead of
-    the three-collective layout — bitwise-equal, False keeps the oracle)
-    and ``sharded_eval`` (mesh only: split the eval batch over the client
-    shards with a masked-sum psum; False evaluates replicated).
+    the three-collective layout — bitwise-equal, False keeps the oracle),
+    ``sharded_eval`` (mesh only: split the eval batch over the client
+    shards with a masked-sum psum; False evaluates replicated) and
+    ``ef_store`` (compressed only: ``"device"`` dense ``[N, n]`` EF
+    table — the bitwise oracle; ``"host"`` the cohort-paged
+    ``repro.engine.efstore`` store, O(C·n) device memory at any
+    federation size, bitwise-equal to dense; ``"auto"`` pages once the
+    projected dense table passes ``_EF_STORE_AUTO_BYTES``).
 
     Observability (``repro.obs``, all off by default):
 
@@ -227,10 +259,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
       (if ``checkpoint_dir`` is set) and stop cleanly instead of training
       onward on garbage; ``stats["halted_at"]`` records the boundary.
     """
-    from repro.checkpoint.io import (insert_scratch_rows, load_tree,
-                                     restore_server_state,
-                                     save_server_state, save_tree,
-                                     strip_scratch_rows)
+    from repro.checkpoint.io import (ef_disk_layout, insert_scratch_rows,
+                                     load_tree, restore_server_state,
+                                     save_server_state, save_tree)
     from repro.fl.comm import CommLog
     from repro.fl.participation import make_policy
 
@@ -255,16 +286,15 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                 arrival, dropped = draws.arrival, draws.dropped
             return policy.select(arrival, dropped, fl, n_sampled)
 
+    if ef_store not in ("auto", "device", "host"):
+        raise ValueError(f"ef_store={ef_store!r} not in "
+                         "('auto', 'device', 'host')")
     if shard is not None:
         if c_round % shard.n_shards:
             raise ValueError(
                 f"round cohort {c_round} (clients_per_round={n_sampled}, "
                 f"policy {policy.name!r}) must divide over the mesh's "
                 f"{shard.n_shards} client shards {shard.axes}")
-        if fl.compressed and data.n_clients % shard.n_shards:
-            raise ValueError(
-                f"n_clients={data.n_clients} must divide over the mesh's "
-                f"{shard.n_shards} client shards (row-sharded EF table)")
         shard_batch, shard_repl = chunk_shardings(mesh)
 
     def _stage(x, sharded_like=False):
@@ -289,12 +319,20 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     lr_at = exp_decay_per_round(fl.lr, fl.lr_decay)
     comm = CommLog().bind_sizes(global_state)
 
-    # --- wire codecs: device-resident EF + mirror --------------------------
+    # host span tracing opens early: the EF pager threads its staging /
+    # write-back spans through the same sink.  A path here means the
+    # engine owns the sink's lifetime (stream + close).
+    owns_runlog = runlog is not None and not hasattr(runlog, "span")
+    rl = as_runlog(runlog)
+
+    # --- wire codecs: EF store (dense device table | cohort-paged) + mirror
     compressed = fl.compressed
     wire_up = wire_down = None
     ef_all = down_mirror = round_key = None
     uplink = downlink = None
     ef_path = None
+    ef_paged = False
+    pager = None
     if compressed:
         uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac,
                             quant_bits=fl.quant_bits, impl=impl)
@@ -305,27 +343,60 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         wire_up = uplink.wire_bytes()
         wire_down = downlink.wire_bytes()
         ef_template = uplink.init_state()
-        ef_all = jax.tree.map(
-            lambda z: np.zeros((data.n_clients,) + z.shape,
-                               np.dtype(z.dtype)), ef_template)
-        # a copy, not an alias: the model and the mirror are both donated
-        # into the superstep, and a shared buffer cannot be donated twice.
-        down_mirror = jax.tree.map(np.asarray, global_state["model"])
+        store = HostEFStore(ef_template)
+        if store.n_leaves == 0:
+            ef_paged = False   # stateless uplink (e.g. int8): nothing to page
+        elif ef_store == "auto":
+            ef_paged = (data.n_clients * store.row_nbytes()
+                        > _EF_STORE_AUTO_BYTES)
+        else:
+            ef_paged = ef_store == "host"
+        if shard is not None and not ef_paged \
+                and data.n_clients % shard.n_shards:
+            raise ValueError(
+                f"n_clients={data.n_clients} must divide over the mesh's "
+                f"{shard.n_shards} client shards (row-sharded EF table); "
+                "ef_store='host' lifts the constraint")
         ef_path = (os.path.join(checkpoint_dir, "ef.npz")
                    if checkpoint_dir else None)
-        if start_round and ef_path and os.path.exists(ef_path):
-            # ef.npz is always the compact [n_clients, ...] layout
-            ef_all, down_mirror = load_tree(ef_path, (ef_all, down_mirror))
+        resume_ef = bool(start_round and ef_path
+                         and os.path.exists(ef_path))
         if shard is not None:
-            # resident scratch-row layout: one permanent write-sink row
-            # per shard block, so the per-round scatter is in place
-            ef_all = insert_scratch_rows(ef_all, shard.n_shards)
             ef_sh = ef_table_sharding(mesh)
-        ef_all = jax.tree.map(
-            lambda z: (jax.device_put(z, ef_sh) if shard is not None
-                       else jnp.asarray(z)), ef_all)
-        down_mirror = jax.tree.map(lambda z: _stage(jnp.asarray(z)),
-                                   down_mirror)
+        if ef_paged:
+            pager = EFPager(store, mesh=mesh, impl=impl, runlog=rl)
+            if resume_ef:
+                # ef.npz is always the compact [n_clients, ...] layout;
+                # the store keeps only the non-zero rows of it
+                ef_dense = jax.tree.map(
+                    lambda z: np.zeros((data.n_clients,) + z.shape,
+                                       np.dtype(z.dtype)), ef_template)
+                ef_dense, down_host = load_tree(
+                    ef_path, (ef_dense, global_state["model"]))
+                store.from_dense(ef_dense)
+                down_mirror = jax.tree.map(
+                    lambda z: _stage(jnp.asarray(z)), down_host)
+            else:
+                down_mirror = _device_copy(global_state["model"])
+        else:
+            ef_all = jax.tree.map(
+                lambda z: np.zeros((data.n_clients,) + z.shape,
+                                   np.dtype(z.dtype)), ef_template)
+            if resume_ef:
+                # ef.npz is always the compact [n_clients, ...] layout
+                ef_all, down_host = load_tree(
+                    ef_path, (ef_all, global_state["model"]))
+                down_mirror = jax.tree.map(
+                    lambda z: _stage(jnp.asarray(z)), down_host)
+            else:
+                down_mirror = _device_copy(global_state["model"])
+            if shard is not None:
+                # resident scratch-row layout: one permanent write-sink
+                # row per shard block, so the per-round scatter is in place
+                ef_all = insert_scratch_rows(ef_all, shard.n_shards)
+            ef_all = jax.tree.map(
+                lambda z: (jax.device_put(z, ef_sh) if shard is not None
+                           else jnp.asarray(z)), ef_all)
         round_key = jax.random.fold_in(key, 0x636f6d70)  # "comp"
 
     # --- observability: telemetry taps + host span tracing ----------------
@@ -344,14 +415,18 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                     (("ef",) if compressed and uplink.stateful else ())
                     + (("pmask", "staleness") if part_active else ())),
                 taps=None if telemetry is True else tuple(telemetry))
-    # a path means the engine owns the sink's lifetime (stream + close)
-    owns_runlog = runlog is not None and not hasattr(runlog, "span")
-    rl = as_runlog(runlog)
 
     def save_ef():
-        """ef.npz keeps the compact layout — strip the scratch rows."""
-        ef_disk = (strip_scratch_rows(ef_all, shard.n_shards)
-                   if shard is not None else ef_all)
+        """ef.npz keeps the compact [n_clients, ...] layout, whatever the
+        live backing (dense, sharded-resident, or paged store)."""
+        if ef_paged:
+            pager.flush()   # every submitted write-back is in the store
+            ef_src = store
+        else:
+            ef_src = ef_all
+        ef_disk = ef_disk_layout(
+            ef_src, n_shards=shard.n_shards if shard is not None else 1,
+            n_clients=data.n_clients)
         save_tree(ef_path, (ef_disk, down_mirror), runlog=rl)
 
     # --- fixed-shape evaluation -------------------------------------------
@@ -413,7 +488,27 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             "lrs": lr_at(jnp.arange(r0, r1)),
         }
         if compressed:   # only the compressed superstep consumes these
-            staged["cids"] = _stage(cids)
+            if ef_paged:
+                # the superstep addresses EF rows by VIRTUAL cid — a slot
+                # in the chunk's [K*C, ...] page.  Real training chunks
+                # gather the page from the store (ordered after the
+                # write-backs they depend on); calibration chunks get a
+                # throwaway zero page and never touch store or pager.
+                if src is None:
+                    plan, page = pager.stage(cids, pool=staging_pool)
+                else:
+                    plan = plan_chunk_static(
+                        cids, shard.n_shards if shard is not None else 1)
+                    page = jax.tree_util.tree_unflatten(
+                        store._treedef, pager.zero_page(plan))
+                staged["cids"] = _stage(plan.vcids)
+                staged["ef_page"] = jax.tree.map(
+                    lambda z: (jax.device_put(z, ef_sh)
+                               if shard is not None else jnp.asarray(z)),
+                    page)
+                staged["ef_plan"] = plan
+            else:
+                staged["cids"] = _stage(cids)
             staged["ridx"] = _stage(np.arange(r0, r1, dtype=np.int32))
         if part is not None:
             staged["pmask"] = _stage(part["mask"], sharded_like=True)
@@ -429,7 +524,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         if staging_pool is not None:
             # free the pool's host buffers for the next chunk: the wait
             # lands on the PREFETCH thread, never the dispatch thread
-            jax.block_until_ready(staged)
+            # (ef_plan is host metadata, not an array)
+            jax.block_until_ready(
+                {k: v for k, v in staged.items() if k != "ef_plan"})
         return staged
 
     # --- jitted supersteps, cached per chunk length -----------------------
@@ -483,7 +580,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         part_args = ((staged["pmask"], staged["pstale"])
                      if part_active else ())
         if compressed:
-            ef = jax.tree.map(jnp.zeros_like, ef_all) if ef is None else ef
+            if ef is None:   # device-native zeros: donation-safe anywhere
+                ef = jax.tree.map(jnp.zeros_like,
+                                  staged["ef_page"] if ef_paged else ef_all)
             mirror = jax.tree.map(jnp.zeros_like, down_mirror) \
                 if mirror is None else mirror
             return step(state, ef, mirror, staged["batches"],
@@ -528,7 +627,9 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
              chunk_rounds=chunk_rounds, compressed=compressed,
              client_shards=shard.n_shards if shard is not None else 1,
              telemetry=tele is not None,
-             participation=policy.name if part_active else None)
+             participation=policy.name if part_active else None,
+             ef_store=("host" if ef_paged else "device") if compressed
+                      else None)
     if profile_dir:
         jax.profiler.start_trace(profile_dir)
     halted_at = None
@@ -542,7 +643,18 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                     with rl.span("chunk.dispatch", r0=r0, r1=r1,
                                  compile=(r1 - r0) not in steps):
                         step = get_step(r1 - r0)
-                        if compressed:
+                        if compressed and ef_paged:
+                            # device patch closes the one-chunk write-back
+                            # window, then the page rides the superstep in
+                            # ef_all's place; the output page goes back to
+                            # the store off-thread
+                            ef_page = pager.patch(staged["ef_plan"],
+                                                  staged["ef_page"])
+                            global_state, mstack, ef_out, down_mirror = \
+                                run_step(step, staged, global_state,
+                                         ef_page, down_mirror)
+                            pager.complete(staged["ef_plan"], ef_out)
+                        elif compressed:
                             global_state, mstack, ef_all, down_mirror = \
                                 run_step(step, staged, global_state, ef_all,
                                          down_mirror)
@@ -591,6 +703,11 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                         if compressed:
                             save_ef()
     finally:
+        if pager is not None:
+            # wakes a prefetch thread blocked in pager.stage (it aborts
+            # through the prefetcher's error path) and drains pending
+            # write-backs, so the final save below reads a settled store
+            pager.close()
         prefetcher.close()
         if profile_dir:
             jax.profiler.stop_trace()
@@ -616,7 +733,20 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         "participation": policy.name if part_active else None,
         "round_cohort": c_round,
         "halted_at": halted_at,
+        "ef_store": ("host" if ef_paged else "device") if compressed
+                    else None,
     }
+    if ef_paged:
+        # O(C·n) headline: peak device bytes the EF pages ever occupied —
+        # a function of chunk size and cohort, never of n_clients
+        stats["ef_page_bytes"] = pager.page_rows_max * store.row_nbytes()
+        stats["ef_store_rows"] = store.n_rows
+        stats["ef_stall_s"] = round(pager.stall_s, 4)
+        rl.counter("ef.page.hits", store.hits)
+        rl.counter("ef.page.misses", store.misses)
+        rl.counter("ef.page.writeback_rows", store.writeback_rows)
+        rl.counter("ef.page.patched_rows", pager.patched_rows)
+        rl.counter("ef.page.stall_s", stats["ef_stall_s"])
     rl.counter("prefetch.wait_s", stats["host_wait_s"])
     rl.counter("metrics.wait_s", stats["metrics_wait_s"])
     if pool is not None:

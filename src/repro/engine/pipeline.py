@@ -23,6 +23,13 @@ Exceptions raised inside the builder are re-raised at the consuming
 consumer stops early.  ``wait_s`` accumulates the time the CONSUMER spent
 blocked on the queue — the host-side stall the pipeline exists to remove;
 the engine surfaces it in ``ServerResult.stats``.
+
+``WritebackLane`` is the pipeline's reverse direction: a single serialized
+worker draining device results back to host state (the cohort-paged EF
+store writes each chunk's updated rows back through one — see
+``repro.engine.efstore``).  A completion counter + condition variable let
+producers wait for a PREFIX of the submitted work ("writebacks through
+chunk j-2 done") without ever blocking on the device themselves.
 """
 from __future__ import annotations
 
@@ -65,6 +72,113 @@ class StagingPool:
         else:
             self.hits += 1
         return buf
+
+
+class WritebackLane:
+    """Single-worker serialized write-back queue with a completion counter.
+
+    ``submit(fn)`` enqueues a thunk; one daemon worker runs them strictly
+    in submission order (the thunks typically ``jax.device_get`` a chunk
+    result and fold it into host state, so ordering IS the consistency
+    model).  ``wait_done(n)`` blocks the CALLING thread until at least
+    ``n`` submitted thunks have completed — the EF pager's staging thread
+    uses it to order host gathers after the write-backs they depend on —
+    and returns False instead of blocking forever once ``close()`` has
+    been called.  ``stall_s`` accumulates producer time spent inside
+    ``wait_done``.
+
+    A thunk exception is captured (the worker keeps counting so waiters
+    never deadlock) and re-raised at the next ``wait_done``/``flush``;
+    ``close()`` drains the remaining queue through the worker before
+    joining, so a post-close ``flush`` still sees everything completed.
+    """
+
+    def __init__(self, *, name: str = "engine-writeback", runlog=None):
+        from repro.obs.runlog import as_runlog
+        self._runlog = as_runlog(runlog)
+        self._q: queue.Queue = queue.Queue()
+        self._cv = threading.Condition()
+        self._done = 0
+        self._submitted = 0
+        self._stop = False
+        self._closed = False
+        self.error = None
+        self.stall_s = 0.0      # producer time blocked in wait_done
+        self._thread = threading.Thread(target=self._worker, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    @property
+    def submitted(self) -> int:
+        return self._submitted
+
+    @property
+    def done(self) -> int:
+        with self._cv:
+            return self._done
+
+    def submit(self, fn: Callable) -> None:
+        self._submitted += 1
+        self._q.put(fn)
+
+    def _worker(self):
+        while True:
+            fn = self._q.get()
+            if fn is None:
+                return
+            try:
+                fn()
+            except BaseException as e:   # surfaced at the next wait/flush
+                with self._cv:
+                    if self.error is None:
+                        self.error = e
+            finally:
+                # count even a failed thunk: waiters must wake either way
+                with self._cv:
+                    self._done += 1
+                    self._cv.notify_all()
+
+    def _raise_error(self):
+        if self.error is not None:
+            err, self.error = self.error, None
+            raise err
+
+    def wait_done(self, n: int) -> bool:
+        """Block until ``n`` submitted thunks completed; False if the lane
+        was closed first (the shutdown path — callers abort their work)."""
+        t0 = time.perf_counter()
+        with self._cv:
+            while self._done < n and not self._stop:
+                self._cv.wait(0.05)
+            ok = self._done >= n
+        self.stall_s += time.perf_counter() - t0
+        self._raise_error()
+        return ok
+
+    def flush(self) -> None:
+        """Wait for everything submitted so far to complete."""
+        self.wait_done(self._submitted)
+
+    def close(self) -> None:
+        """Drain the queue through the worker, then retire it (idempotent).
+
+        Pending thunks still RUN (a checkpoint's final flush may follow),
+        but ``wait_done`` callers blocked on never-submitted work are woken
+        immediately.  Never raises — shutdown runs from ``finally`` blocks;
+        a captured error is emitted as a runlog warning instead.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+        self._q.put(None)
+        self._thread.join(timeout=5.0)
+        if self._thread.is_alive():
+            self._runlog.warning("writeback.join_timeout")
+        if self.error is not None:
+            self._runlog.warning("writeback.error", error=repr(self.error))
 
 
 class HostPrefetcher:

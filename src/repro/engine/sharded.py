@@ -12,7 +12,11 @@ in parallel across devices:
   RESIDENT scratch-row layout (shard ``s`` holds its ``N_loc`` owned rows
   plus one permanent write-sink row — ``repro.launch.sharding.
   ef_table_sharding``), so the per-round scatter is one in-place aliased
-  row write instead of a concatenate/slice pair;
+  row write instead of a concatenate/slice pair.  Under the cohort-paged
+  store (``ef_store="host"``) the same specs carry a chunk-local PAGE
+  (``[(K*C+1)*S, ...]`` — per-shard slot blocks with the identical
+  scratch row) and ``cids`` carries page-relative virtual ids whose
+  shard assignment is ``cid % S``; the superstep body is unchanged;
 * global state, broadcast mirror, lr schedule, round keys and ``cids``
   are replicated — every shard computes the identical server-side update
   from the psum'd aggregate, so the replicated outputs agree bitwise

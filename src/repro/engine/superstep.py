@@ -60,6 +60,18 @@ Collectives (sharded only):
   before the scatter lands.  Every packed element equals its standalone
   -psum value bitwise, so fused and unfused rounds agree bit for bit.
 
+Cohort-paged EF (``ef_store="host"``, see ``repro.engine.efstore``): the
+superstep itself is layout-agnostic — every row access goes through
+``cids`` and ``table.shape[0]``.  The engine exploits that by passing a
+chunk-local PAGE as ``ef_all`` (``[K*C, ...]`` unsharded, or per-shard
+blocks ``[P_loc+1, ...]`` with the same resident scratch row) and
+page-relative VIRTUAL ids as ``cids``: the ownership math below
+(``n_loc = table.shape[0] - 1``; ``owned = (cids >= lo) & (cids < lo +
+n_loc)``) and the cross-round match in ``_ef_gather_next_contrib`` only
+require that equal ids mean the same row and distinct ids mean distinct
+rows within the chunk — which the paging plan guarantees (one slot per
+distinct client per chunk).  Nothing in this module special-cases paging.
+
 The caller jits the returned function; donate ``global_state`` (and for
 the compressed path ``ef_all`` + ``mirror``) so steady-state chunks update
 those buffers in place instead of reallocating them every call.

@@ -61,6 +61,10 @@ class EngineOptions:
     impl: str = "auto"                      # kernel dispatch (jnp | pallas)
     fused_collective: bool = True           # mesh: ONE packed psum per round
     sharded_eval: bool = True               # mesh: eval batch split + psum
+    # compressed runs: EF residual backing — "device" dense [N, n] table,
+    # "host" cohort-paged store (O(C·n) device memory, bitwise-equal),
+    # "auto" pages once the projected dense table passes ~1 GiB
+    ef_store: str = "auto"
     # observability (repro.obs) — off by default, bitwise-invisible when on
     telemetry: Any = False                  # True | tap names | Telemetry
     runlog: Any = None                      # JSONL path | RunLog sink
@@ -129,6 +133,7 @@ class FederatedTrainer:
             mesh=o.engine.mesh, overlap_eval=o.engine.overlap_eval,
             fused_collective=o.engine.fused_collective,
             sharded_eval=o.engine.sharded_eval,
+            ef_store=o.engine.ef_store,
             telemetry=o.engine.telemetry, runlog=o.engine.runlog,
             halt_on_nonfinite=o.engine.halt_on_nonfinite,
             profile_dir=o.engine.profile_dir)

@@ -94,6 +94,7 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                   overlap_eval: bool = True,
                   fused_collective: bool = True,
                   sharded_eval: bool = True,
+                  ef_store: str = "auto",
                   telemetry=False, runlog=None,
                   halt_on_nonfinite: bool = False,
                   profile_dir: Optional[str] = None) -> ServerResult:
@@ -122,7 +123,7 @@ def run_federated(bundle: ModelBundle, fl: FLConfig, data: FederatedDataset,
                              prefetch=prefetch, mesh=mesh,
                              overlap_eval=overlap_eval,
                              fused_collective=fused_collective,
-                             sharded_eval=sharded_eval,
+                             sharded_eval=sharded_eval, ef_store=ef_store,
                              telemetry=telemetry, runlog=runlog,
                              halt_on_nonfinite=halt_on_nonfinite,
                              profile_dir=profile_dir))

@@ -103,6 +103,7 @@ def run_engine(args, cfg, fl) -> None:
         eval=EvalOptions(every=max(args.rounds // 2, 1), examples=64),
         engine=EngineOptions(superstep_rounds="auto",
                              mesh=mesh if shards > 1 else None,
+                             ef_store=args.ef_store,
                              telemetry=args.telemetry,
                              runlog=args.runlog,
                              halt_on_nonfinite=args.halt_on_nonfinite,
@@ -135,6 +136,11 @@ def main() -> None:
     ap.add_argument("--engine", action="store_true",
                     help="run via the client-parallel shard_map engine "
                          "(repro.engine) instead of the pjit round loop")
+    ap.add_argument("--ef-store", default="auto",
+                    choices=("auto", "device", "host"),
+                    help="engine only: EF residual backing — dense device "
+                         "table, cohort-paged host store, or size-based "
+                         "auto (paged runs are bitwise-equal)")
     ap.add_argument("--telemetry", action="store_true",
                     help="engine only: enable repro.obs on-device telemetry "
                          "taps (tele/... metrics; bitwise-invisible)")

@@ -25,10 +25,13 @@ import math
 from typing import Any, Dict, List, Optional
 
 __all__ = ["span_totals", "round_time_breakdown", "telemetry_summary",
-           "bytes_per_round", "build_report", "render"]
+           "bytes_per_round", "ef_page_summary", "build_report", "render"]
 
 # span names charged to the dispatch thread's wall clock, in report order
-_BREAKDOWN_SPANS = ("chunk.dispatch", "eval.dispatch", "checkpoint.save")
+# (ef.page.writeback is NOT here: it runs on the lane's worker thread and
+# only costs the dispatch thread via the ef.page.stall_s counter)
+_BREAKDOWN_SPANS = ("chunk.dispatch", "eval.dispatch", "checkpoint.save",
+                    "ef.page.gather")
 
 
 def span_totals(records: List[Dict]) -> Dict[str, Dict[str, float]]:
@@ -86,6 +89,8 @@ def round_time_breakdown(records: List[Dict]) -> Dict[str, Any]:
         "dispatch_s": spans.get("chunk.dispatch", {}).get("total_s", 0.0),
         "eval_s": spans.get("eval.dispatch", {}).get("total_s", 0.0),
         "checkpoint_s": spans.get("checkpoint.save", {}).get("total_s", 0.0),
+        "ef_gather_s": spans.get("ef.page.gather", {}).get("total_s", 0.0),
+        "ef_stall_s": _counter_last(records, "ef.page.stall_s") or 0.0,
         "metrics_drain_s": _counter_last(records, "metrics.wait_s") or 0.0,
         "prefetch_stall_s": _counter_last(records, "prefetch.wait_s") or 0.0,
     }
@@ -102,6 +107,35 @@ def round_time_breakdown(records: List[Dict]) -> Dict[str, Any]:
         out["compiles"] = sum(
             1 for r in records if r.get("kind") == "span"
             and r["name"] == "chunk.dispatch" and r.get("compile"))
+    return out
+
+
+def ef_page_summary(records: List[Dict]) -> Dict[str, Any]:
+    """Cohort-paged EF store accounting (empty when the run was dense).
+
+    Folds the pager's end-of-run counters (page hit/miss rows, rows
+    written back, rows patched on device) with its two span families:
+    ``ef.page.gather`` runs on the dispatch thread (charged to the round
+    loop), ``ef.page.writeback`` on the lane's worker thread (overlapped
+    — only its ``stall_s`` share blocks dispatch).
+    """
+    out: Dict[str, Any] = {}
+    for name in ("hits", "misses", "writeback_rows", "patched_rows"):
+        v = _counter_last(records, f"ef.page.{name}")
+        if v is not None:
+            out[name] = int(v)
+    stall = _counter_last(records, "ef.page.stall_s")
+    if stall is not None:
+        out["stall_s"] = round(float(stall), 4)
+    spans = span_totals(records)
+    for key, span in (("gather", "ef.page.gather"),
+                      ("writeback", "ef.page.writeback")):
+        if span in spans:
+            out[f"{key}_s"] = spans[span]["total_s"]
+            out[f"{key}_count"] = int(spans[span]["count"])
+    rows = out.get("hits", 0) + out.get("misses", 0)
+    if rows:
+        out["hit_rate"] = round(out.get("hits", 0) / rows, 4)
     return out
 
 
@@ -145,6 +179,9 @@ def build_report(runlog_records: Optional[List[Dict]] = None,
     if runlog_records:
         report["round_time"] = round_time_breakdown(runlog_records)
         report["spans"] = span_totals(runlog_records)
+        ef = ef_page_summary(runlog_records)
+        if ef:
+            report["ef_page"] = ef
         warns = [r for r in runlog_records
                  if r.get("kind") == "event" and r.get("level") == "warning"]
         if warns:
@@ -171,13 +208,29 @@ def render(report: Dict) -> str:
         wall = rt.get("wall_s")
         lines.append(f"wall: {wall}s  chunks: {rt.get('chunks', '?')} "
                      f"(compiled {rt.get('compiles', '?')})")
-        for k in ("dispatch_s", "eval_s", "checkpoint_s",
-                  "metrics_drain_s", "prefetch_stall_s", "other_s"):
+        for k in ("dispatch_s", "eval_s", "checkpoint_s", "ef_gather_s",
+                  "ef_stall_s", "metrics_drain_s", "prefetch_stall_s",
+                  "other_s"):
             if k in rt:
                 frac = (report["round_time"].get("fractions", {})
                         .get(k[:-2]))
                 pct = f"  ({frac * 100:.1f}%)" if frac is not None else ""
                 lines.append(f"  {k[:-2]:>15s}: {rt[k]:9.4f}s{pct}")
+    ef = report.get("ef_page")
+    if ef:
+        lines.append("== ef page store ==")
+        rows = ef.get("hits", 0) + ef.get("misses", 0)
+        hr = f"  hit rate {ef['hit_rate'] * 100:.1f}%" \
+            if "hit_rate" in ef else ""
+        lines.append(f"  rows gathered: {rows} "
+                     f"(hits {ef.get('hits', 0)}, "
+                     f"misses {ef.get('misses', 0)}){hr}")
+        lines.append(f"  written back: {ef.get('writeback_rows', 0)} rows "
+                     f"in {ef.get('writeback_count', 0)} flushes "
+                     f"({ef.get('writeback_s', 0.0):.4f}s worker-thread)")
+        lines.append(f"  device-patched: {ef.get('patched_rows', 0)} rows  "
+                     f"gather {ef.get('gather_s', 0.0):.4f}s  "
+                     f"dispatch stall {ef.get('stall_s', 0.0):.4f}s")
     b = report.get("bytes")
     if b:
         lines.append("== bytes ==")

@@ -1,0 +1,620 @@
+"""Cohort-paged error-feedback store (the O(C·n) scaling tentpole).
+
+The contract pinned here: ``ef_store="host"`` — chunk-local EF pages
+gathered from a host store, patched on device across the chunk overlap
+window, written back asynchronously — is BITWISE the dense device table,
+per mode × codec, single-device and sharded, across checkpoint-resume in
+either direction, and under chaos + partial participation (a masked
+client's residual survives the page round-trip untouched).  Alongside it,
+the fellow-traveller scaling pins: Floyd O(C) client sampling, the cached
+``client_sizes`` / :class:`TemplateClients` lazy federation, the
+device-only downlink mirror copy, and the fused one-psum jaxpr assert
+with paging on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import CNN_CONFIGS
+from repro.configs.base import FLConfig
+from repro.data.federated import (ChaosConfig, FederatedDataset,
+                                  TemplateClients, _FLOYD_THRESHOLD)
+from repro.data.partition import iid_partition
+from repro.data.synth import class_images
+from repro.engine.efstore import (HostEFStore, _patch_map, plan_chunk_static)
+from repro.engine.pipeline import WritebackLane
+from repro.fl.server import run_federated
+from repro.models.registry import make_bundle
+
+_BUNDLE = None
+
+
+def _bundle():
+    global _BUNDLE
+    if _BUNDLE is None:
+        cfg = dataclasses.replace(CNN_CONFIGS["cnn_mnist"],
+                                  input_shape=(8, 8, 1), conv_channels=(4,),
+                                  fc_units=(8,), dropout=0.0)
+        _BUNDLE = make_bundle(cfg)
+    return _BUNDLE
+
+
+def _data(seed=3, n=4, chaos=None):
+    x, y = class_images(16, n_classes=4, shape=(8, 8, 1), seed=0)
+    return FederatedDataset(iid_partition(x, y, n),
+                            {"x": x[:16], "y": y[:16]}, seed=seed,
+                            chaos=chaos)
+
+
+FL_CASES = {
+    "plain": dict(),
+    "topk": dict(uplink_codec="topk", topk_frac=0.1),
+    "quant+downtopk": dict(uplink_codec="int8", downlink_codec="topk",
+                           topk_frac=0.1),
+    "fusion-topk": dict(algorithm="fedfusion", fusion_op="conv",
+                        uplink_codec="topk", topk_frac=0.1),
+}
+
+
+def _fl_for(case, **kw):
+    base = dict(clients_per_round=2, local_steps=2, local_batch=4, lr=0.05)
+    base.update(FL_CASES[case])
+    base.update(kw)
+    return FLConfig(algorithm=base.pop("algorithm", "fedavg"), **base)
+
+
+def _assert_same(ref, eng):
+    for a, b in zip(jax.tree.leaves(ref.global_state),
+                    jax.tree.leaves(eng.global_state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.comm.history == eng.comm.history
+    assert ref.comm.bytes_up == eng.comm.bytes_up
+    assert ref.comm.bytes_down == eng.comm.bytes_down
+
+
+# ---------------------------------------------------------------------------
+# HostEFStore unit contract
+
+
+def _template():
+    return {"w": np.zeros((3, 2), np.float32), "b": np.zeros((4,), np.float32)}
+
+
+def test_host_store_gather_update_roundtrip():
+    store = HostEFStore(_template())
+    assert store.n_rows == 0
+    assert store.row_nbytes() == (3 * 2 + 4) * 4
+
+    rng = np.random.default_rng(0)
+    # buffers ride in flattened-leaf order: "b" [*, 4], then "w" [*, 3, 2]
+    b = rng.normal(size=(2, 4)).astype(np.float32)
+    w = rng.normal(size=(2, 3, 2)).astype(np.float32)
+    store.update([7, 1000], [b, w], [0, 1])
+    assert store.n_rows == 2
+    # update copies — mutating the source buffer must not reach the store
+    w0 = w[0].copy()
+    w[0] = -1.0
+
+    bufs = [np.zeros((3, 4), np.float32), np.zeros((3, 3, 2), np.float32)]
+    store.gather([1000, 7, 5], bufs, [0, 2, 1])
+    np.testing.assert_array_equal(bufs[1][0], w[1])
+    np.testing.assert_array_equal(bufs[1][2], w0)
+    np.testing.assert_array_equal(bufs[1][1], 0.0)  # miss stays zero
+    np.testing.assert_array_equal(bufs[0][0], b[1])
+    assert store.hits == 2 and store.misses == 1
+    assert store.writeback_rows == 2
+
+
+def test_host_store_dense_roundtrip():
+    store = HostEFStore(_template())
+    w = np.arange(6, dtype=np.float32).reshape(1, 3, 2)
+    b = np.zeros((1, 4), np.float32)
+    store.update([3], [b, w], [0])
+    dense = store.to_dense(6)
+    assert dense["w"].shape == (6, 3, 2)
+    np.testing.assert_array_equal(dense["w"][3], w[0])
+    assert not dense["w"][[0, 1, 2, 4, 5]].any()
+
+    back = HostEFStore(_template())
+    back.from_dense(dense)
+    assert back.n_rows == 1           # zero rows dropped: absent == zero
+    np.testing.assert_array_equal(back.to_dense(6)["w"], dense["w"])
+    # a row that is zero in one leaf but not the other must survive
+    dense["b"][5, 0] = 2.0
+    back.from_dense(dense)
+    assert back.n_rows == 2
+
+
+# ---------------------------------------------------------------------------
+# PagePlan invariants
+
+
+def test_plan_unsharded_injective_and_stable():
+    cids = np.array([[9, 2], [2, 40], [7, 9]])
+    plan = plan_chunk_static(cids)
+    assert plan.page_rows == plan.p_loc == 6   # K*C slots
+    assert plan.vcids.shape == cids.shape
+    assert plan.vcids.dtype == np.int32
+    # same client -> same slot across rounds; distinct clients distinct
+    flat_c, flat_v = cids.reshape(-1), plan.vcids.reshape(-1)
+    assert len({(c, v) for c, v in zip(flat_c, flat_v)}) == len(set(flat_c))
+    assert len(set(flat_v[np.unique(flat_c, return_index=True)[1]])) == \
+        len(set(flat_c))
+    assert flat_v.max() < plan.page_rows
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_plan_sharded_owner_and_scratch_rows(n_shards):
+    rng = np.random.default_rng(1)
+    cids = rng.choice(1000, size=(4, 3), replace=False)
+    plan = plan_chunk_static(cids, n_shards)
+    p_loc = 4 * 3
+    assert plan.p_loc == p_loc
+    assert plan.page_rows == (p_loc + 1) * n_shards
+    for cid, slot, row in zip(plan.uniq, plan.slots, plan.rows):
+        owner = cid % n_shards                      # chunk-stable owner map
+        assert row == owner * (p_loc + 1) + slot
+        assert slot < p_loc                         # never the scratch row
+    # virtual ids encode (owner, slot) in the superstep's ownership math:
+    # vcid // p_loc == owner shard, vcid % p_loc == block-local slot
+    flat_c, flat_v = cids.reshape(-1), plan.vcids.reshape(-1)
+    for c, v in zip(flat_c, flat_v):
+        assert v // p_loc == c % n_shards
+    assert len(set(flat_v)) == len(set(flat_c))
+
+
+def test_plan_owner_stable_across_chunks():
+    """The device patch copies rows within a shard block — legal only
+    because a client's owner shard never changes between chunks."""
+    a = plan_chunk_static(np.array([[11, 5], [8, 11]]), 2, index=0)
+    b = plan_chunk_static(np.array([[11, 30], [7, 8]]), 2, index=1)
+    for cid in set(a.uniq) & set(b.uniq):
+        oa = a.rows[list(a.uniq).index(cid)] // (a.p_loc + 1)
+        ob = b.rows[list(b.uniq).index(cid)] // (b.p_loc + 1)
+        assert oa == ob
+
+
+def test_patch_map_selects_previous_chunk_rows():
+    prev = plan_chunk_static(np.array([[4, 9], [9, 2]]), index=0)
+    cur = plan_chunk_static(np.array([[9, 6], [4, 6]]), index=1)
+    use, src = _patch_map(prev, cur)
+    assert use.shape == (cur.page_rows,)
+    hit = {cid: (u, s) for cid, u, s in
+           zip(cur.uniq.tolist(), use[cur.rows], src[cur.rows])}
+    prev_slot = dict(zip(prev.uniq.tolist(), prev.slots.tolist()))
+    assert hit[9][0] and hit[9][1] == prev_slot[9]
+    assert hit[4][0] and hit[4][1] == prev_slot[4]
+    assert not hit[6][0]                            # fresh client: staged row
+    assert int(use.sum()) == 2
+
+
+# ---------------------------------------------------------------------------
+# WritebackLane
+
+
+def test_writeback_lane_orders_flush_close():
+    lane = WritebackLane(name="t-lane")
+    seen = []
+    for i in range(5):
+        lane.submit(lambda i=i: seen.append(i))
+    assert lane.wait_done(3)
+    lane.flush()
+    assert seen == [0, 1, 2, 3, 4]                  # submission order
+    lane.submit(lambda: seen.append(5))
+    lane.close()                                    # drains before joining
+    assert seen[-1] == 5
+    lane.close()                                    # idempotent
+
+
+def test_writeback_lane_error_surfaces_and_never_deadlocks():
+    lane = WritebackLane(name="t-err")
+    lane.submit(lambda: (_ for _ in ()).throw(RuntimeError("disk on fire")))
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        lane.flush()
+    lane.close()
+
+
+# ---------------------------------------------------------------------------
+# engine: paged == dense, bitwise
+
+
+@pytest.mark.parametrize("case", sorted(FL_CASES))
+@pytest.mark.parametrize("chunk", [1, 4])
+def test_paged_matches_dense_bitwise(case, chunk):
+    """Acceptance: ef_store="host" equals ef_store="device" bit for bit —
+    final model AND full CommLog history — per codec case, K=1 (no scan)
+    and K=4 (scan carry)."""
+    bundle = _bundle()
+    dense = run_federated(bundle, _fl_for(case), _data(), rounds=6, seed=1,
+                          eval_every=2, superstep_rounds=chunk,
+                          ef_store="device")
+    paged = run_federated(bundle, _fl_for(case), _data(), rounds=6, seed=1,
+                          eval_every=2, superstep_rounds=chunk,
+                          ef_store="host")
+    _assert_same(dense, paged)
+    if case == "plain":
+        assert paged.stats["ef_store"] is None      # no EF at all
+    elif case == "quant+downtopk":
+        # int8 uplink carries no residual state: nothing to page, the
+        # engine keeps the (empty) dense tree whatever ef_store says
+        assert paged.stats["ef_store"] == "device"
+    else:
+        assert paged.stats["ef_store"] == "host"
+        assert dense.stats["ef_store"] == "device"
+
+
+def test_paged_page_bytes_track_cohort_not_federation():
+    """The O(C·n) pin: the staged EF page is sized by (chunk rounds ×
+    cohort), so its byte count is IDENTICAL at 4 and 64 clients."""
+    bundle = _bundle()
+    fl = _fl_for("topk")
+    sizes = {}
+    for n in (4, 64):
+        res = run_federated(bundle, fl, _data(n=n), rounds=4, seed=1,
+                            eval_every=4, superstep_rounds=2,
+                            ef_store="host")
+        sizes[n] = res.stats["ef_page_bytes"]
+        assert res.stats["ef_store_rows"] <= n
+    assert sizes[4] == sizes[64] > 0
+
+
+def test_ef_store_auto_flips_on_projected_bytes(monkeypatch):
+    """"auto" picks the dense table while it fits and pages beyond the
+    budget — same run, same bits either way."""
+    import repro.engine.engine as eng
+    bundle = _bundle()
+    fl = _fl_for("topk")
+    small = run_federated(bundle, fl, _data(), rounds=2, seed=1,
+                          superstep_rounds=2, ef_store="auto")
+    assert small.stats["ef_store"] == "device"
+    monkeypatch.setattr(eng, "_EF_STORE_AUTO_BYTES", 0)
+    big = run_federated(bundle, fl, _data(), rounds=2, seed=1,
+                        superstep_rounds=2, ef_store="auto")
+    assert big.stats["ef_store"] == "host"
+    _assert_same(small, big)
+
+
+def test_ef_store_rejects_unknown_value():
+    with pytest.raises(ValueError, match="ef_store"):
+        run_federated(_bundle(), _fl_for("topk"), _data(), rounds=1,
+                      ef_store="hbm")
+
+
+@pytest.mark.parametrize("first,second", [("device", "host"),
+                                          ("host", "device"),
+                                          ("host", "host")])
+def test_paged_checkpoint_resume_cross_store(tmp_path, first, second):
+    """ef.npz is store-agnostic: a checkpoint written under either backing
+    resumes under either, landing bitwise on the dense->dense two-phase
+    oracle (models AND the resumed history)."""
+    bundle = _bundle()
+    fl = _fl_for("topk")
+
+    def two_phase(d, ef_first, ef_second):
+        run_federated(bundle, fl, _data(), rounds=4, seed=1, eval_every=4,
+                      superstep_rounds=3, checkpoint_dir=d,
+                      checkpoint_every=2, ef_store=ef_first)
+        return run_federated(bundle, fl, _data(), rounds=8, seed=1,
+                             eval_every=4, superstep_rounds=3,
+                             checkpoint_dir=d, checkpoint_every=2,
+                             ef_store=ef_second)
+
+    gold = two_phase(str(tmp_path / "gold"), "device", "device")
+    res = two_phase(str(tmp_path / "ck"), first, second)
+    _assert_same(gold, res)
+    assert res.comm.rounds == 4                     # only rounds 5..8 ran
+
+
+def test_paged_ef_npz_equals_dense_ef_npz(tmp_path):
+    """The checkpointed EF table itself (not just the downstream run) is
+    bitwise store-independent."""
+    bundle = _bundle()
+    fl = _fl_for("topk")
+    for store in ("device", "host"):
+        run_federated(bundle, fl, _data(), rounds=4, seed=1, eval_every=4,
+                      superstep_rounds=2, checkpoint_dir=str(tmp_path / store),
+                      checkpoint_every=4, ef_store=store)
+    a = np.load(tmp_path / "device" / "ef.npz")
+    b = np.load(tmp_path / "host" / "ef.npz")
+    assert sorted(a.files) == sorted(b.files)
+    for k in a.files:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_paged_chaos_participation_bitwise():
+    """Chaos + deadline participation under paging: masked clients' EF
+    rows ride the page out and back unmodified, so the run equals the
+    dense one bit for bit (PR 7's EF-rollback contract survives paging)."""
+    chaos = ChaosConfig(speed_sigma=1.0, jitter=0.2, dropout=0.3,
+                        truncation=0.3, seed=7)
+    bundle = _bundle()
+    fl = _fl_for("topk", clients_per_round=4, participation="deadline",
+                 over_provision=1.5)
+    kw = dict(rounds=6, seed=1, eval_every=2, superstep_rounds=2)
+    dense = run_federated(bundle, fl, _data(n=8, chaos=chaos),
+                          ef_store="device", **kw)
+    paged = run_federated(bundle, fl, _data(n=8, chaos=chaos),
+                          ef_store="host", **kw)
+    _assert_same(dense, paged)
+
+
+def test_paged_auto_chunk_calibration_identical():
+    """superstep_rounds="auto" calibrates on throwaway zero pages; the
+    paged result stays bitwise-equal to a fixed-K paged run."""
+    bundle = _bundle()
+    fl = _fl_for("topk")
+    fixed = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                          eval_every=4, superstep_rounds=4, ef_store="host")
+    auto = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                         eval_every=4, superstep_rounds="auto",
+                         ef_store="host")
+    _assert_same(fixed, auto)
+
+
+# ---------------------------------------------------------------------------
+# engine: downlink mirror stays on device (no host round-trip copy)
+
+
+def test_device_copy_mirror_is_device_native_and_unaliased():
+    from repro.engine.engine import _device_copy
+    src = {"w": jnp.arange(8, dtype=jnp.float32)}
+    cpy = _device_copy(src)
+    assert isinstance(cpy["w"], jax.Array)
+    np.testing.assert_array_equal(np.asarray(cpy["w"]), np.asarray(src["w"]))
+    # a jit-output buffer, safe to donate independently of the source
+    assert cpy["w"].unsafe_buffer_pointer() != src["w"].unsafe_buffer_pointer()
+
+
+# ---------------------------------------------------------------------------
+# sharded: forced-2-device subprocess grid (paged == dense on a mesh)
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import jax
+    assert jax.device_count() == 2, jax.devices()
+    from test_efstore import _assert_same, _bundle, _data, _fl_for
+    from repro.fl.server import run_federated
+    from repro.launch.mesh import make_engine_mesh
+
+    mesh = make_engine_mesh()
+    for case in ("topk", "quant+downtopk", "fusion-topk"):
+        fl = _fl_for(case, clients_per_round=4)
+        kw = dict(rounds=4, seed=1, eval_every=2, superstep_rounds=2,
+                  mesh=mesh)
+        dense = run_federated(_bundle(), fl, _data(n=8), ef_store="device",
+                              **kw)
+        paged = run_federated(_bundle(), fl, _data(n=8), ef_store="host",
+                              **kw)
+        _assert_same(dense, paged)
+        print(f"case {case}: OK")
+
+    # paged mode lifts the N-divides-over-shards constraint...
+    fl = _fl_for("topk", clients_per_round=4)
+    run_federated(_bundle(), fl, _data(n=7), rounds=2, seed=1,
+                  superstep_rounds=2, mesh=mesh, ef_store="host")
+    # ...which the dense table still enforces
+    try:
+        run_federated(_bundle(), fl, _data(n=7), rounds=2, seed=1,
+                      superstep_rounds=2, mesh=mesh, ef_store="device")
+        raise SystemExit("dense odd-N should have raised")
+    except ValueError:
+        pass
+    print("EFSTORE-SHARDED-OK")
+""")
+
+
+def _forced_host_env(n_devices):
+    here = os.path.dirname(os.path.abspath(__file__))
+    src = os.path.join(here, "..", "src")
+    env = dict(os.environ)
+    kept = [t for t in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in t]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n_devices}"])
+    env["REPRO_ALLOW_FORCED_DEVICES"] = "1"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src, here] + env.get("PYTHONPATH", "").split(os.pathsep))
+    return env
+
+
+def test_sharded_paged_matches_dense_forced_host():
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                         capture_output=True, text=True,
+                         env=_forced_host_env(2), timeout=1200)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "EFSTORE-SHARDED-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# fused collective: still exactly ONE psum per round with paging on
+
+
+_ONE_PSUM_PAGED_SCRIPT = textwrap.dedent("""
+    import jax
+    import jax.numpy as jnp
+    assert jax.device_count() == 2, jax.devices()
+    from test_efstore import _bundle, _fl_for
+    from repro.compress import make_codec
+    from repro.core.rounds import init_global_state
+    from repro.engine.sharded import client_sharding, make_sharded_superstep
+    from repro.launch.mesh import make_engine_mesh
+
+    def count_psums(jaxpr):
+        n = 0
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "psum":
+                n += 1
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    if hasattr(j, "jaxpr"):
+                        n += count_psums(j.jaxpr)
+                    elif hasattr(j, "eqns"):
+                        n += count_psums(j)
+        return n
+
+    def scan_bodies(jaxpr, out):
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.append(eqn.params["jaxpr"].jaxpr)
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    inner = (j.jaxpr if hasattr(j, "jaxpr")
+                             else (j if hasattr(j, "eqns") else None))
+                    if inner is not None:
+                        scan_bodies(inner, out)
+        return out
+
+    mesh = make_engine_mesh()
+    shard = client_sharding(mesh)
+    fl = _fl_for("topk", clients_per_round=4)
+    bundle = _bundle()
+    uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac)
+    downlink = make_codec(fl.downlink_codec)
+    state = jax.eval_shape(lambda k: init_global_state(bundle, fl, k),
+                           jax.random.PRNGKey(0))
+    uplink.bind(state["model"])
+    downlink.bind(state["model"])
+    K, C, S, B = 4, fl.clients_per_round, fl.local_steps, fl.local_batch
+    # the PAGED table: per-shard [K*C + 1] slot blocks (scratch row incl.)
+    ef = [jax.ShapeDtypeStruct(
+              ((K * C + 1) * shard.n_shards,) + z.shape, z.dtype)
+          for z in jax.eval_shape(uplink.init_state)]
+    args = (state, ef, state["model"],
+            {"x": jax.ShapeDtypeStruct((K, C, S, B, 8, 8, 1), jnp.float32),
+             "y": jax.ShapeDtypeStruct((K, C, S, B), jnp.int32)},
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, C), jnp.int32),   # virtual cids
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    fn = make_sharded_superstep(bundle, fl, "client_parallel", K, mesh,
+                                uplink=uplink, downlink=downlink,
+                                fused_collective=True)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    bodies = scan_bodies(jaxpr.jaxpr, [])
+    body = max(bodies, key=lambda b: len(b.eqns))
+    per_round = count_psums(body)
+    total = count_psums(jaxpr.jaxpr)
+    assert per_round == 1, f"paged fused round body has {per_round} psums"
+    assert total == 2, f"paged fused superstep has {total} psums"
+    print("ONE-PSUM-PAGED-OK")
+""")
+
+
+def test_fused_superstep_one_psum_with_paging():
+    """Acceptance: the fused sharded superstep traced on PAGE-shaped EF
+    args (``[(K*C+1)*S, ...]`` + virtual cids) still counts exactly one
+    psum in the round body and one chunk prologue — paging changes array
+    sizes, never the collective structure."""
+    out = subprocess.run([sys.executable, "-c", _ONE_PSUM_PAGED_SCRIPT],
+                         capture_output=True, text=True,
+                         env=_forced_host_env(2), timeout=600)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "ONE-PSUM-PAGED-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# O(C) sampling (Floyd) + lazy federations
+
+
+def test_floyd_sampling_distinct_in_range_replayable():
+    n = _FLOYD_THRESHOLD + 37
+    t = {"x": np.zeros((6, 2, 2, 1), np.float32),
+         "y": np.zeros((6,), np.int64)}
+    data = FederatedDataset(TemplateClients(t, n), {"x": t["x"], "y": t["y"]},
+                            seed=11)
+    a = data.sample_clients(64)
+    assert len(np.unique(a)) == 64
+    assert a.min() >= 0 and a.max() < n
+    # same seed -> same draw (the skip_round_sampling replay contract)
+    data2 = FederatedDataset(TemplateClients(t, n),
+                             {"x": t["x"], "y": t["y"]}, seed=11)
+    np.testing.assert_array_equal(a, data2.sample_clients(64))
+    assert not np.array_equal(a, data.sample_clients(64))  # stream advances
+
+
+def test_floyd_skip_round_sampling_replays():
+    n = _FLOYD_THRESHOLD + 5
+    t = {"x": np.zeros((8, 2, 2, 1), np.float32),
+         "y": np.zeros((8,), np.int64)}
+    data = FederatedDataset(TemplateClients(t, n), {"x": t["x"], "y": t["y"]},
+                            seed=4)
+    chunks = [data.round_chunk(2, 3, 2, 4) for _ in range(2)]
+    data.skip_round_sampling(2, 3, 2, 4)       # re-seeds + replays chunk 0
+    cids, _, _ = data.round_chunk(2, 3, 2, 4)
+    np.testing.assert_array_equal(cids, chunks[1][0])
+
+
+def test_small_federations_keep_choice_stream():
+    """At or below the threshold the original permutation ``choice``
+    stream is untouched — the bitwise reference pins depend on it."""
+    x, y = class_images(12, n_classes=4, shape=(8, 8, 1), seed=0)
+    data = FederatedDataset(iid_partition(x, y, 4), {"x": x, "y": y}, seed=3)
+    expect = np.random.default_rng(3).choice(4, size=2, replace=False)
+    np.testing.assert_array_equal(data.sample_clients(2), expect)
+
+
+def test_sampling_cost_flat_in_federation_size():
+    """The micro-bench guard: sampling a fixed cohort from a 64x larger
+    federation must not cost ~64x (Floyd is O(cohort); the permutation
+    path would scale with N)."""
+    t = {"x": np.zeros((6, 2, 2, 1), np.float32),
+         "y": np.zeros((6,), np.int64)}
+
+    def cost(n):
+        data = FederatedDataset(TemplateClients(t, n),
+                                {"x": t["x"], "y": t["y"]}, seed=0)
+        data.sample_clients(32)                 # warm caches
+        t0 = time.perf_counter()
+        for _ in range(50):
+            data.sample_clients(32)
+        return time.perf_counter() - t0
+
+    small, big = cost(1 << 14), cost(1 << 20)
+    assert big < small * 8 + 0.05, (small, big)
+
+
+def test_template_clients_and_cached_sizes():
+    t = {"x": np.ones((5, 2, 2, 1), np.float32),
+         "y": np.zeros((5,), np.int64)}
+    clients = TemplateClients(t, 1000)
+    assert len(clients) == 1000
+    assert clients[999] is clients[0]
+    with pytest.raises(IndexError):
+        clients[1000]
+    data = FederatedDataset(clients, {"x": t["x"], "y": t["y"]}, seed=0)
+    sizes = data.client_sizes()
+    assert sizes.shape == (1000,) and (sizes == 5.0).all()
+    assert data.client_sizes() is sizes          # cached
+    # list-backed datasets cache too
+    x, y = class_images(12, n_classes=4, shape=(8, 8, 1), seed=0)
+    d2 = FederatedDataset(iid_partition(x, y, 4), {"x": x, "y": y}, seed=0)
+    assert d2.client_sizes() is d2.client_sizes()
+
+
+def test_template_clients_round_batch():
+    t = {"x": np.random.default_rng(0).normal(
+             size=(6, 8, 8, 1)).astype(np.float32),
+         "y": np.arange(6, dtype=np.int64) % 4}
+    data = FederatedDataset(TemplateClients(t, 5000),
+                            {"x": t["x"], "y": t["y"]}, seed=2)
+    cids = data.sample_clients(4)
+    batch, sizes = data.round_batch(cids, 2, 3)
+    assert batch["x"].shape == (4, 2, 3, 8, 8, 1)
+    assert (sizes == 6.0).all()

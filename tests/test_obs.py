@@ -490,6 +490,37 @@ def test_report_from_engine_run(tmp_path):
     assert "round-time breakdown" in text and "tele/ef_norm" in text
 
 
+def test_report_ef_page_section_paged_only(tmp_path):
+    """A cohort-paged run's report carries the ef_page accounting (rows
+    gathered/written back, gather + stall seconds in the round-time
+    breakdown); a dense run's report omits the section entirely."""
+    reports = {}
+    for store in ("host", "device"):
+        path = str(tmp_path / f"run_{store}.jsonl")
+        res = run_federated(_bundle(), _fl_for("topk"), _data(), rounds=4,
+                            seed=1, eval_every=0, superstep_rounds=2,
+                            runlog=path, ef_store=store)
+        assert res.stats["ef_store"] == store
+        reports[store] = build_report(RunLog.load(path),
+                                      res.comm.to_records())
+
+    ef = reports["host"]["ef_page"]
+    # 2 chunks x 2 rounds x 2 clients, deduped per chunk: every unique
+    # gathered row comes back as a writeback row
+    rows = ef["hits"] + ef["misses"]
+    assert 0 < rows <= 8 and ef["writeback_rows"] == rows
+    assert ef["writeback_count"] == 2
+    assert ef["gather_count"] == 2 and ef["gather_s"] >= 0
+    assert 0 <= ef["hit_rate"] <= 1
+    rt = reports["host"]["round_time"]
+    assert "ef_gather_s" in rt and "ef_stall_s" in rt
+    text = render(reports["host"])
+    assert "ef page store" in text and f"written back: {rows} rows" in text
+
+    assert "ef_page" not in reports["device"]
+    assert "ef page store" not in render(reports["device"])
+
+
 def test_report_empty_inputs():
     assert build_report(None, None) == {}
     assert render({}) == "(empty report)"
