@@ -7,6 +7,13 @@ algorithm, the cumulative uplink bytes to the accuracy milestone and the
 reduction vs the identity codec.  CFedAvg/RingFed-style result: top-k with
 client error feedback reaches the milestone with a fraction of the bytes
 and no accuracy loss.
+
+``--adaptive`` runs the in-superstep controller comparison instead
+(``repro.control``): every rung of a 3-level top-k ladder as a STATIC
+run, then the ``ef_ratio`` controller scheduling over the same ladder —
+and gates ``adaptive_bytes_to_milestone <= best static`` (non-zero exit
+on regression; ``benchmarks/artifacts/fig7_result.json`` embeds the
+verdict, ``fig7_adaptive_schedule.jsonl`` the per-round schedule).
 """
 from __future__ import annotations
 
@@ -16,12 +23,16 @@ from repro.configs.base import FLConfig
 from repro.data.federated import FederatedDataset
 from repro.data.partition import artificial_noniid_partition
 
-from benchmarks.common import (bench_cnn, best_acc, mnist_like, print_table,
-                               round_records, run_fl, write_csv)
+from benchmarks.common import (ART_DIR, bench_cnn, best_acc, mnist_like,
+                               print_table, round_records, run_fl,
+                               write_csv)
 
 ALGOS = ("fedavg", "fedmmd", "fedfusion")
 CODECS = ("identity", "int8", "topk")
 TOPK_FRAC = 1.0 / 16.0
+# --adaptive: the ladder the controller schedules over (ascending; top =
+# TOPK_FRAC so the capacity level IS the static sweep's topk codec)
+LADDER = (TOPK_FRAC / 4.0, TOPK_FRAC / 2.0, TOPK_FRAC)
 
 
 def bytes_to_acc(hist: List[Dict], target: float) -> int:
@@ -73,6 +84,81 @@ def run(quick: bool = True):
     return rows
 
 
+def run_adaptive(quick: bool = True) -> Dict:
+    """Bytes-to-milestone: best static ladder rung vs the adaptive
+    controller on the same ladder (the CI-gated extension)."""
+    import json
+    import os
+
+    from repro.obs.report import schedule_summary
+
+    rounds = 14 if quick else 60
+    n_per = 32 if quick else 100
+    milestone = 0.55 if quick else 0.6
+
+    x, y = mnist_like(n_per)
+    xt, yt = mnist_like(20, seed=1)
+    bundle = bench_cnn("mnist", quick)
+
+    def one(frac: float, controller: str = "static"):
+        parts = artificial_noniid_partition(x, y, 8)
+        data = FederatedDataset(parts, {"x": xt, "y": yt})
+        fl = FLConfig(algorithm="fedavg", fusion_op="conv",
+                      clients_per_round=4, local_steps=4, local_batch=32,
+                      lr=0.06, lr_decay=0.99, uplink_codec="topk",
+                      topk_frac=frac, controller=controller,
+                      ladder=LADDER if controller != "static" else ())
+        return run_fl(bundle, data, fl, rounds)
+
+    rows = []
+    static_bytes: Dict[str, int] = {}
+    for frac in LADDER:
+        res = one(frac)
+        hist = round_records(
+            res.comm, save_as=f"fig7_static_f{round(1 / frac)}.jsonl")
+        b = bytes_to_acc(hist, milestone)
+        static_bytes[f"{frac:.6f}"] = b
+        rows.append({"run": f"static topk 1/{round(1 / frac)}",
+                     "best_acc": round(best_acc(hist), 4),
+                     "mb_up_total": round(res.comm.bytes_up / 1e6, 3),
+                     "mb_to_milestone": round(b / 1e6, 3) if b > 0
+                     else "n/a"})
+
+    res = one(TOPK_FRAC, controller="ef_ratio")
+    hist = round_records(res.comm, save_as="fig7_adaptive_schedule.jsonl")
+    b_ad = bytes_to_acc(hist, milestone)
+    sched = schedule_summary(hist)
+    rows.append({"run": "adaptive ef_ratio",
+                 "best_acc": round(best_acc(hist), 4),
+                 "mb_up_total": round(res.comm.bytes_up / 1e6, 3),
+                 "mb_to_milestone": round(b_ad / 1e6, 3) if b_ad > 0
+                 else "n/a"})
+
+    reached = [b for b in static_bytes.values() if b > 0]
+    best_static = min(reached) if reached else -1
+    beats = b_ad > 0 and (best_static < 0 or b_ad <= best_static)
+    result = {"milestone": milestone, "rounds": rounds,
+              "ladder": list(LADDER),
+              "static_bytes_to_milestone": static_bytes,
+              "best_static_bytes_to_milestone": best_static,
+              "adaptive_bytes_to_milestone": b_ad,
+              "adaptive_beats_static": beats,
+              "schedule": sched}
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, "fig7_result.json"), "w") as f:
+        json.dump(result, f, indent=2)
+
+    write_csv("fig7_adaptive.csv", rows)
+    print_table(f"Fig 7 (adaptive) — uplink bytes to acc>={milestone}, "
+                "static ladder rungs vs ef_ratio controller", rows)
+    print(f"adaptive_beats_static={beats} "
+          f"(adaptive={b_ad}, best_static={best_static})")
+    return result
+
+
 if __name__ == "__main__":
     import sys
+    if "--adaptive" in sys.argv:
+        result = run_adaptive(quick="--full" not in sys.argv)
+        sys.exit(0 if result["adaptive_beats_static"] else 1)
     run(quick="--full" not in sys.argv)

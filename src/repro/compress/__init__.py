@@ -31,7 +31,19 @@ CODEC_NAMES = ("identity", "quant", "int8", "int4", "topk", "topk_noef",
 
 def make_codec(name: str, *, topk_frac: float = 0.05, quant_bits: int = 8,
                impl: str = "auto") -> Codec:
-    """Build a codec by config name (see :data:`CODEC_NAMES`)."""
+    """Build a codec by config name (see :data:`CODEC_NAMES`).
+
+    Out-of-range parameters are rejected HERE, not just in
+    ``FLConfig.__post_init__`` — codecs built outside a config (tests,
+    benchmarks, plugins) get the same construction-time errors.
+    """
+    if name in ("topk", "topk_noef", "mask", "lowrank"):
+        if not 0.0 < topk_frac <= 1.0:
+            raise ValueError(
+                f"codec {name!r}: topk_frac={topk_frac!r} must be in (0, 1]")
+    if name == "quant" and quant_bits not in (4, 8):
+        raise ValueError(
+            f"codec 'quant': quant_bits={quant_bits!r} must be 4 or 8")
     if name == "identity":
         return IdentityCodec()
     if name == "quant":

@@ -62,11 +62,34 @@ class Codec:
     def _encode_leaf(self, x, state, key, i) -> Tuple[Any, Any]:
         return x, state
 
+    def _encode_leaf_level(self, x, state, key, i, level) -> Tuple[Any, Any]:
+        raise NotImplementedError(
+            f"codec {self.name!r} does not support level-parameterized "
+            "encode (no compression ladder)")
+
     def _decode_leaf(self, payload, i):
         return payload
 
     def _init_leaf_state(self, i):
         return ()
+
+    # -- level ladder (adaptive compression, repro.control) -------------
+    # Ladder-capable codecs bind once at the top (capacity) level; a
+    # traced int32 ``level`` then masks each payload down to the
+    # effective rung while the wire buffers keep their static capacity
+    # shape under jit.  ``level_bytes`` reports what a real wire would
+    # carry per rung, for CommLog's effective-bytes accounting.
+    _ladder = None            # ascending effective levels; None -> static
+
+    def set_ladder(self, values) -> "Codec":
+        raise ValueError(
+            f"codec {self.name!r} has no compression ladder; adaptive "
+            "controllers need a ladder-capable uplink codec "
+            "(topk/topk_noef/quant/int8/int4)")
+
+    def level_bytes(self) -> Tuple[int, ...]:
+        """Effective wire bytes per ladder level (bind + set_ladder first)."""
+        raise ValueError(f"codec {self.name!r} has no compression ladder")
 
     # -- public API -----------------------------------------------------
     def init_state(self, template_tree=None):
@@ -75,9 +98,12 @@ class Codec:
             self.bind(template_tree)
         return [self._init_leaf_state(i) for i in range(len(self._shapes))]
 
-    def encode(self, tree, state=None, key=None):
+    def encode(self, tree, state=None, key=None, level=None):
         """tree -> (payload, new_state).  ``key`` drives stochastic
-        rounding / sketch seeds; None selects the deterministic variant."""
+        rounding / sketch seeds; None selects the deterministic variant.
+        ``level`` (a traced int32 scalar) selects the effective rung of a
+        bound ladder (``set_ladder``); None encodes at the static
+        configuration and traces exactly the pre-ladder program."""
         leaves = jax.tree_util.tree_leaves(tree)
         assert len(leaves) == len(self._shapes), "codec bound to other tree"
         if state is None:
@@ -87,8 +113,11 @@ class Codec:
         payload: List[Any] = []
         new_state: List[Any] = []
         for i, (x, s) in enumerate(zip(leaves, state)):
-            p, ns = self._encode_leaf(x.reshape(-1).astype(jnp.float32),
-                                      s, keys[i], i)
+            xf = x.reshape(-1).astype(jnp.float32)
+            if level is None:
+                p, ns = self._encode_leaf(xf, s, keys[i], i)
+            else:
+                p, ns = self._encode_leaf_level(xf, s, keys[i], i, level)
             payload.append(p)
             new_state.append(ns)
         return payload, new_state

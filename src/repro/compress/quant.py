@@ -22,7 +22,8 @@ class QuantCodec(Codec):
     uses_key = True
 
     def __init__(self, bits: int = 8, *, impl: str = "auto"):
-        assert bits in (4, 8), bits
+        if bits not in (4, 8):
+            raise ValueError(f"quant bits={bits!r} must be 4 or 8")
         self.bits = bits
         self.impl = impl
         self.name = f"int{bits}"
@@ -51,3 +52,50 @@ class QuantCodec(Codec):
         y = ops.quantize_unpack(payload["q"], payload["scale"][0],
                                 bits=self.bits, n=pn, impl=self.impl)
         return y[:self._n(i)]
+
+    # -- level ladder ---------------------------------------------------
+    def set_ladder(self, values):
+        vals = tuple(int(v) for v in values)
+        if not vals or list(vals) != sorted(set(vals)):
+            raise ValueError(f"ladder {values!r} must be strictly ascending")
+        if not all(v in (4, 8) for v in vals):
+            raise ValueError(f"ladder {values!r} needs bits in (4, 8)")
+        if vals[-1] != self.bits:
+            raise ValueError(f"ladder top {vals[-1]} must equal the codec's "
+                             f"capacity bits {self.bits}")
+        self._ladder = vals
+        return self
+
+    def _qmax_table(self):
+        return jnp.asarray([2 ** (b - 1) - 1 for b in self._ladder],
+                           jnp.float32)
+
+    def _encode_leaf_level(self, x, state, key, i, level):
+        n = x.shape[0]
+        pn = self._padded_n(i)
+        if pn != n:
+            x = jnp.pad(x, (0, pn - n))
+        # effective bits enter through the scale: codes span +-qmax_eff,
+        # which always fits inside the capacity packing
+        qmax = jnp.take(self._qmax_table(), level)
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+        if key is None:
+            noise = jnp.full((pn,), 0.5, jnp.float32)
+        else:
+            noise = jax.random.uniform(key, (pn,), jnp.float32)
+        packed = ops.quantize_pack(x, scale, noise, bits=self.bits,
+                                   impl=self.impl)
+        return {"q": packed, "scale": scale.reshape(1)}, state
+
+    def level_bytes(self):
+        if self._ladder is None:
+            raise ValueError("set_ladder first")
+        out = []
+        for b in self._ladder:
+            total = 0
+            for i in range(len(self._shapes)):
+                n = self._n(i)
+                total += (n + n % 2) // 2 if b == 4 else n
+                total += 4  # fp32 scale
+            out.append(total)
+        return tuple(out)

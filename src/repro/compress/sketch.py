@@ -34,8 +34,11 @@ class SketchCodec(Codec):
 
     def __init__(self, frac: float = 0.1, *, mode: str = "mask",
                  impl: str = "auto"):
-        assert 0.0 < frac <= 1.0, frac
-        assert mode in ("mask", "lowrank"), mode
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"sketch frac={frac!r} must be in (0, 1]")
+        if mode not in ("mask", "lowrank"):
+            raise ValueError(f"sketch mode={mode!r} must be 'mask' or "
+                             "'lowrank'")
         self.frac = frac
         self.mode = mode
         self.impl = impl

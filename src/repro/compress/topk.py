@@ -30,7 +30,8 @@ class TopKCodec(Codec):
 
     def __init__(self, frac: float = 0.05, *, error_feedback: bool = True,
                  impl: str = "auto"):
-        assert 0.0 < frac <= 1.0, frac
+        if not 0.0 < frac <= 1.0:
+            raise ValueError(f"topk frac={frac!r} must be in (0, 1]")
         self.frac = frac
         self.error_feedback = error_feedback
         self.stateful = error_feedback
@@ -57,3 +58,48 @@ class TopKCodec(Codec):
     def _decode_leaf(self, payload, i):
         dense = jnp.zeros((self._n(i),), jnp.float32)
         return dense.at[payload["idx"]].set(payload["val"])
+
+    # -- level ladder ---------------------------------------------------
+    def set_ladder(self, values):
+        vals = tuple(float(v) for v in values)
+        if not vals or list(vals) != sorted(set(vals)):
+            raise ValueError(f"ladder {values!r} must be strictly ascending")
+        if not all(0.0 < v <= 1.0 for v in vals):
+            raise ValueError(f"ladder {values!r} needs fracs in (0, 1]")
+        if vals[-1] != self.frac:
+            raise ValueError(f"ladder top {vals[-1]} must equal the codec's "
+                             f"capacity frac {self.frac}")
+        self._ladder = vals
+        return self
+
+    def _k_table(self, i):
+        return jnp.asarray([max(1, int(round(f * self._n(i))))
+                            for f in self._ladder], jnp.int32)
+
+    def _encode_leaf_level(self, x, state, key, i, level):
+        g = x + state if self.error_feedback else x
+        k_cap = self._k(i)
+        _, idx = jax.lax.top_k(jnp.abs(g), k_cap)
+        idx = idx.astype(jnp.int32)
+        # lax.top_k sorts by magnitude, so the first k_l slots ARE the
+        # exact top-k_l payload; the mask zeroes the rest of the
+        # capacity-shaped buffer (static wire shape under jit).
+        keep = (jnp.arange(k_cap, dtype=jnp.int32)
+                < jnp.take(self._k_table(i), level))
+        val = jnp.where(keep, jnp.take(g, idx), 0.0)
+        payload = {"idx": idx, "val": val.astype(jnp.float32)}
+        if self.error_feedback:
+            # masked-out slots scatter their own value back: the residual
+            # keeps exactly what the effective level did not transmit
+            new_state = g.at[idx].set(
+                jnp.where(keep, 0.0, jnp.take(g, idx)))
+        else:
+            new_state = state
+        return payload, new_state
+
+    def level_bytes(self):
+        if self._ladder is None:
+            raise ValueError("set_ladder first")
+        return tuple(sum(8 * max(1, int(round(f * self._n(i))))
+                         for i in range(len(self._shapes)))
+                     for f in self._ladder)

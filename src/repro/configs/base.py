@@ -36,6 +36,14 @@ ALGORITHM_NAMES = ("fedavg", "fedmmd", "fedfusion", "fedl2", "fedprox")
 # test_participation asserts sync with registered_policies()).
 PARTICIPATION_NAMES = ("full_sync", "deadline", "buffered_async")
 
+# Adaptive compression controllers from repro.control (same pattern;
+# test_control asserts sync with registered_controllers()).
+CONTROLLER_NAMES = ("static", "ef_ratio", "bytes_budget", "loss_trend")
+
+# Uplink codecs that support a level ladder (mirror of
+# repro.control.LADDER_CODECS; test_control asserts sync).
+_LADDER_CODECS = ("topk", "topk_noef", "quant", "int8", "int4")
+
 
 @dataclass(frozen=True)
 class ArchConfig:
@@ -100,19 +108,35 @@ class ArchConfig:
     # requires EP params + no vmap over clients, i.e. client_sequential)
 
     def __post_init__(self):
-        assert self.family in FAMILIES, self.family
-        assert self.fl_mode in FL_MODES, self.fl_mode
-        assert self.remat in ("none", "attn", "layer"), self.remat
-        assert self.attn_impl in ("jnp", "pallas"), self.attn_impl
-        assert self.moe_dispatch in ("gather", "a2a"), self.moe_dispatch
+        # plain ValueErrors, not asserts: asserts vanish under python -O,
+        # silently skipping config validation
+        if self.family not in FAMILIES:
+            raise ValueError(f"{self.name}: family {self.family!r} not in "
+                             f"{FAMILIES}")
+        if self.fl_mode not in FL_MODES:
+            raise ValueError(f"{self.name}: fl_mode {self.fl_mode!r} not in "
+                             f"{FL_MODES}")
+        if self.remat not in ("none", "attn", "layer"):
+            raise ValueError(f"{self.name}: remat {self.remat!r} must be "
+                             "'none', 'attn' or 'layer'")
+        if self.attn_impl not in ("jnp", "pallas"):
+            raise ValueError(f"{self.name}: attn_impl {self.attn_impl!r} "
+                             "must be 'jnp' or 'pallas'")
+        if self.moe_dispatch not in ("gather", "a2a"):
+            raise ValueError(f"{self.name}: moe_dispatch "
+                             f"{self.moe_dispatch!r} must be 'gather' or "
+                             "'a2a'")
         if self.head_dim == 0:
             object.__setattr__(self, "head_dim", self.d_model // max(self.n_heads, 1))
         if not self.block_pattern:
             object.__setattr__(self, "block_pattern", (ATTN_GLOBAL,) * self.n_layers)
-        assert len(self.block_pattern) == self.n_layers, (
-            f"{self.name}: pattern len {len(self.block_pattern)} != {self.n_layers}")
-        if self.n_experts:
-            assert 0 < self.top_k <= self.n_experts
+        if len(self.block_pattern) != self.n_layers:
+            raise ValueError(
+                f"{self.name}: pattern len {len(self.block_pattern)} != "
+                f"{self.n_layers}")
+        if self.n_experts and not 0 < self.top_k <= self.n_experts:
+            raise ValueError(f"{self.name}: top_k {self.top_k} must be in "
+                             f"(0, n_experts={self.n_experts}]")
         if self.moe_d_ff == 0:
             object.__setattr__(self, "moe_d_ff", self.d_ff)
         if self.lru_width == 0:
@@ -288,24 +312,82 @@ class FLConfig:
     # (0 -> clients_per_round // 2)
     staleness_alpha: float = 0.5      # buffered_async: (1+s)^(-alpha) weight
 
+    # --- adaptive compression controller (repro.control) ---
+    controller: str = "static"        # a CONTROLLER_NAMES / registry name
+    ladder: Tuple[float, ...] = ()    # ascending effective levels, top =
+    # the codec's static parameter; () -> a default 3-level topk ladder
+    # (f/4, f/2, f) or the quant ladder (4, 8)
+    ctrl_band: Tuple[float, float] = (0.5, 2.0)  # ef_ratio hold band
+    ctrl_budget_frac: float = 0.5     # bytes_budget: frac of capacity/round
+    ctrl_ema: float = 0.8             # controller signal EMA coefficient
+
     def __post_init__(self):
+        # plain ValueErrors, not asserts: asserts vanish under python -O,
+        # silently skipping config validation
         if self.algorithm not in ALGORITHM_NAMES:
             # runtime-registered plugin?  consult the registry lazily so
             # out-of-tree algorithms validate without editing this file
             from repro.fl.api import registered_algorithms
-            assert self.algorithm in registered_algorithms(), self.algorithm
-        assert self.fusion_op in ("conv", "multi", "single")
-        assert self.uplink_codec in CODEC_NAMES, self.uplink_codec
-        assert self.downlink_codec in CODEC_NAMES, self.downlink_codec
-        assert 0.0 < self.topk_frac <= 1.0, self.topk_frac
-        assert self.quant_bits in (4, 8), self.quant_bits
+            if self.algorithm not in registered_algorithms():
+                raise ValueError(
+                    f"unknown algorithm {self.algorithm!r}; registered: "
+                    f"{registered_algorithms()}")
+        if self.fusion_op not in ("conv", "multi", "single"):
+            raise ValueError(f"fusion_op {self.fusion_op!r} must be 'conv', "
+                             "'multi' or 'single'")
+        if self.uplink_codec not in CODEC_NAMES:
+            raise ValueError(f"unknown uplink_codec {self.uplink_codec!r}; "
+                             f"choose from {CODEC_NAMES}")
+        if self.downlink_codec not in CODEC_NAMES:
+            raise ValueError(
+                f"unknown downlink_codec {self.downlink_codec!r}; choose "
+                f"from {CODEC_NAMES}")
+        if not 0.0 < self.topk_frac <= 1.0:
+            raise ValueError(f"topk_frac={self.topk_frac!r} must be in "
+                             "(0, 1]")
+        if self.quant_bits not in (4, 8):
+            raise ValueError(f"quant_bits={self.quant_bits!r} must be 4 "
+                             "or 8")
         if self.participation not in PARTICIPATION_NAMES:
             from repro.fl.participation import registered_policies
-            assert self.participation in registered_policies(), \
-                self.participation
-        assert self.over_provision >= 1.0, self.over_provision
-        assert self.buffer_k >= 0, self.buffer_k
-        assert self.staleness_alpha >= 0.0, self.staleness_alpha
+            if self.participation not in registered_policies():
+                raise ValueError(
+                    f"unknown participation {self.participation!r}; "
+                    f"registered: {registered_policies()}")
+        if self.over_provision < 1.0:
+            raise ValueError(f"over_provision={self.over_provision!r} must "
+                             "be >= 1.0")
+        if self.buffer_k < 0:
+            raise ValueError(f"buffer_k={self.buffer_k!r} must be >= 0")
+        if self.staleness_alpha < 0.0:
+            raise ValueError(f"staleness_alpha={self.staleness_alpha!r} "
+                             "must be >= 0.0")
+        if self.controller not in CONTROLLER_NAMES:
+            from repro.control import registered_controllers
+            if self.controller not in registered_controllers():
+                raise ValueError(
+                    f"unknown controller {self.controller!r}; registered: "
+                    f"{registered_controllers()}")
+        if self.ladder and (list(self.ladder) != sorted(set(self.ladder))):
+            raise ValueError(f"ladder {self.ladder!r} must be strictly "
+                             "ascending")
+        if self.controller != "static" and \
+                self.uplink_codec not in _LADDER_CODECS:
+            raise ValueError(
+                f"controller {self.controller!r} needs a ladder-capable "
+                f"uplink codec {_LADDER_CODECS}, got "
+                f"{self.uplink_codec!r}")
+        if len(self.ctrl_band) != 2 or not \
+                0.0 <= self.ctrl_band[0] < self.ctrl_band[1]:
+            raise ValueError(f"ctrl_band {self.ctrl_band!r} must be "
+                             "(lo, hi) with 0 <= lo < hi")
+        if not 0.0 < self.ctrl_budget_frac <= 1.0:
+            raise ValueError(
+                f"ctrl_budget_frac={self.ctrl_budget_frac!r} must be in "
+                "(0, 1]")
+        if not 0.0 <= self.ctrl_ema < 1.0:
+            raise ValueError(f"ctrl_ema={self.ctrl_ema!r} must be in "
+                             "[0, 1)")
 
     @property
     def compressed(self) -> bool:
@@ -323,7 +405,9 @@ class InputShape:
     kind: str                       # train | prefill | decode
 
     def __post_init__(self):
-        assert self.kind in ("train", "prefill", "decode")
+        if self.kind not in ("train", "prefill", "decode"):
+            raise ValueError(f"{self.name}: kind {self.kind!r} must be "
+                             "'train', 'prefill' or 'decode'")
 
 
 INPUT_SHAPES = {

@@ -1,0 +1,15 @@
+"""repro.control: in-superstep adaptive compression controllers.
+
+The decision rule ROADMAP item 4 asked for: a plugin registry of
+controllers whose state rides the jitted superstep's scan carry, reads
+the round's on-device telemetry signals (``repro.obs``), and selects the
+next round's effective compression level on a discrete codec ladder —
+zero host round-trips, zero extra collectives.  See
+``repro.control.controller`` for the protocol and the built-ins
+(``static`` / ``ef_ratio`` / ``bytes_budget`` / ``loss_trend``).
+"""
+from repro.control.controller import (  # noqa: F401
+    LADDER_CODECS, BytesBudgetController, Controller, EFRatioController,
+    LadderSpec, LossTrendController, StaticController, ladder_kind,
+    ladder_values, make_controller, register_controller,
+    registered_controllers)

@@ -1,0 +1,305 @@
+"""In-superstep adaptive compression controllers (ROADMAP item 4).
+
+A :class:`Controller` is the decision rule that retunes the uplink codec
+round over round — *inside the jitted superstep*, at zero host
+round-trips.  The controller's state (a small dict of f32/int32 scalars)
+rides the superstep's ``lax.scan`` carry exactly like the EF table and
+the downlink mirror; its ``update`` hook runs replicated after the
+round's psum completes, reading the telemetry signals the round already
+computed (``tele/ef_delta_ratio``, ``local_loss``, ...) and emitting the
+NEXT round's effective compression level.
+
+Because wire shapes must stay static under jit, "retuning the codec"
+means selecting a level on a discrete **ladder** of pre-bound codec
+configurations: the codec is bound once at the ladder's top (capacity)
+level and the traced ``level`` scalar masks the payload down to the
+effective configuration (``repro.compress`` — top-k rank masking, quant
+effective-qmax scaling).  The payload buffers crossing the wire keep the
+capacity shape on device; what *would* cross a real network is the
+effective per-level byte count, which ``LadderSpec.bytes_up`` carries and
+``CommLog`` charges per round.
+
+Contracts:
+
+* ``controller="static"`` is the bitwise oracle — the engine
+  short-circuits it to the exact pre-controller code path, so a static
+  run is bit-identical to an engine without this subsystem.
+* ``update`` consumes only psum-completed round metrics, so it adds ZERO
+  collectives: the fused sharded round stays at exactly one psum with
+  any controller on (jaxpr-asserted in ``tests/test_control.py``).
+* Controller state checkpoints to ``ctrl.npz`` next to ``ef.npz``;
+  interrupt+resume is bitwise-equal to an uninterrupted run across
+  ``ef_store`` layouts.
+
+Registered like every other plugin axis (``make_codec`` /
+``make_algorithm`` / ``make_policy``): ``register_controller`` /
+``make_controller`` / ``registered_controllers``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+__all__ = ["LadderSpec", "Controller", "StaticController",
+           "EFRatioController", "BytesBudgetController",
+           "LossTrendController", "register_controller", "make_controller",
+           "registered_controllers", "ladder_kind", "ladder_values",
+           "LADDER_CODECS"]
+
+# uplink codecs that support a level ladder (repro.compress.set_ladder)
+LADDER_CODECS = ("topk", "topk_noef", "quant", "int8", "int4")
+
+# loss_trend: relative EMA-loss improvement below this reads as a plateau
+_TREND_THRESH = 0.01
+
+
+def ladder_kind(uplink_codec: str) -> str:
+    """The ladder's parameter axis for a codec name."""
+    if uplink_codec in ("topk", "topk_noef"):
+        return "topk_frac"
+    if uplink_codec in ("quant", "int8", "int4"):
+        return "quant_bits"
+    raise ValueError(
+        f"uplink codec {uplink_codec!r} has no compression ladder; "
+        f"adaptive controllers support {LADDER_CODECS}")
+
+
+def ladder_values(fl) -> Tuple[float, ...]:
+    """The run's ladder (ascending effective levels, top = capacity).
+
+    ``fl.ladder`` when given — validated against the uplink codec family
+    and required to top out at the configured static parameter (so level
+    ``n_levels-1`` IS the configured codec, and the wire capacity equals
+    the static run's).  Empty defaults to a 3-level top-k ladder
+    ``(f/4, f/2, f)`` or the quant ladder ``(4, 8)`` / ``(4,)``.
+    """
+    kind = ladder_kind(fl.uplink_codec)
+    # the capacity the codec actually binds at: int8/int4 fix their bits
+    # by name; "quant" reads fl.quant_bits
+    cap = (int(fl.uplink_codec[3:]) if fl.uplink_codec in ("int8", "int4")
+           else int(getattr(fl, "quant_bits", 8)))
+    vals = tuple(fl.ladder)
+    if not vals:
+        if kind == "topk_frac":
+            f = fl.topk_frac
+            return (f / 4.0, f / 2.0, f)
+        return (4, 8) if cap == 8 else (4,)
+    if list(vals) != sorted(vals) or len(set(vals)) != len(vals):
+        raise ValueError(f"ladder {vals} must be strictly ascending")
+    if kind == "topk_frac":
+        if not all(0.0 < v <= 1.0 for v in vals):
+            raise ValueError(f"topk ladder {vals} needs fracs in (0, 1]")
+        if vals[-1] != fl.topk_frac:
+            raise ValueError(
+                f"ladder top {vals[-1]} must equal topk_frac="
+                f"{fl.topk_frac} (the codec binds at capacity)")
+    else:
+        if not all(v in (4, 8) for v in vals):
+            raise ValueError(f"quant ladder {vals} needs bits in (4, 8)")
+        if int(vals[-1]) != cap:
+            raise ValueError(
+                f"ladder top {vals[-1]} must equal the uplink codec's "
+                f"capacity bits {cap} (the codec binds at capacity)")
+    return vals
+
+
+@dataclass(frozen=True)
+class LadderSpec:
+    """The discrete level ladder one run compresses along.
+
+    ``values`` ascends (cheapest level 0 -> capacity); ``bytes_up`` is
+    the effective per-client uplink payload bytes at each level (from
+    ``Codec.level_bytes()`` — what a real wire would carry, used by the
+    CommLog accounting and the bytes-budget controller).
+    """
+
+    kind: str                       # "topk_frac" | "quant_bits"
+    values: Tuple[float, ...]
+    bytes_up: Tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.values) != len(self.bytes_up):
+            raise ValueError("values / bytes_up length mismatch")
+        if not self.values:
+            raise ValueError("a ladder needs at least one level")
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.values)
+
+    def bytes_table(self) -> jnp.ndarray:
+        """[n_levels] f32 effective-bytes lookup (traced ``jnp.take``)."""
+        return jnp.asarray(self.bytes_up, jnp.float32)
+
+
+class Controller:
+    """Base controller: subclass, set ``name``/``requires_taps``,
+    implement ``init_state``/``update``.
+
+    ``update(state, metrics)`` is TRACED inside the round (post-psum,
+    replicated on every shard): ``metrics`` is the round's metric dict
+    (``local_loss`` plus the active ``tele/...`` telemetry signals — all
+    psum-completed scalars, identical on every shard), and the returned
+    state dict must keep the incoming structure/dtypes (it rides the scan
+    carry).  ``state["level"]`` is the contract key: the level the NEXT
+    round encodes at.  ``requires_taps`` names the telemetry taps whose
+    signals ``update`` reads; the engine forces them on.
+    """
+
+    name: str = "?"
+    requires_taps: Tuple[str, ...] = ()
+
+    def __init__(self):
+        self.spec: LadderSpec = None  # bound by setup()
+
+    def setup(self, spec: LadderSpec, fl) -> "Controller":
+        """Bind the run's ladder + knobs (called once by the engine)."""
+        self.spec = spec
+        self.band = tuple(getattr(fl, "ctrl_band", (0.5, 2.0)))
+        self.ema = float(getattr(fl, "ctrl_ema", 0.8))
+        self.budget_frac = float(getattr(fl, "ctrl_budget_frac", 0.5))
+        return self
+
+    def _top(self) -> jnp.ndarray:
+        return jnp.asarray(self.spec.n_levels - 1, jnp.int32)
+
+    def _clip(self, level) -> jnp.ndarray:
+        return jnp.clip(level, 0, self.spec.n_levels - 1).astype(jnp.int32)
+
+    def init_state(self) -> Dict[str, jnp.ndarray]:
+        return {"level": self._top()}
+
+    def update(self, state: Dict[str, jnp.ndarray],
+               metrics: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+        return state
+
+
+class StaticController(Controller):
+    """Today's behaviour: the configured codec every round.  The engine
+    short-circuits this name to the exact pre-controller code path (no
+    ladder, no controller state in the carry) — the bitwise oracle."""
+
+    name = "static"
+
+
+class EFRatioController(Controller):
+    """Track ``tele/ef_delta_ratio`` (EF residual mass / delta mass) in a
+    band: a rising ratio means the codec defers too much update round
+    over round -> loosen one level; a ratio below the band means there is
+    headroom -> tighten one level.  Starts at level 0 (cheapest) and
+    escalates only when the error-feedback memory says it must — the
+    CFedAvg-style schedule that beats the best static codec on
+    bytes-to-milestone (``benchmarks/fig7_compression.py --adaptive``)."""
+
+    name = "ef_ratio"
+    requires_taps = ("ef",)
+
+    def init_state(self):
+        return {"level": jnp.zeros((), jnp.int32),
+                "ema": jnp.zeros((), jnp.float32)}
+
+    def update(self, state, metrics):
+        ratio = jnp.asarray(metrics["tele/ef_delta_ratio"], jnp.float32)
+        a = jnp.float32(self.ema)
+        ema = a * state["ema"] + (1.0 - a) * ratio
+        lo, hi = self.band
+        step = ((ema > hi).astype(jnp.int32)
+                - (ema < lo).astype(jnp.int32))
+        return {"level": self._clip(state["level"] + step), "ema": ema}
+
+
+class BytesBudgetController(Controller):
+    """Feedback to a cumulative uplink-bytes target: spend at most
+    ``ctrl_budget_frac`` of the capacity level's bytes per round on
+    average.  Over budget -> tighten, under -> loosen; the running spend
+    rides the controller state, so the rule needs no host accounting."""
+
+    name = "bytes_budget"
+
+    def init_state(self):
+        return {"level": jnp.zeros((), jnp.int32),
+                "spent": jnp.zeros((), jnp.float32),
+                "rounds": jnp.zeros((), jnp.float32)}
+
+    def update(self, state, metrics):
+        spent = state["spent"] + jnp.take(self.spec.bytes_table(),
+                                          state["level"])
+        rounds = state["rounds"] + 1.0
+        budget = jnp.float32(self.budget_frac * self.spec.bytes_up[-1])
+        step = jnp.where(spent > budget * rounds, -1, 1).astype(jnp.int32)
+        return {"level": self._clip(state["level"] + step),
+                "spent": spent, "rounds": rounds}
+
+
+class LossTrendController(Controller):
+    """Loosen when the loss plateaus, stay cheap while it still falls:
+    an EMA of the round loss is compared against its previous value, and
+    a relative improvement under 1% reads as a plateau (the codec's
+    compression error may be the binding constraint -> one level up)."""
+
+    name = "loss_trend"
+
+    def init_state(self):
+        return {"level": jnp.zeros((), jnp.int32),
+                "ema": jnp.zeros((), jnp.float32),
+                "seen": jnp.zeros((), jnp.float32)}
+
+    def update(self, state, metrics):
+        loss = jnp.asarray(metrics["local_loss"], jnp.float32)
+        a = jnp.float32(self.ema)
+        first = state["seen"] < 0.5
+        ema = jnp.where(first, loss, a * state["ema"] + (1.0 - a) * loss)
+        rel = (state["ema"] - ema) / jnp.maximum(jnp.abs(ema), 1e-8)
+        step = jnp.where(rel < _TREND_THRESH, 1, -1).astype(jnp.int32)
+        lvl = self._clip(state["level"]
+                         + jnp.where(first, 0, step).astype(jnp.int32))
+        return {"level": lvl, "ema": ema, "seen": state["seen"] + 1.0}
+
+
+# --------------------------------------------------------------------------
+# Registry (mirrors repro.fl.participation / repro.fl.api / make_codec)
+# --------------------------------------------------------------------------
+
+Factory = Callable[[], Controller]
+
+_REGISTRY: Dict[str, Factory] = {}
+_BUILTINS_REGISTERED = False
+
+
+def register_controller(name: str, factory: Factory, *,
+                        overwrite: bool = False) -> None:
+    """Add a controller to the registry (plugins call this exactly like
+    ``register_policy`` / ``register_algorithm``)."""
+    _ensure_builtins()
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"controller {name!r} already registered "
+                         "(pass overwrite=True to replace)")
+    _REGISTRY[name] = factory
+
+
+def make_controller(name: str) -> Controller:
+    """Instantiate a registered controller by name (unbound — the engine
+    calls ``setup(spec, fl)`` with the run's ladder)."""
+    _ensure_builtins()
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown controller {name!r}; registered: "
+                         f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def registered_controllers() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def _ensure_builtins() -> None:
+    global _BUILTINS_REGISTERED
+    if _BUILTINS_REGISTERED:
+        return
+    _BUILTINS_REGISTERED = True
+    _REGISTRY["static"] = StaticController
+    _REGISTRY["ef_ratio"] = EFRatioController
+    _REGISTRY["bytes_budget"] = BytesBudgetController
+    _REGISTRY["loss_trend"] = LossTrendController

@@ -401,7 +401,8 @@ def make_round_parts(bundle: ModelBundle, fl: FLConfig, mode: str, *,
 def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
                              uplink, downlink, *, impl="auto",
                              shard: Optional[ClientSharding] = None,
-                             telemetry=None, participation=False):
+                             telemetry=None, participation=False,
+                             controller=None):
     """A federated round with the wire path routed through codecs.
 
     Returns round_fn(global_state, client_batches, n_examples, lr,
@@ -440,12 +441,26 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
     and the aggregate arrives via psum, so every shard applies the exact
     same update), and the per-client rng keys are the positional slice of
     the reference loop's full split.
+
+    Controller contract (``repro.control``): with ``controller`` set the
+    round fn takes a trailing ``ctrl_state`` dict (scalar leaves riding
+    the superstep scan carry) and returns ``new_ctrl`` as a 5th output.
+    The incoming ``ctrl_state["level"]`` selects the rung every client of
+    THIS round encodes at; ``controller.update`` then runs replicated on
+    the psum-completed round metrics (traced scalars, identical on every
+    shard) to pick the next round's level — zero host round-trips, zero
+    extra collectives.  With ``controller=None`` every traced code path
+    is byte-identical to before this axis existed.
     """
+    if controller is not None and telemetry is None:
+        raise ValueError("a controller needs telemetry for its decision "
+                         "signals (the engine forces the required taps on)")
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
     run_clients = _make_compressed_clients(bundle, fl, mode, uplink,
                                            downlink, impl=impl, shard=shard,
-                                           telemetry=telemetry)
+                                           telemetry=telemetry,
+                                           controller=controller)
 
     def _finish(global_state, summed, stacked_extras, weights):
         # apply the aggregate update to the FULL-PRECISION server model;
@@ -462,6 +477,52 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
             new_state.update(algo.finalize_extra_sums(
                 fl, global_state, {k: summed[k] for k in extra_keys}))
         return new_state
+
+    if controller is not None:
+        if participation:
+            def round_fn(global_state, client_batches, n_examples, lr,
+                         ef_state, down_mirror, key, pmask, pstale,
+                         ctrl_state):
+                weights = normalize_weights(n_examples, shard)
+                wsums, stacked_extras, new_ef, losses, bcast, tele = \
+                    run_clients(global_state, client_batches, weights, lr,
+                                ef_state, down_mirror, key, n_examples,
+                                pmask, pstale, level=ctrl_state["level"])
+                lsums = masked_loss_sums(losses, pmask)
+                if mode == "client_parallel":
+                    summed = psum_tree(
+                        {"delta": wsums["delta"], "tele": tele, **lsums},
+                        shard)
+                else:
+                    summed = psum_tree({**wsums, "tele": tele, **lsums},
+                                       shard)
+                new_state = _finish(global_state, summed, stacked_extras,
+                                    weights)
+                metrics = {"local_loss": finish_masked_loss(summed)}
+                metrics.update(telemetry.finish(summed["tele"]))
+                new_ctrl = controller.update(ctrl_state, metrics)
+                return new_state, metrics, new_ef, bcast, new_ctrl
+        else:
+            def round_fn(global_state, client_batches, n_examples, lr,
+                         ef_state, down_mirror, key, ctrl_state):
+                weights = normalize_weights(n_examples, shard)
+                wsums, stacked_extras, new_ef, losses, bcast, tele = \
+                    run_clients(global_state, client_batches, weights, lr,
+                                ef_state, down_mirror, key, n_examples,
+                                level=ctrl_state["level"])
+                if mode == "client_parallel":
+                    summed = psum_tree(
+                        {"delta": wsums["delta"], "tele": tele}, shard)
+                else:
+                    summed = psum_tree({**wsums, "tele": tele}, shard)
+                new_state = _finish(global_state, summed, stacked_extras,
+                                    weights)
+                metrics = {"local_loss": mean_over_clients(losses, shard)}
+                metrics.update(telemetry.finish(summed["tele"]))
+                new_ctrl = controller.update(ctrl_state, metrics)
+                return new_state, metrics, new_ef, bcast, new_ctrl
+
+        return round_fn
 
     if participation:
         def round_fn(global_state, client_batches, n_examples, lr,
@@ -510,7 +571,7 @@ def make_compressed_round_fn(bundle: ModelBundle, fl: FLConfig, mode: str,
 def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
                              uplink, downlink, *, impl="auto",
                              shard: Optional[ClientSharding] = None,
-                             telemetry=None):
+                             telemetry=None, controller=None):
     """Shared client-side computation of one codec-routed round.
 
     Returns ``run_clients(global_state, client_batches, weights, lr,
@@ -529,6 +590,13 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
     the client's *incoming* residual bit for bit, exactly what the
     reference semantics of "this client never uplinked" require.  Both
     arrays also feed the telemetry tap contexts.
+
+    ``level`` (a traced int32 scalar, ``None`` when no controller is on)
+    selects the uplink codec's effective ladder rung for EVERY client of
+    this round — it is a closure capture, not a vmapped operand, so all
+    clients encode at the same level and the codec's capacity-shaped
+    payload keeps the wire shapes static.  With ``level=None`` the encode
+    traces exactly the pre-ladder program.
     """
     assert mode in ("client_parallel", "client_sequential"), mode
     algo = _algorithm(fl)
@@ -537,7 +605,7 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
 
     def run_clients(global_state, client_batches, weights, lr, ef_state,
                     down_mirror, key, n_examples=None, pmask=None,
-                    pstale=None):
+                    pstale=None, level=None):
         n_clients = weights.shape[0]
         kd, ku = jax.random.split(key)
         down_update = jax.tree.map(lambda m, w: m - w,
@@ -549,13 +617,15 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
                              down_mirror, downlink.decode(down_payload))
         gx = algo.extra_from_state(global_state)
         client_keys = _local_client_keys(ku, n_clients, shard)
+        eff_bytes = (None if level is None or controller is None
+                     else jnp.take(controller.spec.bytes_table(), level))
 
         def client_step(batches, ef, ck, nex=None, m=None, st=None):
             trainable, loss = trainer(bcast, gx, batches, lr)
             delta = jax.tree.map(lambda a, b: a - b, trainable["model"],
                                  bcast)
             payload, new_ef = uplink.encode(
-                delta, ef, ck if uplink.uses_key else None)
+                delta, ef, ck if uplink.uses_key else None, level=level)
             decoded = uplink.decode(payload)
             if m is not None:
                 # dropped / late client: its payload never uplinked, so
@@ -569,7 +639,8 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
                 out["tele"] = telemetry.client_sums(ClientTapCtx(
                     n_examples=nex, loss=loss, global_model=bcast,
                     delta=delta, decoded=decoded, ef=new_ef,
-                    pmask=m, staleness=st))
+                    pmask=m, staleness=st, level=level,
+                    eff_bytes=eff_bytes))
             return out
 
         if mode == "client_parallel":
@@ -659,7 +730,7 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
 def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
                                 mode: str, uplink, downlink, *, impl="auto",
                                 shard: ClientSharding, telemetry=None,
-                                participation=False):
+                                participation=False, controller=None):
     """Deferred-psum split of :func:`make_compressed_round_fn`.
 
     Returns ``(local_fn, finish_fn)`` for the fused-collective superstep:
@@ -676,13 +747,66 @@ def make_compressed_round_parts(bundle: ModelBundle, fl: FLConfig,
     the psum-completed aggregate delta to the full-precision server model
     and closes extras through ``finalize_extra_sums`` (see
     :func:`make_round_parts` for why that stays bitwise).
+
+    With ``controller`` set (``repro.control``): ``local_fn`` takes a
+    trailing ``ctrl_state`` whose ``level`` selects the round's encode
+    rung (pre-psum, shard-local), and ``finish_fn(global_state, summed,
+    ctrl_state) -> (new_state, metrics, new_ctrl)`` runs the controller's
+    decision rule on the psum-completed metrics (post-psum, replicated).
+    The split adds NOTHING to the fused psum beyond the controller tap's
+    two f32 lanes — the round stays exactly one collective.
     """
+    if controller is not None and telemetry is None:
+        raise ValueError("a controller needs telemetry for its decision "
+                         "signals (the engine forces the required taps on)")
     algo = _algorithm(fl)
     extra_keys = algo.extra_state
     _check_extra_keys(extra_keys)
     run_clients = _make_compressed_clients(bundle, fl, mode, uplink,
                                            downlink, impl=impl, shard=shard,
-                                           telemetry=telemetry)
+                                           telemetry=telemetry,
+                                           controller=controller)
+
+    if controller is not None:
+        if participation:
+            def local_fn(global_state, client_batches, total, n_examples,
+                         lr, ef_state, down_mirror, key, pmask, pstale,
+                         ctrl_state):
+                weights = jnp.asarray(n_examples, jnp.float32) / total
+                wsums, _, new_ef, losses, bcast, tele = run_clients(
+                    global_state, client_batches, weights, lr, ef_state,
+                    down_mirror, key, n_examples, pmask, pstale,
+                    level=ctrl_state["level"])
+                contribs = {**wsums, **masked_loss_sums(losses, pmask),
+                            "tele": tele}
+                return contribs, {"new_ef": new_ef, "bcast": bcast}
+        else:
+            def local_fn(global_state, client_batches, total, n_examples,
+                         lr, ef_state, down_mirror, key, ctrl_state):
+                weights = jnp.asarray(n_examples, jnp.float32) / total
+                wsums, _, new_ef, losses, bcast, tele = run_clients(
+                    global_state, client_batches, weights, lr, ef_state,
+                    down_mirror, key, n_examples,
+                    level=ctrl_state["level"])
+                contribs = {**wsums, "loss": jnp.mean(losses),
+                            "tele": tele}
+                return contribs, {"new_ef": new_ef, "bcast": bcast}
+
+        def finish_fn(global_state, summed, ctrl_state):
+            new_model = jax.tree.map(lambda g, d: g + d.astype(g.dtype),
+                                     global_state["model"], summed["delta"])
+            new_state: Dict[str, Any] = {"model": new_model}
+            new_state.update(algo.finalize_extra_sums(
+                fl, global_state, {k: summed[k] for k in extra_keys}))
+            if participation:
+                metrics = {"local_loss": finish_masked_loss(summed)}
+            else:
+                metrics = {"local_loss": summed["loss"] / shard.n_shards}
+            metrics.update(telemetry.finish(summed["tele"]))
+            new_ctrl = controller.update(ctrl_state, metrics)
+            return new_state, metrics, new_ctrl
+
+        return local_fn, finish_fn
 
     if participation:
         def local_fn(global_state, client_batches, total, n_examples, lr,

@@ -76,6 +76,8 @@ import numpy as np
 
 from repro.compress import make_codec
 from repro.configs.base import FLConfig
+from repro.control import (LadderSpec, ladder_kind, ladder_values,
+                           make_controller)
 from repro.core.rounds import init_global_state
 from repro.engine.efstore import EFPager, HostEFStore, plan_chunk_static
 from repro.engine.evaljit import make_eval_fn, pad_eval_batch
@@ -327,6 +329,12 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
 
     # --- wire codecs: EF store (dense device table | cohort-paged) + mirror
     compressed = fl.compressed
+    # adaptive compression controller (repro.control): "static" is the
+    # bitwise oracle — controller stays None, no ladder is bound, no ctrl
+    # state enters any carry, and every traced program is byte-identical
+    # to the pre-controller engine.
+    ctrl_active = compressed and fl.controller != "static"
+    controller = ctrl_spec = ctrl_state = None
     wire_up = wire_down = None
     ef_all = down_mirror = round_key = None
     uplink = downlink = None
@@ -342,6 +350,16 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         downlink.bind(global_state["model"])
         wire_up = uplink.wire_bytes()
         wire_down = downlink.wire_bytes()
+        if ctrl_active:
+            # bind the ladder at the codec's capacity (= the configured
+            # static level, enforced by ladder_values); the traced level
+            # scalar masks the payload down to the effective rung
+            ladder = ladder_values(fl)
+            uplink.set_ladder(ladder)
+            ctrl_spec = LadderSpec(kind=ladder_kind(fl.uplink_codec),
+                                   values=ladder,
+                                   bytes_up=uplink.level_bytes())
+            controller = make_controller(fl.controller).setup(ctrl_spec, fl)
         ef_template = uplink.init_state()
         store = HostEFStore(ef_template)
         if store.n_leaves == 0:
@@ -403,18 +421,49 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
     # tele=None keeps every traced code path byte-identical to the
     # pre-observability engine (the bitwise contract tests/test_obs.py pins)
     tele = None
-    if telemetry:
+    if telemetry or ctrl_active:
         if isinstance(telemetry, Telemetry):
             tele = telemetry
         else:
+            # a controller's decision signals ride telemetry: force its
+            # required taps (plus the schedule-exporting "controller" tap)
+            # into the selection even when the user left telemetry off
+            tap_names = (None if telemetry is True
+                         else tuple(telemetry) if telemetry else ())
+            if ctrl_active and tap_names is not None:
+                tap_names = tuple(dict.fromkeys(
+                    tap_names + tuple(controller.requires_taps)
+                    + ("controller",)))
             tele = make_telemetry(
                 "compressed" if compressed else "plain",
                 n_clients=c_round,
                 n_shards=shard.n_shards if shard is not None else 1,
                 available=frozenset(
                     (("ef",) if compressed and uplink.stateful else ())
-                    + (("pmask", "staleness") if part_active else ())),
-                taps=None if telemetry is True else tuple(telemetry))
+                    + (("pmask", "staleness") if part_active else ())
+                    + (("level", "eff_bytes") if ctrl_active else ())),
+                taps=tap_names)
+        if ctrl_active:
+            have = {t.name for t in tele.taps} if tele is not None else set()
+            missing = [n for n in controller.requires_taps
+                       if n not in have]
+            if missing:
+                raise ValueError(
+                    f"controller {fl.controller!r} needs telemetry taps "
+                    f"{missing}, unavailable for uplink codec "
+                    f"{fl.uplink_codec!r} (e.g. the 'ef' tap needs a "
+                    "stateful error-feedback uplink)")
+
+    # controller state: staged replicated scalars; ctrl.npz sits next to
+    # ef.npz so interrupt+resume replays the schedule bitwise
+    ctrl_path = (os.path.join(checkpoint_dir, "ctrl.npz")
+                 if checkpoint_dir else None)
+    if ctrl_active:
+        ctrl_host = jax.tree.map(np.asarray, controller.init_state())
+        if start_round and ctrl_path and os.path.exists(ctrl_path):
+            ctrl_host = load_tree(ctrl_path, ctrl_host)
+        ctrl_state = jax.tree.map(lambda x: _stage(jnp.asarray(x)),
+                                  ctrl_host)
 
     def save_ef():
         """ef.npz keeps the compact [n_clients, ...] layout, whatever the
@@ -428,6 +477,8 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             ef_src, n_shards=shard.n_shards if shard is not None else 1,
             n_clients=data.n_clients)
         save_tree(ef_path, (ef_disk, down_mirror), runlog=rl)
+        if ctrl_active:
+            save_tree(ctrl_path, ctrl_state, runlog=rl)
 
     # --- fixed-shape evaluation -------------------------------------------
     # on a mesh the eval batch splits positionally over the client shards
@@ -541,12 +592,12 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                     downlink=downlink, eval_fn=in_scan, impl=impl,
                     fused_collective=fused_collective,
                     eval_sharded=eval_shard is not None, telemetry=tele,
-                    participation=part_active)
+                    participation=part_active, controller=controller)
             elif compressed:
                 fn = make_compressed_superstep(
                     bundle, fl, mode, n_rounds, uplink, downlink,
                     eval_fn=in_scan, impl=impl, telemetry=tele,
-                    participation=part_active)
+                    participation=part_active, controller=controller)
             else:
                 fn = make_plain_superstep(bundle, fl, mode, n_rounds,
                                           eval_fn=in_scan, impl=impl,
@@ -563,6 +614,8 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                 donate = (0, 1, 2, 5) + (
                     ((3, 4, 6, 7) + ((9, 10) if part_active else ()))
                     if host_staged else ())
+                if ctrl_active:   # device-native scalars, always donatable
+                    donate = donate + ((11,) if part_active else (9,))
             else:
                 donate = (0, 3) + (
                     ((1, 2) + ((4, 5) if part_active else ()))
@@ -572,7 +625,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
 
     test_args = (test_batch, test_mask) if eval_in_scan else ()
 
-    def run_step(step, staged, state=None, ef=None, mirror=None):
+    def run_step(step, staged, state=None, ef=None, mirror=None, ctrl=None):
         """Dispatch one superstep on (state, staged); None -> throwaway
         zero trees (calibration — the real carries must not be donated)."""
         state = jax.tree.map(jnp.zeros_like, global_state) \
@@ -583,11 +636,16 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             if ef is None:   # device-native zeros: donation-safe anywhere
                 ef = jax.tree.map(jnp.zeros_like,
                                   staged["ef_page"] if ef_paged else ef_all)
+            ctrl_args = ()
+            if ctrl_active:
+                ctrl_args = (jax.tree.map(jnp.zeros_like, ctrl_state)
+                             if ctrl is None else ctrl,)
             mirror = jax.tree.map(jnp.zeros_like, down_mirror) \
                 if mirror is None else mirror
             return step(state, ef, mirror, staged["batches"],
                         staged["sizes"], staged["lrs"], staged["cids"],
-                        staged["ridx"], round_key, *part_args, *test_args)
+                        staged["ridx"], round_key, *part_args, *ctrl_args,
+                        *test_args)
         return step(state, staged["batches"], staged["sizes"],
                     staged["lrs"], *part_args, *test_args)
 
@@ -611,11 +669,27 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         lambda r0, r1: build_chunk(r0, r1, staging_pool=pool),
         schedule, enabled=prefetch, runlog=rl)
 
+    ctrl_schedule = None
+    if ctrl_active:
+        # per-round CommLog accounting: the level metric indexes these
+        # host-side tables, so effective bytes replace the capacity
+        # wire_up in every round record (schema v2, repro.fl.comm)
+        eff_key = ("eff_topk_frac" if ctrl_spec.kind == "topk_frac"
+                   else "eff_quant_bits")
+        ctrl_schedule = {
+            "bytes": [float(b) for b in ctrl_spec.bytes_up],
+            "effective": [
+                {"level": i,
+                 eff_key: (float(v) if ctrl_spec.kind == "topk_frac"
+                           else int(v))}
+                for i, v in enumerate(ctrl_spec.values)],
+        }
     pump = MetricsPump(comm, c_round, wire_up=wire_up,
                        wire_down=wire_down,
                        n_down=(data.n_clients
                                if fl.downlink_codec != "identity" else None),
-                       verbose=verbose, runlog=rl)
+                       verbose=verbose, runlog=rl,
+                       schedule=ctrl_schedule)
 
     def step_annotation(i):
         """jax.profiler chunk marker; a no-op without --profile."""
@@ -628,6 +702,7 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
              client_shards=shard.n_shards if shard is not None else 1,
              telemetry=tele is not None,
              participation=policy.name if part_active else None,
+             controller=fl.controller if ctrl_active else None,
              ef_store=("host" if ef_paged else "device") if compressed
                       else None)
     if profile_dir:
@@ -650,14 +725,24 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
                             # the store off-thread
                             ef_page = pager.patch(staged["ef_plan"],
                                                   staged["ef_page"])
-                            global_state, mstack, ef_out, down_mirror = \
-                                run_step(step, staged, global_state,
-                                         ef_page, down_mirror)
+                            out = run_step(step, staged, global_state,
+                                           ef_page, down_mirror, ctrl_state)
+                            if ctrl_active:
+                                (global_state, mstack, ef_out, down_mirror,
+                                 ctrl_state) = out
+                            else:
+                                (global_state, mstack, ef_out,
+                                 down_mirror) = out
                             pager.complete(staged["ef_plan"], ef_out)
                         elif compressed:
-                            global_state, mstack, ef_all, down_mirror = \
-                                run_step(step, staged, global_state, ef_all,
-                                         down_mirror)
+                            out = run_step(step, staged, global_state,
+                                           ef_all, down_mirror, ctrl_state)
+                            if ctrl_active:
+                                (global_state, mstack, ef_all, down_mirror,
+                                 ctrl_state) = out
+                            else:
+                                (global_state, mstack, ef_all,
+                                 down_mirror) = out
                         else:
                             global_state, mstack = run_step(step, staged,
                                                             global_state)
@@ -733,6 +818,8 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
         "participation": policy.name if part_active else None,
         "round_cohort": c_round,
         "halted_at": halted_at,
+        "controller": fl.controller if ctrl_active else None,
+        "ladder": list(ctrl_spec.values) if ctrl_active else None,
         "ef_store": ("host" if ef_paged else "device") if compressed
                     else None,
     }

@@ -55,11 +55,16 @@ class MetricsPump:
                  wire_down: Optional[int] = None,
                  n_down: Optional[int] = None,
                  verbose: bool = False, max_pending: int = 4,
-                 runlog=None):
+                 runlog=None, schedule: Optional[dict] = None):
         self._comm = comm
         self._n_clients = n_clients
         self._wire = dict(wire_up=wire_up, wire_down=wire_down,
                           n_down=n_down)
+        # adaptive-compression ladder (repro.control): per-level effective
+        # uplink bytes + effective codec fields, indexed by the round's
+        # tele/level metric so CommLog charges what a real wire would
+        # carry instead of the capacity wire_up
+        self._schedule = schedule
         self._verbose = verbose
         self._max_pending = max_pending
         self._runlog = as_runlog(runlog)
@@ -174,10 +179,17 @@ class MetricsPump:
                                      round=self._comm.rounds + 1, keys=bad)
                 if self.nonfinite_round is None:
                     self.nonfinite_round = self._comm.rounds + 1
+            wire, effective = self._wire, None
+            if self._schedule is not None and "tele/level" in metrics:
+                lvl = int(round(metrics["tele/level"]))
+                lvl = max(0, min(lvl, len(self._schedule["bytes"]) - 1))
+                wire = dict(self._wire,
+                            wire_up=int(round(self._schedule["bytes"][lvl])))
+                effective = self._schedule["effective"][lvl]
             self._comm.log_round(None, self._n_clients, metrics,
                                  n_up=(None if n_up is None
                                        else int(n_up[k])),
-                                 **self._wire)
+                                 effective=effective, **wire)
             if self._verbose:
                 print(f"round {self._comm.rounds:4d} " +
                       " ".join(f"{k2}={self._fmt(v2)}"

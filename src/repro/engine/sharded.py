@@ -88,7 +88,7 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
                            uplink=None, downlink=None, eval_fn=None,
                            impl="auto", fused_collective=True,
                            eval_sharded=True, telemetry=None,
-                           participation=False):
+                           participation=False, controller=None):
     """``shard_map``-wrapped superstep on ``mesh`` (client axes size > 1).
 
     Same call signature as the unsharded supersteps; the plain variant is
@@ -127,11 +127,15 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
                                           impl=impl, shard=shard,
                                           fused=fused_collective,
                                           telemetry=telemetry,
-                                          participation=participation)
+                                          participation=participation,
+                                          controller=controller)
+        # controller state: replicated scalars in, replicated scalars out
+        # (the decision is a function of psum'd taps, identical per shard)
+        ctrl_specs = (P(),) if controller is not None else ()
         in_specs = (P(), P(ax), P(), P(None, ax), P(None, ax),
-                    P(), P(), P(), P()) + part_specs \
+                    P(), P(), P(), P()) + part_specs + ctrl_specs \
             + (test_spec,) * n_test
-        out_specs = (P(), P(), P(ax), P())
+        out_specs = (P(), P(), P(ax), P()) + ctrl_specs
 
     return _unchecked_shard_map(inner, mesh, in_specs, out_specs)
 

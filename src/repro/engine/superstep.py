@@ -373,7 +373,7 @@ def _slice_positional(full_tree, shard, c_loc):
 def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
                               *, eval_fn=None, impl="auto", shard=None,
                               fused=False, telemetry=None,
-                              participation=False):
+                              participation=False, controller=None):
     """Compressed (codec-routed) K-round superstep.
 
     Returns ``superstep(global_state, ef_all, mirror, batches, sizes, lrs,
@@ -397,17 +397,27 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
     A masked client's EF row comes back equal to its incoming value (the
     round fn rolls the update back), so the unchanged scatter path writes
     the residual forward untouched.
+
+    ``controller`` (``repro.control``) appends a ``ctrl_state`` argument
+    after ``pmask``/``pstale`` (before the test args) and a 5th output:
+    the controller's scalar state rides the scan carry exactly like the
+    EF table and the mirror, so the level schedule advances across the
+    whole chunk — and across chunks, since the engine threads the
+    returned state into the next superstep call — without a single host
+    round-trip.  With ``controller=None`` every traced code path is
+    byte-identical to before this axis existed.
     """
     if fused:
         assert shard is not None, "fused collectives require a shard"
         return _make_fused_compressed_superstep(
             bundle, fl, mode, n_rounds, uplink, downlink, eval_fn=eval_fn,
             impl=impl, shard=shard, telemetry=telemetry,
-            participation=participation)
+            participation=participation, controller=controller)
     round_fn = make_compressed_round_fn(bundle, fl, mode, uplink, downlink,
                                         impl=impl, shard=shard,
                                         telemetry=telemetry,
-                                        participation=participation)
+                                        participation=participation,
+                                        controller=controller)
 
     def gather_rows(ef_all, cids, c_loc):
         if shard is None:
@@ -443,6 +453,80 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
         if eval_fn is not None:
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, ef_all, mirror, metrics
+
+    if controller is not None:
+        def one_round_ctrl(state, ef_all, mirror, ctrl, b, n, lr, cids, r,
+                           round_key, test, pm=None, ps=None):
+            ef_round = gather_rows(ef_all, cids, n.shape[0])
+            key_r = jax.random.fold_in(round_key, r)
+            if participation:
+                state, metrics, new_ef, mirror, ctrl = round_fn(
+                    state, b, n, lr, ef_round, mirror, key_r, pm, ps, ctrl)
+            else:
+                state, metrics, new_ef, mirror, ctrl = round_fn(
+                    state, b, n, lr, ef_round, mirror, key_r, ctrl)
+            ef_all = scatter_rows(ef_all, cids, new_ef)
+            if eval_fn is not None:
+                metrics = {**metrics, **eval_fn(state, test[0], test[1])}
+            return state, ef_all, mirror, ctrl, metrics
+
+        if participation:
+            if n_rounds == 1:
+                def superstep(global_state, ef_all, mirror, batches, sizes,
+                              lrs, cids, round_idx, round_key, pmask, pstale,
+                              ctrl_state, *test):
+                    b0 = jax.tree.map(lambda a: a[0], batches)
+                    state, ef_all, mirror, ctrl, m = one_round_ctrl(
+                        global_state, ef_all, mirror, ctrl_state, b0,
+                        sizes[0], lrs[0], cids[0], round_idx[0], round_key,
+                        test, pmask[0], pstale[0])
+                    return state, _stack1(m), ef_all, mirror, ctrl
+                return superstep
+
+            def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                          cids, round_idx, round_key, pmask, pstale,
+                          ctrl_state, *test):
+                def body(carry, xs):
+                    state, ef_all, mirror, ctrl = carry
+                    b, n, lr, cid, r, pm, ps = xs
+                    state, ef_all, mirror, ctrl, m = one_round_ctrl(
+                        state, ef_all, mirror, ctrl, b, n, lr, cid, r,
+                        round_key, test, pm, ps)
+                    return (state, ef_all, mirror, ctrl), m
+
+                (state, ef_all, mirror, ctrl), mstack = jax.lax.scan(
+                    body, (global_state, ef_all, mirror, ctrl_state),
+                    (batches, sizes, lrs, cids, round_idx, pmask, pstale))
+                return state, mstack, ef_all, mirror, ctrl
+
+            return superstep
+
+        if n_rounds == 1:
+            def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                          cids, round_idx, round_key, ctrl_state, *test):
+                b0 = jax.tree.map(lambda a: a[0], batches)
+                state, ef_all, mirror, ctrl, m = one_round_ctrl(
+                    global_state, ef_all, mirror, ctrl_state, b0, sizes[0],
+                    lrs[0], cids[0], round_idx[0], round_key, test)
+                return state, _stack1(m), ef_all, mirror, ctrl
+            return superstep
+
+        def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                      cids, round_idx, round_key, ctrl_state, *test):
+            def body(carry, xs):
+                state, ef_all, mirror, ctrl = carry
+                b, n, lr, cid, r = xs
+                state, ef_all, mirror, ctrl, m = one_round_ctrl(
+                    state, ef_all, mirror, ctrl, b, n, lr, cid, r,
+                    round_key, test)
+                return (state, ef_all, mirror, ctrl), m
+
+            (state, ef_all, mirror, ctrl), mstack = jax.lax.scan(
+                body, (global_state, ef_all, mirror, ctrl_state),
+                (batches, sizes, lrs, cids, round_idx))
+            return state, mstack, ef_all, mirror, ctrl
+
+        return superstep
 
     if participation:
         if n_rounds == 1:
@@ -502,7 +586,8 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
 
 def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
                                      downlink, *, eval_fn, impl, shard,
-                                     telemetry=None, participation=False):
+                                     telemetry=None, participation=False,
+                                     controller=None):
     """One-psum-per-round compressed superstep (shard_map body).
 
     Pipelining layout: a per-chunk prologue psum seeds round 0's gathered
@@ -521,7 +606,8 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
     """
     local_fn, finish_fn = make_compressed_round_parts(
         bundle, fl, mode, uplink, downlink, impl=impl, shard=shard,
-        telemetry=telemetry, participation=participation)
+        telemetry=telemetry, participation=participation,
+        controller=controller)
 
     def one_round(state, ef_all, mirror, ef_rows, total, b, n, lr, cid,
                   cid_next, n_next, r, round_key, test, pm=None, ps=None):
@@ -553,6 +639,42 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
             metrics = {**metrics, **eval_fn(state, test[0], test[1])}
         return state, ef_all, aux["bcast"], ef_next, summed["total"], metrics
 
+    def one_round_ctrl(state, ef_all, mirror, ef_rows, total, ctrl, b, n,
+                       lr, cid, cid_next, n_next, r, round_key, test,
+                       pm=None, ps=None):
+        # Identical psum layout to one_round: the controller reads the
+        # round's summed tap metrics AFTER the single collective and its
+        # state transition is pure replicated scalar math, so adaptivity
+        # adds zero collectives to the round.
+        key_r = jax.random.fold_in(round_key, r)
+        if participation:
+            contribs, aux = local_fn(state, b, total, n, lr, ef_rows,
+                                     mirror, key_r, pm, ps, ctrl)
+        else:
+            contribs, aux = local_fn(state, b, total, n, lr, ef_rows,
+                                     mirror, key_r, ctrl)
+        summed = fused_psum({
+            "round": contribs,
+            "scat": jax.tree.map(
+                lambda rows: _ef_place_positional(rows, shard),
+                aux["new_ef"]),
+            "gath": jax.tree.map(
+                lambda t, rows: _ef_gather_next_contrib(
+                    t, cid, cid_next, rows, shard, impl=impl),
+                ef_all, aux["new_ef"]),
+            "total": _size_total(n_next),
+        }, shard)
+        state, metrics, ctrl = finish_fn(state, summed["round"], ctrl)
+        ef_all = jax.tree.map(
+            lambda t, full: _ef_scatter_local(t, cid, full, shard,
+                                              impl=impl),
+            ef_all, summed["scat"])
+        ef_next = _slice_positional(summed["gath"], shard, n.shape[0])
+        if eval_fn is not None:
+            metrics = {**metrics, **eval_fn(state, test[0], test[1])}
+        return (state, ef_all, aux["bcast"], ef_next, summed["total"],
+                ctrl, metrics)
+
     def _prologue(ef_all, cids, sizes):
         # round 0's EF rows + weight total in one psum
         seed = fused_psum({
@@ -563,6 +685,76 @@ def _make_fused_compressed_superstep(bundle, fl, mode, n_rounds, uplink,
         }, shard)
         return _slice_positional(seed["gather"], shard,
                                  sizes.shape[1]), seed["total"]
+
+    if controller is not None:
+        if participation:
+            def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                          cids, round_idx, round_key, pmask, pstale,
+                          ctrl_state, *test):
+                ef_rows, total = _prologue(ef_all, cids, sizes)
+                if n_rounds == 1:
+                    b0 = jax.tree.map(lambda a: a[0], batches)
+                    state, ef_all, mirror, _, _, ctrl, m = one_round_ctrl(
+                        global_state, ef_all, mirror, ef_rows, total,
+                        ctrl_state, b0, sizes[0], lrs[0], cids[0], cids[0],
+                        sizes[0], round_idx[0], round_key, test,
+                        pmask[0], pstale[0])
+                    return state, _stack1(m), ef_all, mirror, ctrl
+
+                cids_next = jnp.roll(cids, -1, axis=0)
+                sizes_next = jnp.roll(sizes, -1, axis=0)
+
+                def body(carry, xs):
+                    state, ef_all, mirror, ef_rows, total, ctrl = carry
+                    b, n, lr, cid, cid_next, n_next, r, pm, ps = xs
+                    (state, ef_all, mirror, ef_rows, total, ctrl,
+                     m) = one_round_ctrl(
+                        state, ef_all, mirror, ef_rows, total, ctrl, b, n,
+                        lr, cid, cid_next, n_next, r, round_key, test,
+                        pm, ps)
+                    return (state, ef_all, mirror, ef_rows, total, ctrl), m
+
+                (state, ef_all, mirror, _, _, ctrl), mstack = jax.lax.scan(
+                    body,
+                    (global_state, ef_all, mirror, ef_rows, total,
+                     ctrl_state),
+                    (batches, sizes, lrs, cids, cids_next, sizes_next,
+                     round_idx, pmask, pstale))
+                return state, mstack, ef_all, mirror, ctrl
+
+            return superstep
+
+        def superstep(global_state, ef_all, mirror, batches, sizes, lrs,
+                      cids, round_idx, round_key, ctrl_state, *test):
+            ef_rows, total = _prologue(ef_all, cids, sizes)
+            if n_rounds == 1:
+                b0 = jax.tree.map(lambda a: a[0], batches)
+                state, ef_all, mirror, _, _, ctrl, m = one_round_ctrl(
+                    global_state, ef_all, mirror, ef_rows, total,
+                    ctrl_state, b0, sizes[0], lrs[0], cids[0], cids[0],
+                    sizes[0], round_idx[0], round_key, test)
+                return state, _stack1(m), ef_all, mirror, ctrl
+
+            cids_next = jnp.roll(cids, -1, axis=0)
+            sizes_next = jnp.roll(sizes, -1, axis=0)
+
+            def body(carry, xs):
+                state, ef_all, mirror, ef_rows, total, ctrl = carry
+                b, n, lr, cid, cid_next, n_next, r = xs
+                (state, ef_all, mirror, ef_rows, total, ctrl,
+                 m) = one_round_ctrl(
+                    state, ef_all, mirror, ef_rows, total, ctrl, b, n, lr,
+                    cid, cid_next, n_next, r, round_key, test)
+                return (state, ef_all, mirror, ef_rows, total, ctrl), m
+
+            (state, ef_all, mirror, _, _, ctrl), mstack = jax.lax.scan(
+                body,
+                (global_state, ef_all, mirror, ef_rows, total, ctrl_state),
+                (batches, sizes, lrs, cids, cids_next, sizes_next,
+                 round_idx))
+            return state, mstack, ef_all, mirror, ctrl
+
+        return superstep
 
     if participation:
         def superstep(global_state, ef_all, mirror, batches, sizes, lrs,

@@ -10,7 +10,12 @@
     FederatedTrainer / RunOptions (+ Eval/Checkpoint/EngineOptions) —
         the unified engine-backed entry point; ``repro.fl.server.
         run_federated`` is a thin back-compat wrapper over it
+    Controller / register_controller / make_controller /
+        registered_controllers — the in-superstep adaptive compression
+        axis (re-exported from ``repro.control``; same plugin idiom)
 """
+from repro.control import (Controller, make_controller,  # noqa: F401
+                           register_controller, registered_controllers)
 from repro.fl.api.algorithm import (Algorithm, make_algorithm,  # noqa: F401
                                     register_algorithm,
                                     registered_algorithms)

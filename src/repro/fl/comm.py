@@ -46,7 +46,8 @@ class CommLog:
                   wire_up: Optional[int] = None,
                   wire_down: Optional[int] = None,
                   n_down: Optional[int] = None,
-                  n_up: Optional[int] = None):
+                  n_up: Optional[int] = None,
+                  effective: Optional[Dict] = None):
         """Account one round.
 
         ``wire_up`` / ``wire_down``: codec-reported bytes per client for the
@@ -68,6 +69,13 @@ class CommLog:
         actually arrived — dropped clients were still *broadcast to*
         (they started the round), so the downlink keeps charging the full
         cohort while the uplink charges ``n_up``.
+        ``effective``: the adaptive-compression controller's per-round
+        effective codec configuration (``{"level": int, "eff_topk_frac":
+        float}`` or ``{"level": int, "eff_quant_bits": int}`` — see
+        ``repro.control``); the fields merge into the round record so the
+        schedule is replayable from the history.  The ``wire_up`` passed
+        alongside is then the LEVEL's effective bytes, not the codec's
+        capacity.  None (static runs) keeps the record shape unchanged.
         """
         if global_state is None:
             if self._model_b is None:
@@ -93,7 +101,8 @@ class CommLog:
                              "bytes_down": down,
                              "bytes_up_ideal": n_clients * (model_b
                                                             + fusion_b),
-                             "cum_bytes_up": self.bytes_up, **metrics})
+                             "cum_bytes_up": self.bytes_up,
+                             **(effective or {}), **metrics})
 
     def rounds_to(self, key: str, threshold: float) -> int:
         """First round where history[key] >= threshold (-1 if never)."""
@@ -107,12 +116,20 @@ class CommLog:
         converted via ``repro.obs.runlog.json_safe``) plus a final
         ``{"kind": "summary"}`` record with the run totals.  The shared
         shape with RunLog's JSONL stream is what lets
-        ``repro.obs.report`` consume both files with one loader."""
+        ``repro.obs.report`` consume both files with one loader.
+
+        Record schema v2: round records MAY carry the adaptive
+        controller's per-round effective codec fields (``level`` +
+        ``eff_topk_frac`` / ``eff_quant_bits`` — absent on static runs)
+        and the summary record carries ``"schema": 2``.  v1 records
+        (no ``schema`` key, no effective fields) parse identically —
+        every v1 key keeps its name and meaning."""
         from repro.obs.runlog import json_safe
         records = [{"kind": "round",
                     **{k: json_safe(v) for k, v in h.items()}}
                    for h in self.history]
-        records.append({"kind": "summary", "rounds": self.rounds,
+        records.append({"kind": "summary", "schema": 2,
+                        "rounds": self.rounds,
                         "bytes_up": self.bytes_up,
                         "bytes_down": self.bytes_down})
         return records

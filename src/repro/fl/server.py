@@ -159,6 +159,11 @@ def run_federated_reference(bundle: ModelBundle, fl: FLConfig,
             "partial participation / chaos injection is an engine feature "
             "(repro.engine); the reference loop has no fault schedule and "
             "would silently diverge from the engine's rng stream")
+    if getattr(fl, "controller", "static") != "static":
+        raise NotImplementedError(
+            "adaptive compression controllers are an engine feature "
+            "(repro.control rides the superstep scan carry); the reference "
+            "loop only runs the static codec configuration")
     if eval_fn is None:
         eval_fn = evaluate
     key = jax.random.PRNGKey(seed)

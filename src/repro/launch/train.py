@@ -64,13 +64,23 @@ def run_engine(args, cfg, fl) -> None:
     for a in client_axes(mesh):
         shards *= mesh.shape[a]
     # the sampled-client axis must split evenly over the mesh
+    ladder = (tuple(float(v) for v in args.ladder.split(","))
+              if args.ladder else ())
+    if args.controller != "static" and args.uplink_codec == "identity":
+        # adaptive compression needs something to adapt: default to the
+        # top-k + error-feedback codec at the paper's keep fraction
+        args.uplink_codec = "topk"
     fl = dataclasses.replace(
         fl, clients_per_round=max(fl.clients_per_round, shards)
         // shards * shards,
         participation=args.participation,
         over_provision=args.over_provision,
         buffer_k=args.buffer_k,
-        staleness_alpha=args.staleness_alpha)
+        staleness_alpha=args.staleness_alpha,
+        uplink_codec=args.uplink_codec,
+        topk_frac=args.topk_frac,
+        controller=args.controller,
+        ladder=ladder)
     # over-provisioned cohorts must still divide over the shards; size the
     # federation off the policy's cohort so sampling never starves
     from repro.fl.participation import make_policy
@@ -97,7 +107,9 @@ def run_engine(args, cfg, fl) -> None:
           f"clients/round={fl.clients_per_round} federation={n_clients}"
           + (f" participation={fl.participation}"
              if fl.participation != "full_sync" else "")
-          + (" chaos=on" if chaos is not None else ""))
+          + (" chaos=on" if chaos is not None else "")
+          + (f" controller={fl.controller} uplink={fl.uplink_codec}"
+             if fl.controller != "static" else ""))
     trainer = FederatedTrainer(bundle, fl, data, RunOptions(
         seed=0, verbose=True,
         eval=EvalOptions(every=max(args.rounds // 2, 1), examples=64),
@@ -176,6 +188,22 @@ def main() -> None:
     ap.add_argument("--halt-on-nonfinite", action="store_true",
                     help="engine only: checkpoint and stop cleanly at the "
                          "first chunk boundary after a non-finite metric")
+    ap.add_argument("--uplink-codec", default="identity",
+                    help="engine only: client->server delta codec "
+                         "(identity | topk | topk_noef | quant | int8 | "
+                         "int4 | mask | lowrank)")
+    ap.add_argument("--topk-frac", type=float, default=0.05,
+                    help="top-k family codecs: kept coordinate fraction "
+                         "(also the adaptive ladder's capacity level)")
+    ap.add_argument("--controller", default="static",
+                    help="engine only: in-superstep adaptive compression "
+                         "controller (static | ef_ratio | bytes_budget | "
+                         "loss_trend | any registered name); non-static "
+                         "defaults --uplink-codec to topk")
+    ap.add_argument("--ladder", default="", metavar="V0,V1,...",
+                    help="controller ladder: ascending effective levels "
+                         "(topk fracs or quant bits) topping out at the "
+                         "static codec parameter; empty -> default ladder")
     args = ap.parse_args()
 
     cfg = ARCH_CONFIGS[args.arch]

@@ -25,7 +25,8 @@ import math
 from typing import Any, Dict, List, Optional
 
 __all__ = ["span_totals", "round_time_breakdown", "telemetry_summary",
-           "bytes_per_round", "ef_page_summary", "build_report", "render"]
+           "bytes_per_round", "ef_page_summary", "schedule_summary",
+           "build_report", "render"]
 
 # span names charged to the dispatch thread's wall clock, in report order
 # (ef.page.writeback is NOT here: it runs on the lane's worker thread and
@@ -154,6 +155,33 @@ def telemetry_summary(comm_records: List[Dict],
             for k, vs in series.items() if vs}
 
 
+def schedule_summary(comm_records: List[Dict]) -> Dict[str, Any]:
+    """The adaptive-compression controller's realized schedule, from the
+    per-round effective fields (``level`` + ``eff_topk_frac`` /
+    ``eff_quant_bits`` — CommLog record schema v2).  Empty for static
+    runs, whose records carry no ``level``."""
+    levels = [(r.get("round", i + 1), int(r["level"]))
+              for i, r in enumerate(comm_records) if "level" in r]
+    if not levels:
+        return {}
+    counts: Dict[int, int] = {}
+    for _, lvl in levels:
+        counts[lvl] = counts.get(lvl, 0) + 1
+    switches = [{"round": rd, "level": lvl}
+                for i, (rd, lvl) in enumerate(levels)
+                if i == 0 or lvl != levels[i - 1][1]]
+    eff_keys = ("eff_topk_frac", "eff_quant_bits")
+    per_level: Dict[int, Dict] = {}
+    for r in comm_records:
+        if "level" in r:
+            per_level.setdefault(int(r["level"]), {
+                k: r[k] for k in eff_keys if k in r})
+    return {"rounds": len(levels),
+            "level_rounds": {str(k): v for k, v in sorted(counts.items())},
+            "levels": {str(k): v for k, v in sorted(per_level.items())},
+            "switches": switches[:50]}
+
+
 def bytes_per_round(comm_records: List[Dict]) -> Dict[str, Any]:
     """Wire accounting across the run (the paper's x-axis)."""
     if not comm_records:
@@ -196,6 +224,9 @@ def build_report(runlog_records: Optional[List[Dict]] = None,
         tele = telemetry_summary(comm_records)
         if tele:
             report["telemetry"] = tele
+        sched = schedule_summary(comm_records)
+        if sched:
+            report["schedule"] = sched
     return report
 
 
@@ -247,6 +278,14 @@ def render(report: Dict) -> str:
             t = tele[k]
             lines.append(f"  {k:>24s}: first={t['first']:.5g} "
                          f"last={t['last']:.5g} mean={t['mean']:.5g}")
+    sched = report.get("schedule")
+    if sched:
+        lines.append("== compression schedule ==")
+        lines.append("  rounds/level: " + "  ".join(
+            f"L{k}:{v}" for k, v in sched["level_rounds"].items()))
+        sw = sched.get("switches", [])
+        lines.append("  switches: " + (" -> ".join(
+            f"r{s['round']}=L{s['level']}" for s in sw) if sw else "none"))
     warns = report.get("warnings")
     if warns:
         lines.append(f"== warnings ({len(warns)}) ==")

@@ -81,6 +81,8 @@ class ClientTapCtx:
     ef: Any = None              # tree — the client's NEW EF residual
     pmask: Any = None           # scalar — 0/1 participation mask
     staleness: Any = None       # scalar — rounds late (participation)
+    level: Any = None           # scalar — effective ladder level (control)
+    eff_bytes: Any = None       # scalar — effective uplink payload bytes
 
 
 @dataclass(frozen=True)
@@ -216,6 +218,28 @@ class ParticipationTap(TelemetryTap):
                 / jnp.maximum(arrived, 1.0)}
 
 
+class ControllerTap(TelemetryTap):
+    """The adaptive-compression schedule (repro.control): the round's
+    effective ladder level and per-client effective uplink payload bytes.
+    Every client of a round encodes at the SAME level, so the psum-mean
+    is exact regardless of participation masking.  Active only when a
+    controller is on (the engine adds ``level``/``eff_bytes`` to
+    ``available``), so static builds stay byte-identical."""
+
+    name = "controller"
+    kinds = ("compressed",)
+    requires = ("level", "eff_bytes")
+
+    def client_sums(self, ctx):
+        return {"level": jnp.asarray(ctx.level, jnp.float32),
+                "bytes": jnp.asarray(ctx.eff_bytes, jnp.float32)}
+
+    def finish(self, summed, ctx):
+        c = jnp.float32(ctx.n_clients)
+        return {"level": summed["controller.level"] / c,
+                "effective_bytes": summed["controller.bytes"] / c}
+
+
 _TAPS: Dict[str, TelemetryTap] = {}
 
 
@@ -234,7 +258,7 @@ def registered_taps() -> Tuple[str, ...]:
 
 
 for _t in (DeltaNormTap(), EFResidualTap(), UpdateNormTap(), WeightTap(),
-           ParticipationTap()):
+           ParticipationTap(), ControllerTap()):
     register_tap(_t)
 
 

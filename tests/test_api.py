@@ -79,7 +79,7 @@ def _assert_same(a, b):
 def test_algorithm_names_in_sync():
     """configs/base.py mirrors the registry literally (codec-style)."""
     assert set(CONFIG_ALGORITHM_NAMES) == set(ALGORITHM_NAMES)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="unknown algorithm"):
         FLConfig(algorithm="fedsgd")
 
 

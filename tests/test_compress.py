@@ -138,8 +138,28 @@ def test_wire_bytes_matches_concrete_payload():
 
 def test_config_codec_names_in_sync():
     assert set(CONFIG_CODEC_NAMES) == set(CODEC_NAMES)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="uplink_codec"):
         FLConfig(uplink_codec="gzip")
+
+
+def test_make_codec_rejects_out_of_range_params():
+    """Construction-time rejection, not just FLConfig validation: codecs
+    built directly (tests, benchmarks, plugins) get the same errors."""
+    for frac in (0.0, -0.1, 1.5):
+        with pytest.raises(ValueError, match="topk_frac"):
+            make_codec("topk", topk_frac=frac)
+        with pytest.raises(ValueError, match="topk_frac"):
+            make_codec("mask", topk_frac=frac)
+    for bits in (2, 16, 0):
+        with pytest.raises(ValueError, match="quant_bits"):
+            make_codec("quant", quant_bits=bits)
+    with pytest.raises(ValueError, match="unknown codec"):
+        make_codec("gzip")
+    # direct constructors carry the same guards
+    with pytest.raises(ValueError, match="frac"):
+        TopKCodec(0.0)
+    with pytest.raises(ValueError, match="bits"):
+        QuantCodec(3)
 
 
 def test_commlog_wire_bytes_below_idealized():

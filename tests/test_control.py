@@ -1,0 +1,642 @@
+"""repro.control: in-superstep adaptive compression controllers.
+
+The load-bearing contracts:
+
+* ``controller="static"`` is the BITWISE oracle — an engine run with the
+  controller axis present but static is identical to the pre-controller
+  engine (final model, CommLog history, resumed ef.npz), single-device
+  and forced-2-device sharded.
+* An active controller adds ZERO collectives: the fused sharded round
+  keeps exactly one psum per round with controller + telemetry +
+  participation/chaos args on (jaxpr-asserted).
+* Controller state checkpoints (ctrl.npz): interrupt+resume is
+  bitwise-equal to an uninterrupted run, across ef_store layouts.
+* Level masking is exact: the capacity-bound codec at the top level
+  traces byte-identical payloads to the static encode, and a masked
+  level transmits exactly the top-k_l entries with an exact EF residual.
+* CommLog charges the effective per-round bytes of the scheduled level.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import IdentityCodec, make_codec
+from repro.configs.base import (CONTROLLER_NAMES, FLConfig, _LADDER_CODECS)
+from repro.control import (LADDER_CODECS, Controller, LadderSpec,
+                           ladder_kind, ladder_values, make_controller,
+                           register_controller, registered_controllers)
+from repro.control.controller import _REGISTRY
+from repro.core.rounds import init_global_state
+from repro.fl.comm import CommLog
+from repro.fl.server import run_federated, run_federated_reference
+
+from test_engine import (_assert_same, _bundle, _data, _fl_for, _reference,
+                         _forced_host_env)
+
+
+# ---------------------------------------------------------------------------
+# Registry (the make_codec / make_algorithm / make_policy idiom)
+# ---------------------------------------------------------------------------
+
+def test_registry_builtins_and_errors():
+    names = registered_controllers()
+    assert names == tuple(sorted(names))
+    assert set(names) == {"static", "ef_ratio", "bytes_budget", "loss_trend"}
+    assert isinstance(make_controller("ef_ratio"), Controller)
+    with pytest.raises(ValueError, match="unknown controller"):
+        make_controller("nope")
+    with pytest.raises(ValueError, match="already registered"):
+        register_controller("static", Controller)
+
+
+def test_register_controller_plugin():
+    class Custom(Controller):
+        name = "testctl"
+
+    register_controller("testctl", Custom)
+    try:
+        assert "testctl" in registered_controllers()
+        register_controller("testctl", Custom, overwrite=True)
+        # config validation falls back to the live registry for plugins
+        fl = FLConfig(controller="testctl", uplink_codec="topk")
+        assert fl.controller == "testctl"
+    finally:
+        _REGISTRY.pop("testctl", None)
+
+
+def test_config_controller_names_in_sync():
+    assert set(CONTROLLER_NAMES) == set(registered_controllers())
+    assert tuple(_LADDER_CODECS) == tuple(LADDER_CODECS)
+
+
+def test_config_controller_validation():
+    with pytest.raises(ValueError, match="unknown controller"):
+        FLConfig(controller="bogus")
+    with pytest.raises(ValueError, match="ladder-capable"):
+        FLConfig(controller="ef_ratio")          # identity uplink
+    with pytest.raises(ValueError, match="ascending"):
+        FLConfig(controller="ef_ratio", uplink_codec="topk",
+                 topk_frac=0.2, ladder=(0.2, 0.1))
+    with pytest.raises(ValueError, match="ctrl_band"):
+        FLConfig(ctrl_band=(2.0, 0.5))
+    with pytest.raises(ValueError, match="ctrl_budget_frac"):
+        FLConfig(ctrl_budget_frac=0.0)
+    with pytest.raises(ValueError, match="ctrl_ema"):
+        FLConfig(ctrl_ema=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Ladder helpers + LadderSpec
+# ---------------------------------------------------------------------------
+
+def test_ladder_kind():
+    assert ladder_kind("topk") == "topk_frac"
+    assert ladder_kind("topk_noef") == "topk_frac"
+    assert ladder_kind("int8") == "quant_bits"
+    assert ladder_kind("quant") == "quant_bits"
+    with pytest.raises(ValueError, match="no compression ladder"):
+        ladder_kind("identity")
+
+
+def test_ladder_values_defaults():
+    fl = FLConfig(uplink_codec="topk", topk_frac=0.2)
+    assert ladder_values(fl) == (0.05, 0.1, 0.2)
+    assert ladder_values(FLConfig(uplink_codec="int8")) == (4, 8)
+    # int4 fixes its capacity by NAME, whatever quant_bits says
+    assert ladder_values(FLConfig(uplink_codec="int4")) == (4,)
+    assert ladder_values(FLConfig(uplink_codec="quant",
+                                  quant_bits=4)) == (4,)
+    fl = FLConfig(uplink_codec="topk", topk_frac=0.2, ladder=(0.1, 0.2))
+    assert ladder_values(fl) == (0.1, 0.2)
+
+
+def test_ladder_values_validation():
+    with pytest.raises(ValueError, match="must equal topk_frac"):
+        ladder_values(FLConfig(uplink_codec="topk", topk_frac=0.2,
+                               ladder=(0.05, 0.1)))
+    with pytest.raises(ValueError, match="bits in"):
+        ladder_values(FLConfig(uplink_codec="int8", ladder=(2, 8)))
+    with pytest.raises(ValueError, match="capacity bits"):
+        ladder_values(FLConfig(uplink_codec="int4", ladder=(4, 8)))
+
+
+def test_ladder_spec_validation():
+    with pytest.raises(ValueError, match="length mismatch"):
+        LadderSpec(kind="topk_frac", values=(0.1, 0.2), bytes_up=(8,))
+    with pytest.raises(ValueError, match="at least one level"):
+        LadderSpec(kind="topk_frac", values=(), bytes_up=())
+    spec = LadderSpec(kind="topk_frac", values=(0.1, 0.2),
+                      bytes_up=(80, 160))
+    assert spec.n_levels == 2
+    np.testing.assert_array_equal(np.asarray(spec.bytes_table()),
+                                  [80.0, 160.0])
+
+
+# ---------------------------------------------------------------------------
+# Codec level ladders: masking is exact, capacity level == static bitwise
+# ---------------------------------------------------------------------------
+
+def _small_tree(seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    return {"w": jax.random.normal(k1, (40,)),
+            "b": jax.random.normal(k2, (11,))}
+
+
+def test_topk_ladder_top_level_is_static_bitwise():
+    t = _small_tree()
+    c = make_codec("topk", topk_frac=0.4).bind(t)
+    c.set_ladder((0.1, 0.2, 0.4))
+    st = c.init_state()
+    p_static, s_static = c.encode(t, st)
+    p_top, s_top = c.encode(t, st, level=jnp.asarray(2, jnp.int32))
+    for a, b in zip(jax.tree.leaves(p_static), jax.tree.leaves(p_top)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(s_static), jax.tree.leaves(s_top)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_topk_ladder_masked_level_exact():
+    """Level 0 transmits exactly the top-k_0 entries (capacity-shaped
+    payload, rest masked to zero) and the EF residual keeps exactly what
+    was not transmitted: decode(payload) + residual == input + old EF."""
+    t = {"w": jax.random.normal(jax.random.PRNGKey(3), (50,))}
+    c = make_codec("topk", topk_frac=0.4).bind(t)   # k_cap = 20
+    c.set_ladder((0.1, 0.2, 0.4))                   # k_0 = 5
+    st = c.init_state()
+    p, new_st = c.encode(t, st, level=jnp.asarray(0, jnp.int32))
+    dec = np.asarray(c.decode(p)["w"])
+    g = np.asarray(t["w"])
+    k0 = 5
+    keep = np.argsort(-np.abs(g))[:k0]
+    want = np.zeros_like(g)
+    want[keep] = g[keep]
+    np.testing.assert_array_equal(dec, want)
+    # payload stays capacity-shaped; only k_0 slots are non-zero
+    assert p[0]["val"].shape == (20,)
+    assert int(np.sum(np.asarray(p[0]["val"]) != 0)) == k0
+    # EF exactness
+    np.testing.assert_allclose(dec + np.asarray(new_st[0]), g, atol=1e-7)
+
+
+def test_topk_set_ladder_validation_and_level_bytes():
+    t = _small_tree()
+    c = make_codec("topk", topk_frac=0.4).bind(t)
+    with pytest.raises(ValueError, match="ascending"):
+        c.set_ladder((0.4, 0.2))
+    with pytest.raises(ValueError, match="capacity frac"):
+        c.set_ladder((0.1, 0.2))
+    with pytest.raises(ValueError, match="set_ladder first"):
+        c.level_bytes()
+    c.set_ladder((0.1, 0.2, 0.4))
+    lb = c.level_bytes()
+    assert list(lb) == sorted(lb) and len(lb) == 3
+    assert lb[-1] == c.wire_bytes()      # top level IS the static wire
+    # 8 bytes per kept (idx, val) pair, k = max(1, round(frac * n))
+    assert lb[0] == 8 * (max(1, round(0.1 * 40)) + max(1, round(0.1 * 11)))
+
+
+def test_quant_ladder_levels():
+    t = _small_tree()
+    c = make_codec("int8").bind(t)
+    c.set_ladder((4, 8))
+    lb = c.level_bytes()
+    assert lb[0] < lb[1] == c.wire_bytes()
+    # capacity level == static bitwise (packed codes and scales)
+    p_static, _ = c.encode(t)
+    p_top, _ = c.encode(t, level=jnp.asarray(1, jnp.int32))
+    for a, b in zip(jax.tree.leaves(p_static), jax.tree.leaves(p_top)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # level 0 = effective 4-bit: error within one 4-bit step per leaf
+    p0, _ = c.encode(t, level=jnp.asarray(0, jnp.int32))
+    dec = c.decode(p0)
+    for a, b in zip(jax.tree.leaves(dec), jax.tree.leaves(t)):
+        step = float(jnp.max(jnp.abs(b))) / 7
+        assert float(jnp.max(jnp.abs(a - b))) <= step * (1 + 1e-5)
+    with pytest.raises(ValueError, match="capacity bits"):
+        make_codec("int4").bind(t).set_ladder((4, 8))
+
+
+def test_identity_codec_has_no_ladder():
+    t = _small_tree()
+    c = IdentityCodec().bind(t)
+    with pytest.raises(ValueError, match="no compression ladder"):
+        c.set_ladder((0.1, 1.0))
+    with pytest.raises(ValueError, match="no compression ladder"):
+        c.level_bytes()
+    with pytest.raises(NotImplementedError):
+        c.encode(t, level=jnp.asarray(0, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Decision rules (pure traced updates, no engine)
+# ---------------------------------------------------------------------------
+
+def _spec3():
+    return LadderSpec(kind="topk_frac", values=(0.05, 0.1, 0.2),
+                      bytes_up=(100, 200, 400))
+
+
+def test_static_controller_is_a_noop():
+    c = make_controller("static").setup(_spec3(), FLConfig())
+    st = c.init_state()
+    assert int(st["level"]) == 2                 # capacity level
+    assert c.update(st, {"local_loss": 1.0}) is st
+
+
+def test_ef_ratio_controller_escalates_and_clips():
+    fl = FLConfig(uplink_codec="topk", ctrl_band=(0.5, 2.0), ctrl_ema=0.0)
+    c = make_controller("ef_ratio").setup(_spec3(), fl)
+    st = c.init_state()
+    assert int(st["level"]) == 0                 # starts cheapest
+    for _ in range(5):                           # ratio way above band
+        st = c.update(st, {"tele/ef_delta_ratio": jnp.float32(10.0)})
+    assert int(st["level"]) == 2                 # clipped at capacity
+    for _ in range(5):                           # below band -> tighten
+        st = c.update(st, {"tele/ef_delta_ratio": jnp.float32(0.0)})
+    assert int(st["level"]) == 0                 # clipped at 0
+    st = c.update(st, {"tele/ef_delta_ratio": jnp.float32(1.0)})
+    assert int(st["level"]) == 0                 # inside the band: hold
+
+
+def test_bytes_budget_controller_tracks_spend():
+    fl = FLConfig(uplink_codec="topk", ctrl_budget_frac=0.5)
+    c = make_controller("bytes_budget").setup(_spec3(), fl)
+    st = c.init_state()
+    levels = []
+    for _ in range(8):
+        levels.append(int(st["level"]))
+        st = c.update(st, {})
+    assert all(0 <= l <= 2 for l in levels)
+    # the running spend is exactly the sum of the played levels' bytes
+    want = sum((100, 200, 400)[l] for l in levels)
+    assert float(st["spent"]) == want
+    assert float(st["rounds"]) == 8
+    # budget = 0.5 * 400 = 200 bytes/round on average, so the long-run
+    # spend stays at or under it
+    assert float(st["spent"]) <= 200 * 8 + 400
+
+
+def test_loss_trend_controller_plateau_loosens():
+    fl = FLConfig(uplink_codec="topk", ctrl_ema=0.0)
+    c = make_controller("loss_trend").setup(_spec3(), fl)
+    st = c.init_state()
+    st = c.update(st, {"local_loss": jnp.float32(2.0)})
+    assert int(st["level"]) == 0                 # first round: no signal
+    st = c.update(st, {"local_loss": jnp.float32(1.0)})
+    assert int(st["level"]) == 0                 # falling fast: stay cheap
+    st = c.update(st, {"local_loss": jnp.float32(1.0)})
+    assert int(st["level"]) == 1                 # plateau: loosen
+
+
+# ---------------------------------------------------------------------------
+# Engine: static == the pre-controller oracle, BITWISE
+# ---------------------------------------------------------------------------
+
+_COMPRESSED_CASES = ("topk", "quant+downtopk", "fusion-topk")
+
+
+@pytest.mark.parametrize("mode", ["client_parallel", "client_sequential"])
+@pytest.mark.parametrize("case", _COMPRESSED_CASES)
+def test_static_controller_engine_bitwise(mode, case):
+    """An engine run with controller='static' spelled out reproduces the
+    reference loop exactly — the controller axis must not perturb the
+    pre-controller traced program by a single bit."""
+    bundle = _bundle()
+    ref = _reference(bundle, mode, case)
+    fl = dataclasses.replace(_fl_for(case), controller="static")
+    eng = run_federated(bundle, fl, _data(), rounds=6, seed=1,
+                        eval_every=2, mode=mode, superstep_rounds=4)
+    _assert_same(ref, eng)
+    # static short-circuits: no controller in the engine at all
+    assert eng.stats["controller"] is None
+    assert eng.stats["ladder"] is None
+
+
+def test_static_controller_checkpoint_resume_bitwise(tmp_path):
+    """Interrupt+resume with controller='static': same two-phase bitwise
+    contract as the pre-controller engine, resumed ef.npz included."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=2,
+                  local_batch=4, lr=0.05, uplink_codec="topk",
+                  topk_frac=0.1, controller="static")
+    dr = _data()
+    run_federated_reference(bundle, fl, dr, rounds=4, seed=1, eval_every=4,
+                            checkpoint_dir=str(tmp_path / "ref"),
+                            checkpoint_every=2)
+    ref = run_federated_reference(bundle, fl, dr, rounds=8, seed=1,
+                                  eval_every=4,
+                                  checkpoint_dir=str(tmp_path / "ref"),
+                                  checkpoint_every=2)
+    de = _data()
+    run_federated(bundle, fl, de, rounds=4, seed=1, eval_every=4,
+                  checkpoint_dir=str(tmp_path / "eng"), checkpoint_every=2,
+                  superstep_rounds=3)
+    eng = run_federated(bundle, fl, de, rounds=8, seed=1, eval_every=4,
+                        checkpoint_dir=str(tmp_path / "eng"),
+                        checkpoint_every=2, superstep_rounds=3)
+    _assert_same(ref, eng)
+    # static short-circuits the controller: no ctrl.npz is written
+    assert not os.path.exists(str(tmp_path / "eng" / "ctrl.npz"))
+
+
+# ---------------------------------------------------------------------------
+# Engine: adaptive schedules + effective-bytes accounting
+# ---------------------------------------------------------------------------
+
+def _adaptive_fl(controller="ef_ratio", **kw):
+    return FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=2,
+                    local_batch=4, lr=0.05, uplink_codec="topk",
+                    topk_frac=0.2, controller=controller, **kw)
+
+
+@pytest.mark.parametrize("controller",
+                         ["ef_ratio", "bytes_budget", "loss_trend"])
+def test_adaptive_engine_schedule_and_accounting(controller):
+    """Every built-in controller runs in the jitted superstep; the
+    history carries the per-round level + effective codec fields and
+    CommLog charges the scheduled level's wire bytes, not capacity's."""
+    bundle = _bundle()
+    fl = _adaptive_fl(controller)
+    res = run_federated(bundle, fl, _data(), rounds=6, seed=1,
+                        eval_every=2, superstep_rounds=3)
+    assert res.stats["controller"] == controller
+    assert res.stats["ladder"] == [0.05, 0.1, 0.2]
+    # the effective per-level wire bytes, from the same codec the engine
+    # binds
+    state = init_global_state(bundle, fl, jax.random.PRNGKey(0))
+    lb = make_codec("topk", topk_frac=0.2).bind(state["model"]) \
+        .set_ladder((0.05, 0.1, 0.2)).level_bytes()
+    assert len(res.comm.history) == 6
+    for h in res.comm.history:
+        lvl = h["level"]
+        assert lvl in (0, 1, 2)
+        assert h["eff_topk_frac"] == (0.05, 0.1, 0.2)[lvl]
+        assert h["bytes_up"] == fl.clients_per_round * lb[lvl]
+        assert h["tele/level"] == lvl
+        assert h["tele/effective_bytes"] == lb[lvl]
+    assert res.comm.bytes_up == sum(h["bytes_up"]
+                                    for h in res.comm.history)
+
+
+def test_adaptive_chunk_size_invariant():
+    """The controller state rides the scan carry: K=1 (no scan), K=3 and
+    K=6 produce the identical schedule and model."""
+    bundle = _bundle()
+    fl = _adaptive_fl()
+    runs = [run_federated(bundle, fl, _data(), rounds=6, seed=1,
+                          eval_every=2, superstep_rounds=k)
+            for k in (1, 3, 6)]
+    _assert_same(runs[0], runs[1])
+    _assert_same(runs[0], runs[2])
+
+
+def test_adaptive_checkpoint_resume_bitwise(tmp_path):
+    """ctrl.npz: interrupt at round 4, resume to 8 — model, history and
+    the schedule itself match the uninterrupted run bitwise, with the
+    controller state restored from the checkpoint (not re-initialized),
+    across ef_store layouts."""
+    bundle = _bundle()
+    fl = _adaptive_fl()
+    kw = dict(seed=1, eval_every=4, superstep_rounds=3)
+    oracle = run_federated(bundle, fl, _data(), rounds=8, **kw)
+    for store in ("device", "host"):
+        d = str(tmp_path / store)
+        run_federated(bundle, fl, _data(), rounds=4, checkpoint_dir=d,
+                      checkpoint_every=2, ef_store=store, **kw)
+        assert os.path.exists(os.path.join(d, "ctrl.npz"))
+        resumed = run_federated(bundle, fl, _data(), rounds=8,
+                                checkpoint_dir=d, checkpoint_every=2,
+                                **kw)
+        for a, b in zip(jax.tree.leaves(oracle.global_state),
+                        jax.tree.leaves(resumed.global_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # the resumed run replays rounds 5..8 exactly — schedule, losses
+        # and taps bitwise; only the fresh CommLog's own counters differ
+        strip = lambda h: {k: v for k, v in h.items()
+                           if k not in ("round", "cum_bytes_up")}
+        assert [strip(h) for h in resumed.comm.history] \
+            == [strip(h) for h in oracle.comm.history[4:]]
+        assert [h["level"] for h in resumed.comm.history] \
+            == [h["level"] for h in oracle.comm.history[4:]]
+
+
+def test_adaptive_with_participation_and_telemetry():
+    """Controller + partial participation + explicit telemetry compose in
+    one superstep (the chaos-bearing arg layout with a trailing
+    ctrl_state)."""
+    bundle = _bundle()
+    fl = _adaptive_fl(participation="deadline")
+    res = run_federated(bundle, fl, _data(), rounds=4, seed=1,
+                        eval_every=2, superstep_rounds=2, telemetry=True)
+    assert all("level" in h for h in res.comm.history)
+    assert all("tele/ef_delta_ratio" in h for h in res.comm.history)
+
+
+def test_controller_tap_unavailable_raises():
+    """ef_ratio needs the 'ef' telemetry tap, which needs a stateful
+    error-feedback uplink — int8 has none, and the engine says so instead
+    of silently feeding the controller garbage."""
+    bundle = _bundle()
+    fl = FLConfig(algorithm="fedavg", clients_per_round=2, local_steps=2,
+                  local_batch=4, lr=0.05, uplink_codec="int8",
+                  controller="ef_ratio")
+    with pytest.raises(ValueError, match="telemetry taps"):
+        run_federated(bundle, fl, _data(), rounds=2, seed=1)
+
+
+def test_reference_loop_rejects_controller():
+    bundle = _bundle()
+    with pytest.raises(NotImplementedError, match="engine feature"):
+        run_federated_reference(bundle, _adaptive_fl(), _data(), rounds=2,
+                                seed=1)
+
+
+def test_commlog_effective_fields_schema():
+    """Schema v2: round records may carry the effective codec fields; old
+    records (no controller) parse and serialize exactly as before."""
+    state = {"model": {"w": jnp.zeros((100,), jnp.float32)}}
+    log = CommLog()
+    log.log_round(state, 2, {"local_loss": 1.0}, wire_up=80,
+                  effective={"level": 0, "eff_topk_frac": 0.05})
+    log.log_round(state, 2, {"local_loss": 0.9}, wire_up=160)  # no ctrl
+    recs = log.to_records()
+    assert recs[0]["level"] == 0 and recs[0]["eff_topk_frac"] == 0.05
+    assert "level" not in recs[1]
+    assert recs[-1]["kind"] == "summary" and recs[-1]["schema"] == 2
+
+
+# ---------------------------------------------------------------------------
+# Sharded: forced-2-device static bitwise + adaptive smoke
+# ---------------------------------------------------------------------------
+
+_SHARDED_CTRL_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    assert jax.device_count() == 2, jax.devices()
+    from test_engine import (_assert_same, _bundle, _sharded_data,
+                             _sharded_fl, assert_results_close)
+    from repro.fl.server import run_federated
+    from repro.launch.mesh import make_engine_mesh
+
+    mesh = make_engine_mesh()
+    for case in ("topk", "fusion-topk"):
+        mode, fl = _sharded_fl(case)
+        fl = dataclasses.replace(fl, controller="static")
+        kw = dict(rounds=4, seed=1, eval_every=2, mode=mode,
+                  superstep_rounds=2)
+        single = run_federated(_bundle(), fl, _sharded_data(), **kw)
+        sharded = run_federated(_bundle(), fl, _sharded_data(), mesh=mesh,
+                                **kw)
+        assert_results_close(single, sharded)
+        # fused one-psum round == three-collective oracle BITWISE, with
+        # the controller axis present but static
+        unfused = run_federated(_bundle(), fl, _sharded_data(), mesh=mesh,
+                                fused_collective=False, **kw)
+        _assert_same(unfused, sharded)
+        print(f"static case {case}: OK")
+
+    # adaptive on the mesh: replicated controller state, effective-bytes
+    # accounting intact under shard_map
+    mode, fl = _sharded_fl("topk")
+    fl = dataclasses.replace(fl, controller="ef_ratio")
+    res = run_federated(_bundle(), fl, _sharded_data(), rounds=4, seed=1,
+                        eval_every=2, mode=mode, superstep_rounds=2,
+                        mesh=mesh)
+    assert all("level" in h and "eff_topk_frac" in h
+               for h in res.comm.history)
+    assert res.comm.bytes_up == sum(h["bytes_up"]
+                                    for h in res.comm.history)
+    fused = run_federated(_bundle(), fl, _sharded_data(), rounds=4, seed=1,
+                          eval_every=2, mode=mode, superstep_rounds=2,
+                          mesh=mesh, fused_collective=False)
+    _assert_same(fused, res)
+    print("adaptive sharded: OK")
+    print("SHARDED-CTRL-OK")
+""")
+
+
+def test_sharded_static_controller_bitwise_forced_host():
+    """Forced-2-device: controller='static' on the mesh matches the
+    single-device run (allclose) and the fused round stays bitwise-equal
+    to the unfused oracle; an adaptive run works end-to-end sharded."""
+    env = _forced_host_env(2)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_CTRL_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "SHARDED-CTRL-OK" in out.stdout
+
+
+_CTRL_ONE_PSUM_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import jax
+    import jax.numpy as jnp
+    assert jax.device_count() == 2, jax.devices()
+    from test_engine import _bundle, _sharded_fl
+    from repro.compress import make_codec
+    from repro.control import LadderSpec, ladder_values, make_controller
+    from repro.core.rounds import init_global_state
+    from repro.engine.sharded import client_sharding, make_sharded_superstep
+    from repro.launch.mesh import make_engine_mesh
+    from repro.obs.telemetry import make_telemetry
+
+    def count_psums(jaxpr):
+        n = 0
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "psum":
+                n += 1
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    if hasattr(j, "jaxpr"):
+                        n += count_psums(j.jaxpr)
+                    elif hasattr(j, "eqns"):
+                        n += count_psums(j)
+        return n
+
+    def scan_bodies(jaxpr, out):
+        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
+        for eqn in jaxpr.eqns:
+            if eqn.primitive.name == "scan":
+                out.append(eqn.params["jaxpr"].jaxpr)
+            for v in eqn.params.values():
+                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
+                    inner = (j.jaxpr if hasattr(j, "jaxpr")
+                             else (j if hasattr(j, "eqns") else None))
+                    if inner is not None:
+                        scan_bodies(inner, out)
+        return out
+
+    mesh = make_engine_mesh()
+    shard = client_sharding(mesh)
+    mode, fl = _sharded_fl("topk")
+    fl = dataclasses.replace(fl, controller="ef_ratio")
+    bundle = _bundle()
+    uplink = make_codec(fl.uplink_codec, topk_frac=fl.topk_frac)
+    downlink = make_codec(fl.downlink_codec)
+    state = jax.eval_shape(lambda k: init_global_state(bundle, fl, k),
+                           jax.random.PRNGKey(0))
+    uplink.bind(state["model"])
+    downlink.bind(state["model"])
+    ladder = ladder_values(fl)
+    uplink.set_ladder(ladder)
+    spec = LadderSpec(kind="topk_frac", values=ladder,
+                      bytes_up=uplink.level_bytes())
+    ctrl = make_controller("ef_ratio").setup(spec, fl)
+    K, C, S, B = 4, fl.clients_per_round, fl.local_steps, fl.local_batch
+    n_loc = 8 // shard.n_shards
+    ef = [jax.ShapeDtypeStruct(
+              ((n_loc + 1) * shard.n_shards,) + z.shape, z.dtype)
+          for z in jax.eval_shape(uplink.init_state)]
+    args = (state, ef, state["model"],
+            {"x": jax.ShapeDtypeStruct((K, C, S, B, 8, 8, 1), jnp.float32),
+             "y": jax.ShapeDtypeStruct((K, C, S, B), jnp.int32)},
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, C), jnp.int32),
+            jax.ShapeDtypeStruct((K,), jnp.int32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+            # participation / chaos args (pmask, pstale)
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            jax.ShapeDtypeStruct((K, C), jnp.float32),
+            ctrl.init_state())
+
+    tele = make_telemetry("compressed", n_clients=C,
+                          n_shards=shard.n_shards,
+                          available=frozenset(("ef", "level", "eff_bytes")))
+    assert any(t.name == "controller" for t in tele.taps), tele.taps
+    fn = make_sharded_superstep(bundle, fl, mode, K, mesh, uplink=uplink,
+                                downlink=downlink, fused_collective=True,
+                                telemetry=tele, participation=True,
+                                controller=ctrl)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    body = max(scan_bodies(jaxpr.jaxpr, []), key=lambda b: len(b.eqns))
+    per_round, total = count_psums(body), count_psums(jaxpr.jaxpr)
+    assert per_round == 1, f"controller round body has {per_round} psums"
+    assert total == 2, f"controller superstep has {total} psums"
+    print(f"controller+telemetry+participation fused: "
+          f"{per_round} psum/round ({total} total)")
+    print("CTRL-ONE-PSUM-OK")
+""")
+
+
+def test_fused_superstep_one_psum_with_controller():
+    """Acceptance: with a controller, full telemetry AND the
+    participation/chaos args all active, the fused sharded round STILL
+    executes exactly ONE psum per round — the controller update reads
+    psum-completed scalars and adds zero collectives (jaxpr-asserted)."""
+    env = _forced_host_env(2)
+    out = subprocess.run([sys.executable, "-c", _CTRL_ONE_PSUM_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, \
+        f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "CTRL-ONE-PSUM-OK" in out.stdout

@@ -102,7 +102,7 @@ def test_participation_registry():
     # config validation falls back to the live registry for plugins
     fl = _fl(participation="custom_probe")
     assert fl.participation == "custom_probe"
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="unknown participation"):
         _fl(participation="definitely_not_registered")
 
 
