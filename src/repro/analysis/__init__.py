@@ -1,0 +1,26 @@
+"""Static invariant analyzer for the jitted supersteps.
+
+``repro.analysis`` checks the engine's structural contracts — one psum
+per fused round, honored donations, no host syncs in the scan, f32 end
+to end, HLO collective traffic equal to the bytes model — by walking
+traced jaxprs and compiled HLO, without running a single training step.
+Passes live in a registry (``register_pass`` / ``make_pass``) like the
+repo's codec/algorithm/controller plugins; ``python -m repro.analysis``
+runs a pass set over the config matrix and exits non-zero on violation.
+"""
+from repro.analysis.jaxprs import (COLLECTIVE_PRIMITIVES,  # noqa: F401
+                                   HOST_SYNC_PRIMITIVES, collect_avals,
+                                   collective_execution_model,
+                                   count_collectives, count_primitives,
+                                   find_primitives, iter_eqns,
+                                   psum_payload_bytes, round_body,
+                                   scan_bodies)
+from repro.analysis.registry import (AnalysisFailure,  # noqa: F401
+                                     AnalysisPass, Finding, make_pass,
+                                     register_pass, registered_passes)
+from repro.analysis.lower import (CODEC_CASES, LoweredSuperstep,  # noqa: F401
+                                  SuperstepSpec, analysis_bundle,
+                                  default_matrix, fl_for, lower_superstep)
+from repro.analysis import passes as _passes  # noqa: F401 (registers)
+from repro.analysis import lint as _lint      # noqa: F401 (registers)
+from repro.analysis.runner import Report, run_analysis  # noqa: F401

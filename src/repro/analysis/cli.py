@@ -1,0 +1,163 @@
+"""``python -m repro.analysis`` — run the invariant passes, emit JSON.
+
+The sharded half of the matrix needs more than one XLA device.  When
+the current process has only one (the usual CPU host), the CLI respawns
+itself as a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` — the flag must
+be set before jax initializes its backend, which has long since
+happened by the time ``__main__`` runs — and merges the child's report
+into its own.  Exit status: 0 clean, 1 findings or per-point errors,
+2 usage errors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import List, Optional
+
+from repro.analysis.lower import default_matrix
+from repro.analysis.registry import (AnalysisFailure, make_pass,
+                                     registered_passes)
+from repro.analysis.runner import Report, run_analysis
+
+
+def _forced_device_env(n: int) -> dict:
+    env = dict(os.environ)
+    kept = [t for t in env.get("XLA_FLAGS", "").split()
+            if "xla_force_host_platform_device_count" not in t]
+    env["XLA_FLAGS"] = " ".join(
+        kept + [f"--xla_force_host_platform_device_count={n}"])
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                 if p])
+    return env
+
+
+def _run_sharded_subprocess(passes: List[str], preset: str,
+                            devices: int) -> Report:
+    """Re-run this CLI for the sharded points under forced devices."""
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        report_path = tmp.name
+    cmd = [sys.executable, "-m", "repro.analysis", "--scope", "sharded",
+           "--preset", preset, "--passes", ",".join(passes),
+           "--report", report_path, "--quiet"]
+    try:
+        proc = subprocess.run(cmd, env=_forced_device_env(devices),
+                              capture_output=True, text=True, timeout=3600)
+        if not os.path.exists(report_path) or \
+                os.path.getsize(report_path) == 0:
+            return Report(passes=passes, errors=[{
+                "point": "<sharded subprocess>", "pass": "cli",
+                "error": f"exit {proc.returncode}; no report written; "
+                         f"stderr tail: {proc.stderr[-2000:]}"}])
+        with open(report_path) as f:
+            data = json.load(f)
+    finally:
+        try:
+            os.unlink(report_path)
+        except OSError:
+            pass
+    from repro.analysis.registry import Finding
+    return Report(
+        passes=data.get("passes", passes),
+        points=data.get("points", {}),
+        findings=[Finding(d["pass"], d["point"], d["message"],
+                          severity=d.get("severity", "error"))
+                  for d in data.get("findings", [])],
+        errors=data.get("errors", []),
+        elapsed_s=data.get("elapsed_s", 0.0))
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static invariant analyzer for the jitted supersteps")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated pass names (default: all "
+                         "registered)")
+    ap.add_argument("--preset", default="quick",
+                    choices=("quick", "full"),
+                    help="config-matrix size (default: quick)")
+    ap.add_argument("--scope", default="all",
+                    choices=("all", "unsharded", "sharded"),
+                    help="restrict to un/sharded matrix points")
+    ap.add_argument("--devices", type=int, default=2,
+                    help="forced host device count for the sharded "
+                         "subprocess (default: 2)")
+    ap.add_argument("--report", default=None,
+                    help="write the JSON report here")
+    ap.add_argument("--list-passes", action="store_true",
+                    help="list registered passes and exit")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the human-readable summary")
+    args = ap.parse_args(argv)
+
+    if args.list_passes:
+        for name in registered_passes():
+            p = make_pass(name)
+            print(f"{name:18s} [{p.scope}]"
+                  f"{' (compiles)' if p.needs_compiled else ''} "
+                  f"{p.description}")
+        return 0
+
+    names = ([n.strip() for n in args.passes.split(",") if n.strip()]
+             if args.passes else list(registered_passes()))
+    try:
+        instances = [make_pass(n) for n in names]
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    lowered_names = [p.name for p in instances if p.scope == "lowered"]
+
+    import jax
+
+    rep = Report(passes=names)
+    # source passes + whatever lowered points this process can trace
+    local_sharded = jax.device_count() >= 2
+    if args.scope == "sharded":
+        specs = default_matrix(args.preset, sharded=True)
+        try:
+            rep = run_analysis(specs, passes=names)
+        except AnalysisFailure as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+    else:
+        specs = default_matrix(args.preset, sharded=False)
+        if args.scope == "all" and local_sharded:
+            specs = specs + default_matrix(args.preset, sharded=True)
+        try:
+            rep = run_analysis(specs, passes=names)
+        except AnalysisFailure as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        if args.scope == "all" and not local_sharded and lowered_names:
+            child = _run_sharded_subprocess(lowered_names, args.preset,
+                                            args.devices)
+            rep = rep.merged(child)
+
+    if args.report:
+        d = os.path.dirname(args.report)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.report, "w") as f:
+            json.dump(rep.to_json(), f, indent=2, sort_keys=True)
+
+    if not args.quiet:
+        print(f"repro.analysis: {len(rep.points)} point(s), passes "
+              f"{','.join(rep.passes)}, {rep.elapsed_s:.1f}s")
+        for f in rep.findings:
+            print(f"FINDING {f}")
+        for e in rep.errors:
+            print(f"ERROR [{e.get('pass')}] {e.get('point')}: "
+                  f"{e.get('error')}")
+        print("OK" if rep.ok else
+              f"VIOLATIONS: {len(rep.findings)} finding(s), "
+              f"{len(rep.errors)} error(s)")
+    return 0 if rep.ok else 1

@@ -1,0 +1,100 @@
+"""Drive a set of passes over a config matrix and collect a report."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.lower import (SuperstepSpec, default_matrix,
+                                  lower_superstep)
+from repro.analysis.registry import (AnalysisFailure, Finding, make_pass,
+                                     registered_passes)
+
+# the analyzer's default pass set — every registered pass
+DEFAULT_PASSES = None
+
+
+@dataclass
+class Report:
+    """Outcome of one analysis run.
+
+    ``points`` maps each lowered config point to the pass names that ran
+    on it; ``findings`` is every violation; ``errors`` records points
+    that could not be analyzed at all (infra failures, NOT invariant
+    violations — they still fail the run)."""
+    passes: List[str] = field(default_factory=list)
+    points: Dict[str, List[str]] = field(default_factory=dict)
+    findings: List[Finding] = field(default_factory=list)
+    errors: List[Dict] = field(default_factory=list)
+    elapsed_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings and not self.errors
+
+    def to_json(self) -> Dict:
+        return {"ok": self.ok, "passes": list(self.passes),
+                "n_points": len(self.points), "points": dict(self.points),
+                "findings": [f.to_json() for f in self.findings],
+                "errors": list(self.errors),
+                "elapsed_s": round(self.elapsed_s, 3)}
+
+    def merged(self, other: "Report") -> "Report":
+        return Report(
+            passes=sorted(set(self.passes) | set(other.passes)),
+            points={**self.points, **other.points},
+            findings=self.findings + other.findings,
+            errors=self.errors + other.errors,
+            elapsed_s=self.elapsed_s + other.elapsed_s)
+
+
+def run_analysis(specs: Optional[Sequence[SuperstepSpec]] = None,
+                 passes: Optional[Sequence[str]] = None,
+                 preset: str = "quick") -> Report:
+    """Run ``passes`` (default: all registered) over ``specs`` (default:
+    :func:`default_matrix` at ``preset``).
+
+    Lowered passes run per config point (compiling only when some pass
+    needs the executable); source passes run once.  Infra failures at a
+    point are recorded as errors and the remaining points still run.
+    """
+    t0 = time.perf_counter()
+    names = list(passes) if passes else list(registered_passes())
+    unknown = [n for n in names if n not in registered_passes()]
+    if unknown:
+        raise AnalysisFailure(f"unknown pass(es) {unknown}; registered: "
+                              f"{registered_passes()}")
+    instances = [make_pass(n) for n in names]
+    lowered_passes = [p for p in instances if p.scope == "lowered"]
+    source_passes = [p for p in instances if p.scope == "source"]
+    rep = Report(passes=names)
+
+    for p in source_passes:
+        rep.points["src/repro"] = sorted(
+            set(rep.points.get("src/repro", [])) | {p.name})
+        try:
+            rep.findings.extend(p.run(None))
+        except Exception as e:  # infra failure, not a finding
+            rep.errors.append({"point": "src/repro", "pass": p.name,
+                               "error": f"{type(e).__name__}: {e}"})
+
+    if lowered_passes:
+        if specs is None:
+            specs = default_matrix(preset)
+        for spec in specs:
+            try:
+                low = lower_superstep(spec)
+            except Exception as e:
+                rep.errors.append({"point": spec.point, "pass": "lower",
+                                   "error": f"{type(e).__name__}: {e}"})
+                continue
+            rep.points[low.point] = [p.name for p in lowered_passes]
+            for p in lowered_passes:
+                try:
+                    rep.findings.extend(p.run(low))
+                except Exception as e:
+                    rep.errors.append(
+                        {"point": low.point, "pass": p.name,
+                         "error": f"{type(e).__name__}: {e}"})
+    rep.elapsed_s = time.perf_counter() - t0
+    return rep

@@ -111,7 +111,9 @@ def insert_scratch_rows(tree, n_shards: int):
     def one(x):
         x = np.asarray(x)
         n = x.shape[0]
-        assert n % n_shards == 0, (n, n_shards)
+        if n % n_shards:
+            raise ValueError(f"EF table rows {n} do not divide over "
+                             f"{n_shards} shards")
         blocks = x.reshape((n_shards, n // n_shards) + x.shape[1:])
         pad = np.zeros((n_shards, 1) + x.shape[1:], x.dtype)
         return np.concatenate([blocks, pad], axis=1).reshape(
@@ -133,7 +135,9 @@ def ef_disk_layout(ef, *, n_shards: int = 1, n_clients: int = None):
     layout is a runtime knob, not a persistence format.
     """
     if hasattr(ef, "to_dense"):
-        assert n_clients is not None, "paged EF store needs n_clients"
+        if n_clients is None:
+            raise ValueError("paged EF store needs n_clients to "
+                             "rebuild the dense disk layout")
         return ef.to_dense(n_clients)
     if n_shards > 1:
         return strip_scratch_rows(ef, n_shards)

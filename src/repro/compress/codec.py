@@ -105,7 +105,9 @@ class Codec:
         bound ladder (``set_ladder``); None encodes at the static
         configuration and traces exactly the pre-ladder program."""
         leaves = jax.tree_util.tree_leaves(tree)
-        assert len(leaves) == len(self._shapes), "codec bound to other tree"
+        if len(leaves) != len(self._shapes):
+            raise ValueError(f"codec bound to a {len(self._shapes)}-leaf "
+                             f"tree, got {len(leaves)} leaves")
         if state is None:
             state = self.init_state()
         keys = (jax.random.split(key, len(leaves)) if key is not None

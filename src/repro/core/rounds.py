@@ -157,7 +157,8 @@ def _make_plain_clients(bundle: ModelBundle, fl: FLConfig, mode: str, *,
     zeroes masked clients' example weights on the host), so with
     ``telemetry=None`` the traced computation never sees them.
     """
-    assert mode in ("client_parallel", "client_sequential"), mode
+    if mode not in ("client_parallel", "client_sequential"):
+        raise ValueError(f"unknown fl mode {mode!r}")
     algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
     extra_keys = algo.extra_state
@@ -598,7 +599,8 @@ def _make_compressed_clients(bundle: ModelBundle, fl: FLConfig, mode: str,
     payload keeps the wire shapes static.  With ``level=None`` the encode
     traces exactly the pre-ladder program.
     """
-    assert mode in ("client_parallel", "client_sequential"), mode
+    if mode not in ("client_parallel", "client_sequential"):
+        raise ValueError(f"unknown fl mode {mode!r}")
     algo = _algorithm(fl)
     trainer = make_local_trainer(bundle, fl, impl=impl)
     extra_keys = algo.extra_state

@@ -165,8 +165,9 @@ class FederatedDataset:
             cids = np.array(picks, np.int64)
         else:
             cids = self._rng.choice(n_total, size=n, replace=False)
-        assert len(np.unique(cids)) == len(cids), \
-            f"sample_clients returned duplicate cids: {cids}"
+        if len(np.unique(cids)) != len(cids):
+            raise ValueError(
+                f"sample_clients returned duplicate cids: {cids}")
         return cids
 
     def _draw(self, client: Dict[str, np.ndarray], n: int) -> Dict[str, np.ndarray]:

@@ -86,7 +86,8 @@ from repro.engine.pipeline import HostPrefetcher, StagingPool
 from repro.engine.sharded import (client_sharding, chunk_shardings,
                                   ef_table_sharding, eval_batch_sharding,
                                   make_sharded_eval, make_sharded_superstep)
-from repro.engine.superstep import (make_compressed_superstep,
+from repro.engine.superstep import (donation_argnums,
+                                    make_compressed_superstep,
                                     make_plain_superstep)
 from repro.models.registry import ModelBundle
 from repro.obs.runlog import as_runlog
@@ -609,17 +610,10 @@ def run_federated_engine(bundle: ModelBundle, fl: FLConfig, data, *,
             # accelerator backends (on CPU their buffers alias host numpy
             # memory and XLA refuses, warning on every dispatch); the lr
             # slice is device-native and always donates.
-            host_staged = jax.default_backend() != "cpu"
-            if compressed:
-                donate = (0, 1, 2, 5) + (
-                    ((3, 4, 6, 7) + ((9, 10) if part_active else ()))
-                    if host_staged else ())
-                if ctrl_active:   # device-native scalars, always donatable
-                    donate = donate + ((11,) if part_active else (9,))
-            else:
-                donate = (0, 3) + (
-                    ((1, 2) + ((4, 5) if part_active else ()))
-                    if host_staged else ())
+            donate = donation_argnums(
+                compressed=compressed, participation=part_active,
+                controller=ctrl_active,
+                host_staged=jax.default_backend() != "cpu")
             steps[n_rounds] = jax.jit(fn, donate_argnums=donate)
         return steps[n_rounds]
 

@@ -88,7 +88,8 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
                            uplink=None, downlink=None, eval_fn=None,
                            impl="auto", fused_collective=True,
                            eval_sharded=True, telemetry=None,
-                           participation=False, controller=None):
+                           participation=False, controller=None,
+                           inner_wrap=None):
     """``shard_map``-wrapped superstep on ``mesh`` (client axes size > 1).
 
     Same call signature as the unsharded supersteps; the plain variant is
@@ -103,9 +104,19 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
     with ``pad_eval_batch(shard=...)`` and staged with
     :func:`repro.launch.sharding.eval_batch_sharding`) when True, a
     replicated one when False.
+
+    ``inner_wrap`` is an analyzer hook (``repro.analysis``): a callable
+    applied to the superstep BODY before the ``shard_map`` wrap, i.e.
+    inside the mesh context but outside jit.  The invariant analyzer's
+    mutation tests use it to seed deliberate violations (a second psum,
+    an f64 cast, a host callback) and prove the passes catch them; it
+    must preserve the superstep signature.  Production callers leave it
+    None.
     """
     shard = client_sharding(mesh)
-    assert shard is not None, "use the plain superstep on a 1-shard mesh"
+    if shard is None:
+        raise ValueError("use the plain superstep on a 1-shard mesh "
+                         "(client axes multiply to 1)")
     ax = shard.axis_name
     test_spec = P(ax) if eval_sharded else P()
     n_test = 2 if eval_fn is not None else 0
@@ -137,6 +148,8 @@ def make_sharded_superstep(bundle, fl, mode, n_rounds, mesh, *,
             + (test_spec,) * n_test
         out_specs = (P(), P(), P(ax), P()) + ctrl_specs
 
+    if inner_wrap is not None:
+        inner = inner_wrap(inner)
     return _unchecked_shard_map(inner, mesh, in_specs, out_specs)
 
 
@@ -149,7 +162,8 @@ def make_sharded_eval(eval_fn, mesh):
     psum'd metrics come back replicated.  The caller jits the result.
     """
     shard = client_sharding(mesh)
-    assert shard is not None, "sharded eval needs client axes > 1"
+    if shard is None:
+        raise ValueError("sharded eval needs client axes > 1")
     ax = shard.axis_name
     return _unchecked_shard_map(eval_fn, mesh,
                                 in_specs=(P(), P(ax), P(ax)),

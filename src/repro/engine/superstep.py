@@ -82,10 +82,92 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.aggregate import fused_psum
-from repro.core.rounds import (make_compressed_round_fn,
+from repro.core.rounds import (init_global_state, make_compressed_round_fn,
                                make_compressed_round_parts, make_round_fn,
                                make_round_parts)
 from repro.kernels import ops
+
+
+def donation_argnums(*, compressed, participation=False, controller=False,
+                     host_staged=True):
+    """The engine's ``donate_argnums`` for a superstep signature.
+
+    One source of truth shared by ``repro.engine.engine`` (which jits the
+    supersteps) and ``repro.analysis`` (whose donation pass verifies the
+    donated buffers are actually aliased in the compiled executable):
+
+    * carried device state always donates — ``global_state`` (and for the
+      compressed path ``ef_all`` + ``mirror``, plus the controller
+      scalars) are consumed exactly once per chunk;
+    * the staged chunk arrays (batches / sizes / cids / round_idx and
+      the participation mask/staleness) donate only when
+      ``host_staged=True`` — on CPU their buffers alias host numpy
+      memory and XLA refuses the donation;
+    * the lr slice is device-native and always donates.
+    """
+    if compressed:
+        donate = (0, 1, 2, 5) + (
+            ((3, 4, 6, 7) + ((9, 10) if participation else ()))
+            if host_staged else ())
+        if controller:
+            donate = donate + ((11,) if participation else (9,))
+    else:
+        donate = (0, 3) + (
+            ((1, 2) + ((4, 5) if participation else ()))
+            if host_staged else ())
+    return donate
+
+
+def abstract_superstep_args(bundle, fl, n_rounds, *, cohort, uplink=None,
+                            ef_rows=None, participation=False,
+                            controller=None, input_shape=None):
+    """ShapeDtypeStruct argument tuple matching a superstep's signature.
+
+    The invariant analyzer (``repro.analysis``) and the jaxpr-level tests
+    trace supersteps abstractly; this helper is the single place the
+    argument layout is spelled out, so signature changes break one
+    builder instead of five hand-rolled copies.
+
+    ``cohort`` is the round's client count C (already policy-expanded
+    for partial participation); ``ef_rows`` is the leading row count of
+    the EF table argument — ``n_clients`` dense unsharded,
+    ``(n_loc + 1) * n_shards`` resident sharded, ``K*C`` /
+    ``(K*C + 1) * n_shards`` for the cohort-paged layouts — required
+    exactly when ``uplink`` is a bound codec.  ``controller`` is a
+    set-up :class:`repro.control.Controller` (its ``init_state()``
+    shapes the ctrl arg).  ``input_shape`` defaults to the bundle
+    config's ``input_shape``.
+    """
+    K, C = n_rounds, cohort
+    S, B = fl.local_steps, fl.local_batch
+    if input_shape is None:
+        input_shape = tuple(bundle.config.input_shape)
+    state = jax.eval_shape(lambda k: init_global_state(bundle, fl, k),
+                           jax.random.PRNGKey(0))
+    batches = {"x": jax.ShapeDtypeStruct((K, C, S, B) + input_shape,
+                                         jnp.float32),
+               "y": jax.ShapeDtypeStruct((K, C, S, B), jnp.int32)}
+    sizes = jax.ShapeDtypeStruct((K, C), jnp.float32)
+    lrs = jax.ShapeDtypeStruct((K,), jnp.float32)
+    part = ((jax.ShapeDtypeStruct((K, C), jnp.float32),
+             jax.ShapeDtypeStruct((K, C), jnp.float32))
+            if participation else ())
+    ctrl = ((jax.eval_shape(controller.init_state),)
+            if controller is not None else ())
+    if uplink is None:
+        return (state, batches, sizes, lrs) + part
+    if ef_rows is None:
+        raise ValueError("abstract_superstep_args needs ef_rows for a "
+                         "compressed superstep (the EF table's leading "
+                         "row count)")
+    ef = jax.tree.map(
+        lambda z: jax.ShapeDtypeStruct((ef_rows,) + z.shape, z.dtype),
+        jax.eval_shape(uplink.init_state))
+    cids = jax.ShapeDtypeStruct((K, C), jnp.int32)
+    ridx = jax.ShapeDtypeStruct((K,), jnp.int32)
+    round_key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return (state, ef, state["model"], batches, sizes, lrs, cids, ridx,
+            round_key) + part + ctrl
 
 
 def _stack1(tree):
@@ -123,7 +205,9 @@ def make_plain_superstep(bundle, fl, mode, n_rounds, *, eval_fn=None,
     untouched.
     """
     if fused:
-        assert shard is not None, "fused collectives require a shard"
+        if shard is None:
+            raise ValueError("fused collectives require a shard "
+                             "(fused=True is sharded-only)")
         return _make_fused_plain_superstep(bundle, fl, mode, n_rounds,
                                            eval_fn=eval_fn, impl=impl,
                                            shard=shard, telemetry=telemetry,
@@ -408,7 +492,9 @@ def make_compressed_superstep(bundle, fl, mode, n_rounds, uplink, downlink,
     byte-identical to before this axis existed.
     """
     if fused:
-        assert shard is not None, "fused collectives require a shard"
+        if shard is None:
+            raise ValueError("fused collectives require a shard "
+                             "(fused=True is sharded-only)")
         return _make_fused_compressed_superstep(
             bundle, fl, mode, n_rounds, uplink, downlink, eval_fn=eval_fn,
             impl=impl, shard=shard, telemetry=telemetry,

@@ -147,7 +147,8 @@ def register_algorithm(algo: Algorithm, *, override: bool = False) -> Algorithm:
     """Register ``algo`` under ``algo.name``; returns it (decorator-friendly
     via ``register_algorithm(MyAlgo())``).  Re-registering an existing name
     requires ``override=True`` so typos can't silently shadow a plugin."""
-    assert algo.name, "Algorithm.name must be set"
+    if not algo.name:
+        raise ValueError("Algorithm.name must be a non-empty string")
     if algo.name in _REGISTRY and not override:
         raise ValueError(f"algorithm {algo.name!r} already registered "
                          f"(pass override=True to replace)")

@@ -7,6 +7,8 @@ upload overhead that the round-count metric hides.
 """
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -136,8 +138,6 @@ class CommLog:
 
     def save(self, path: str) -> str:
         """Write :meth:`to_records` as JSONL; returns ``path``."""
-        import json
-        import os
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)

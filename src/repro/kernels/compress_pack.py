@@ -78,10 +78,13 @@ def quant_pack(x, scale, noise, *, bits=8, interpret=True):
     int8: int8 [n].  int4: uint8 [n/2] (n must be even), element 2i in the
     low nibble — the exact wire format of ``ref.quant_pack_ref``.
     """
-    assert bits in (4, 8), bits
+    if bits not in (4, 8):
+        raise ValueError(f"quant_pack bits={bits!r} must be 4 or 8")
     n = x.shape[0]
     if bits == 4:
-        assert n % 2 == 0, "int4 pack needs an even element count"
+        if n % 2:
+            raise ValueError("int4 pack needs an even element count, "
+                             f"got {n}")
     xr = _pad_rows(x.astype(jnp.float32), LANES, BLOCK_ROWS, 0.0)
     nr = _pad_rows(noise.astype(jnp.float32), LANES, BLOCK_ROWS, 0.5)
     rows = xr.shape[0]
@@ -124,7 +127,8 @@ def _quant_unpack_kernel(q_ref, scale_ref, out_ref, *, bits):
 
 def quant_unpack(packed, scale, *, bits=8, n=None, interpret=True):
     """Packed codes -> fp32 [n] (inverse of :func:`quant_pack`)."""
-    assert bits in (4, 8), bits
+    if bits not in (4, 8):
+        raise ValueError(f"quant_unpack bits={bits!r} must be 4 or 8")
     m = packed.shape[0]
     n = (m if bits == 8 else 2 * m) if n is None else n
     in_lanes = LANES if bits == 8 else LANES // 2

@@ -61,7 +61,8 @@ def quant_pack_ref(x, scale, noise, *, bits):
     ``bits=4``: codes in [-7, 7] stored as ``code+8`` nibbles, two per uint8
     (element 2i in the low nibble, 2i+1 in the high one); n must be even.
     """
-    assert bits in (4, 8), bits
+    if bits not in (4, 8):
+        raise ValueError(f"quant_pack_ref bits={bits!r} must be 4 or 8")
     qmax = 127 if bits == 8 else 7
     q = jnp.floor(x.astype(jnp.float32) / scale + noise)
     q = jnp.clip(q, -qmax, qmax)
@@ -73,7 +74,9 @@ def quant_pack_ref(x, scale, noise, *, bits):
 
 def quant_unpack_ref(packed, scale, *, bits, n):
     """Inverse of :func:`quant_pack_ref`: packed codes -> float32 [n]."""
-    assert bits in (4, 8), bits
+    if bits not in (4, 8):
+        raise ValueError(f"quant_unpack_ref bits={bits!r} must be 4 "
+                         "or 8")
     if bits == 8:
         return packed.astype(jnp.float32) * scale
     low = (packed & 0xF).astype(jnp.int32) - 8

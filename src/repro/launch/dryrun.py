@@ -14,6 +14,7 @@ Usage:
 Results: one JSON per (arch, shape, mesh) under benchmarks/artifacts/dryrun/.
 """
 import argparse      # noqa: E402
+import dataclasses   # noqa: E402
 import json          # noqa: E402
 import time          # noqa: E402
 import traceback     # noqa: E402
@@ -41,7 +42,6 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
             save_hlo: bool = False, remat: str = "none",
             serve_ep: bool = False, shard_capacity: bool = False,
             moe_dispatch: str = "gather", tag: str = "") -> dict:
-    import dataclasses
     cfg = dataclasses.replace(ARCH_CONFIGS[arch], remat=remat,
                               serve_expert_parallel=serve_ep,
                               moe_shard_capacity=shard_capacity,
@@ -117,7 +117,6 @@ def run_superstep(multi_pod: bool, compressed: bool = True,
     regressions of ``repro.engine.sharded`` against the 16x16 / 2x16x16
     meshes on a CPU box.
     """
-    import dataclasses
     import jax.numpy as jnp
     from repro.compress import make_codec
     from repro.configs import CNN_CONFIGS

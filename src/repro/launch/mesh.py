@@ -79,8 +79,9 @@ def make_engine_mesh(n_client_shards: int = None):
     for CPU simulation), never here.
     """
     n = n_client_shards or len(jax.devices())
-    assert n <= len(jax.devices()), \
-        f"engine mesh wants {n} devices, only {len(jax.devices())} visible"
+    if n > len(jax.devices()):
+        raise ValueError(f"engine mesh wants {n} devices, only "
+                         f"{len(jax.devices())} visible")
     return _mesh((n, 1), ("data", "model"))
 
 

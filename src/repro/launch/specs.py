@@ -25,7 +25,9 @@ class FLPlan:
 
 
 def fl_plan(cfg: ArchConfig, shape: InputShape, mesh) -> FLPlan:
-    assert shape.kind == "train"
+    if shape.kind != "train":
+        raise ValueError(f"fl_plan needs a 'train' shape, got "
+                         f"{shape.kind!r}")
     if cfg.fl_mode == "client_parallel":
         # one client per data(-pod) group
         nc = axis_size(mesh, "pod", "data")

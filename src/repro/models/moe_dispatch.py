@@ -59,7 +59,9 @@ def _local_moe(xt, router, w1, w2, w3, *, top_k, act, capacity_factor,
     n_sh = (jax.lax.axis_size(axis) if hasattr(jax.lax, "axis_size")
             else jax.lax.psum(1, axis))  # jax 0.4.x compat
     E_loc = w1.shape[0]
-    assert E == n_sh * E_loc, (E, n_sh, E_loc)
+    if E != n_sh * E_loc:
+        raise ValueError(f"router has {E} experts but {n_sh} shards x "
+                         f"{E_loc} local experts")
 
     logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
     gates = jax.nn.softmax(logits, axis=-1)                     # [T, E]

@@ -48,7 +48,9 @@ def mrope_angles(positions_3d, head_dim, theta, sections):
     position id of the section it falls in.
     """
     half = head_dim // 2
-    assert sum(sections) == half, (sections, half)
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to "
+                         f"head_dim//2 = {half}")
     freq = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
     # section id per frequency slot
     sec_id = jnp.repeat(

@@ -301,7 +301,9 @@ def make_telemetry(kind: str, *, n_clients: int = 1, n_shards: int = 1,
     validates) a subset.  Returns None when nothing applies — callers
     treat that exactly like telemetry-off.
     """
-    assert kind in ("plain", "compressed"), kind
+    if kind not in ("plain", "compressed"):
+        raise ValueError(f"telemetry kind {kind!r} must be 'plain' or "
+                         "'compressed'")
     base = {"n_examples", "loss"}
     base |= ({"model", "global_model"} if kind == "plain"
              else {"delta", "decoded", "global_model"})

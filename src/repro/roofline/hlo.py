@@ -329,6 +329,52 @@ def collective_op_counts(hlo_text: str) -> Dict[str, int]:
     return {k: int(v) for k, v in analyze_entry(hlo_text).coll_counts.items()}
 
 
+def collective_summary(hlo_text: str) -> Dict[str, Tuple[int, int]]:
+    """Trip-weighted ``{collective: (op_count, payload_bytes)}`` of a
+    compiled module, in ONE parse (``collective_bytes`` +
+    ``collective_op_counts`` each re-walk the text).  The analyzer's
+    collective-bytes pass cross-checks this against the jaxpr-level
+    :func:`repro.analysis.collective_execution_model`."""
+    cost = analyze_entry(hlo_text)
+    return {k: (int(cost.coll_counts.get(k, 0)), int(v))
+            for k, v in cost.coll_bytes.items()}
+
+
+def entry_io_aliases(hlo_text: str) -> List[Tuple[Tuple[int, ...], int]]:
+    """The module's ``input_output_alias`` map: ``(output_index_path,
+    parameter_number)`` pairs, one per donated-and-aliased buffer.  Empty
+    when the executable aliases nothing (donation dropped or absent)."""
+    start = hlo_text.find("input_output_alias={")
+    if start < 0:
+        return []
+    i = start + len("input_output_alias=")
+    depth = 0
+    for j in range(i, len(hlo_text)):   # balanced-brace scan: entries
+        if hlo_text[j] == "{":          # themselves contain {} groups
+            depth += 1
+        elif hlo_text[j] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    else:
+        return []
+    body = hlo_text[i + 1:j]
+    return [(tuple(int(t) for t in out.split(",") if t.strip()), int(param))
+            for out, param in re.findall(r"\{([\d,\s]*)\}:\s*\((\d+)",
+                                         body)]
+
+
+def entry_param_shapes(hlo_text: str) -> List[Tuple[str, str]]:
+    """Ordered ``(dtype, dims)`` of the ENTRY parameters, from the
+    module's ``entry_computation_layout`` header — parameter number i is
+    element i (the per-device shapes under SPMD partitioning)."""
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", hlo_text,
+                  re.M | re.S)
+    if not m:
+        return []
+    return _SHAPE_RE.findall(m.group(1))
+
+
 def flops_breakdown(hlo_text: str, top: int = 25) -> List[Tuple[str, float, float]]:
     """Trip-weighted (computation, flops, bytes) hot list for perf work.
 

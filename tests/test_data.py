@@ -150,7 +150,7 @@ def test_sample_clients_unique_and_guarded():
             return np.zeros(size, np.int64)   # a buggy rng: all duplicates
 
     data._rng = DupRng()
-    with pytest.raises(AssertionError, match="duplicate"):
+    with pytest.raises(ValueError, match="duplicate"):
         data.sample_clients(3)
 
 

@@ -479,37 +479,11 @@ _ONE_PSUM_SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp
     assert jax.device_count() == 2, jax.devices()
     from test_engine import _bundle, _sharded_fl
+    from repro.analysis import count_collectives, round_body
     from repro.compress import make_codec
     from repro.core.rounds import init_global_state
     from repro.engine.sharded import client_sharding, make_sharded_superstep
     from repro.launch.mesh import make_engine_mesh
-
-    def count_psums(jaxpr):
-        n = 0
-        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "psum":
-                n += 1
-            for v in eqn.params.values():
-                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
-                    if hasattr(j, "jaxpr"):
-                        n += count_psums(j.jaxpr)
-                    elif hasattr(j, "eqns"):
-                        n += count_psums(j)
-        return n
-
-    def scan_bodies(jaxpr, out):
-        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "scan":
-                out.append(eqn.params["jaxpr"].jaxpr)
-            for v in eqn.params.values():
-                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
-                    inner = (j.jaxpr if hasattr(j, "jaxpr")
-                             else (j if hasattr(j, "eqns") else None))
-                    if inner is not None:
-                        scan_bodies(inner, out)
-        return out
 
     mesh = make_engine_mesh()
     shard = client_sharding(mesh)
@@ -541,11 +515,9 @@ _ONE_PSUM_SCRIPT = textwrap.dedent("""
                                     uplink=uplink, downlink=downlink,
                                     fused_collective=fused)
         jaxpr = jax.make_jaxpr(fn)(*args)
-        bodies = scan_bodies(jaxpr.jaxpr, [])
-        # the K-round loop is the scan whose body holds the most eqns
-        # (inner scans are the per-client / per-step training loops)
-        body = max(bodies, key=lambda b: len(b.eqns))
-        counts[fused] = (count_psums(body), count_psums(jaxpr.jaxpr))
+        # repro.analysis.round_body: the outermost (K-round) scan body
+        body = round_body(jaxpr)
+        counts[fused] = (count_collectives(body), count_collectives(jaxpr))
     per_round, total = counts[True]
     assert per_round == 1, f"fused round body has {per_round} psums"
     # one prologue psum per chunk (round 0's EF gather + weight total)

@@ -139,38 +139,12 @@ _TELE_ONE_PSUM_SCRIPT = textwrap.dedent("""
     import jax.numpy as jnp
     assert jax.device_count() == 2, jax.devices()
     from test_engine import _bundle, _sharded_fl
+    from repro.analysis import count_collectives, round_body
     from repro.compress import make_codec
     from repro.core.rounds import init_global_state
     from repro.engine.sharded import client_sharding, make_sharded_superstep
     from repro.launch.mesh import make_engine_mesh
     from repro.obs.telemetry import make_telemetry
-
-    def count_psums(jaxpr):
-        n = 0
-        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "psum":
-                n += 1
-            for v in eqn.params.values():
-                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
-                    if hasattr(j, "jaxpr"):
-                        n += count_psums(j.jaxpr)
-                    elif hasattr(j, "eqns"):
-                        n += count_psums(j)
-        return n
-
-    def scan_bodies(jaxpr, out):
-        is_sub = lambda x: hasattr(x, "eqns") or hasattr(x, "jaxpr")
-        for eqn in jaxpr.eqns:
-            if eqn.primitive.name == "scan":
-                out.append(eqn.params["jaxpr"].jaxpr)
-            for v in eqn.params.values():
-                for j in jax.tree_util.tree_leaves(v, is_leaf=is_sub):
-                    inner = (j.jaxpr if hasattr(j, "jaxpr")
-                             else (j if hasattr(j, "eqns") else None))
-                    if inner is not None:
-                        scan_bodies(inner, out)
-        return out
 
     mesh = make_engine_mesh()
     shard = client_sharding(mesh)
@@ -204,8 +178,8 @@ _TELE_ONE_PSUM_SCRIPT = textwrap.dedent("""
                                 downlink=downlink, fused_collective=True,
                                 telemetry=tele)
     jaxpr = jax.make_jaxpr(fn)(*args)
-    body = max(scan_bodies(jaxpr.jaxpr, []), key=lambda b: len(b.eqns))
-    per_round, total = count_psums(body), count_psums(jaxpr.jaxpr)
+    body = round_body(jaxpr)
+    per_round, total = count_collectives(body), count_collectives(jaxpr)
     assert per_round == 1, f"telemetry round body has {per_round} psums"
     assert total == 2, f"telemetry superstep has {total} psums"
     print(f"telemetry-on fused: {per_round} psum/round ({total} total)")
